@@ -1,0 +1,58 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+_DATASETS: dict = {}
+
+
+def dataset(name: str, n: int, seed: int = 0):
+    """Cached synthetic dataset (arxiv-/products-analogue)."""
+    from repro.graph import citation_graph, copurchase_graph
+    key = (name, n, seed)
+    if key not in _DATASETS:
+        if name == "arxiv":
+            _DATASETS[key] = citation_graph(n=n, seed=seed)
+        elif name == "products":
+            _DATASETS[key] = copurchase_graph(n=n, seed=seed)
+        else:
+            raise KeyError(name)
+    return _DATASETS[key]
+
+
+def save_rows(name: str, rows: list[dict]) -> str:
+    from repro.train.metrics import write_csv
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    write_csv(path, rows)
+    return path
+
+
+class StepTimer:
+    """Median wall time per call."""
+
+    def __init__(self):
+        self.times = []
+
+    def measure(self, fn, *args, warmup: int = 1, iters: int = 3):
+        import jax
+        for _ in range(warmup):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            self.times.append(time.perf_counter() - t0)
+        return out
+
+    @property
+    def us_per_call(self) -> float:
+        return 1e6 * sorted(self.times)[len(self.times) // 2]

@@ -1,0 +1,54 @@
+"""Paper Fig. 3 (accuracy vs epoch) + Fig. 5 (accuracy vs floats
+communicated), 16 workers, random partitioning — one training sweep feeds
+both figures.
+
+Policies: full comm, no comm, fixed {2,4,16}, VARCO slopes {3,5,7}.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import dataset, save_rows
+
+
+def policies(epochs: int):
+    from repro.core import FULL_COMM, NO_COMM, fixed, varco
+    return [
+        ("full", FULL_COMM),
+        ("nocomm", NO_COMM),
+        ("fixed2", fixed(2.0)),
+        ("fixed4", fixed(4.0)),
+        ("fixed16", fixed(16.0)),
+        ("varco3", varco(epochs, slope=3)),
+        ("varco5", varco(epochs, slope=5)),
+    ]
+
+
+def main(quick: bool = True) -> dict:
+    from repro.train import train_gnn
+
+    n = 6000 if quick else 20000
+    epochs = 120 if quick else 300
+    q = 16
+    g = dataset("arxiv", n)
+    rows = []
+    summary = {}
+    t0 = time.time()
+    for name, pol in policies(epochs):
+        res = train_gnn(g, q=q, scheme="random", policy=pol, epochs=epochs,
+                        eval_every=10, hidden=64, weight_decay=1e-3, seed=0)
+        h = res.history
+        for i in range(len(h.epoch)):
+            rows.append({"policy": name, **h.row(i)})
+        summary[name] = (h.best_test_acc, h.total_halo_gfloats)
+    save_rows("fig3_fig5_accuracy", rows)
+    best = {k: round(v[0], 4) for k, v in summary.items()}
+    return {"name": "fig3_fig5_accuracy",
+            "us_per_call": 1e6 * (time.time() - t0) / (epochs *
+                                                       len(summary)),
+            "derived": "|".join(f"{k}={v}" for k, v in best.items())}
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,54 @@
+"""Paper Fig. 4 + Tables II/III: accuracy vs number of servers for random
+and METIS-like partitioning; full / no / VARCO communication."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import dataset, save_rows
+
+
+def main(quick: bool = True) -> dict:
+    from repro.core import FULL_COMM, NO_COMM, varco
+    from repro.train import train_gnn
+
+    n = 6000 if quick else 20000
+    epochs = 100 if quick else 300
+    qs = [2, 4, 8, 16] if not quick else [2, 8]
+    rows = []
+    t0 = time.time()
+    runs = 0
+    for scheme in ("random", "metis-like"):
+        for q in qs:
+            for name, pol in [("full", FULL_COMM), ("nocomm", NO_COMM),
+                              ("varco5", varco(epochs, slope=5))]:
+                g = dataset("arxiv", n)
+                res = train_gnn(g, q=q, scheme=scheme, policy=pol,
+                                epochs=epochs, eval_every=epochs // 4,
+                                hidden=64, weight_decay=1e-3, seed=0)
+                h = res.history
+                rows.append({"scheme": scheme, "q": q, "policy": name,
+                             "best_test_acc": round(h.best_test_acc, 4),
+                             "final_test_acc": round(h.final_test_acc, 4),
+                             "gfloats": round(h.total_halo_gfloats, 3)})
+                runs += 1
+    save_rows("fig4_tables23_accuracy_vs_servers", rows)
+
+    # the paper's key reads: (i) varco ~ full for every q and scheme,
+    # (ii) nocomm degrades with q under random partitioning
+    def acc(scheme, q, policy):
+        return next(r["best_test_acc"] for r in rows
+                    if r["scheme"] == scheme and r["q"] == q and
+                    r["policy"] == policy)
+
+    gap16 = acc("random", max(qs), "full") - acc("random", max(qs), "varco5")
+    nc_drop = acc("random", qs[0], "nocomm") - acc("random", max(qs),
+                                                   "nocomm")
+    return {"name": "fig4_accuracy_vs_servers",
+            "us_per_call": 1e6 * (time.time() - t0) / (runs * epochs),
+            "derived": f"varco_gap_q{max(qs)}={gap16:.4f}"
+                       f"|nocomm_drop={nc_drop:.4f}"}
+
+
+if __name__ == "__main__":
+    print(main())

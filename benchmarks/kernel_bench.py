@@ -1,0 +1,72 @@
+"""Kernel microbenches: Pallas kernels vs pure-jnp oracles.
+
+On this CPU container the kernels run in interpret mode (Python) — the
+*correctness* delta is the meaningful number; wall time is reported for the
+jnp reference path, which is what XLA:CPU executes."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import StepTimer, save_rows
+
+
+def main(quick: bool = True) -> dict:
+    from repro.kernels import ops, ref
+    from repro.kernels.varco_pack import block_mask_indices
+
+    rng = np.random.default_rng(0)
+    rows = []
+    t0 = time.time()
+
+    # flash attention
+    b, h, kv, s, d = (1, 4, 2, 512, 64) if quick else (2, 8, 4, 2048, 128)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, kv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, kv, s, d)), jnp.float32)
+    t_ref = StepTimer()
+    refo = t_ref.measure(jax.jit(lambda a, b_, c: ref.mha_reference(
+        a, b_, c, causal=True)), q, k, v)
+    kout = ops.mha(q, k, v, causal=True, interpret=True)
+    err = float(jnp.abs(kout - refo).max())
+    rows.append({"kernel": "flash_attention", "shape": f"{b}x{h}x{s}x{d}",
+                 "ref_us": round(t_ref.us_per_call, 1), "max_err": err})
+
+    # varco pack/unpack round trip
+    n, f = (512, 1024) if quick else (4096, 4096)
+    x = jnp.asarray(rng.normal(0, 1, (n, f)), jnp.float32)
+    kept, inv = block_mask_indices(jax.random.key(0), f // 128, 4.0)
+    t_ref = StepTimer()
+    t_ref.measure(jax.jit(lambda a: ref.unpack_reference(
+        ref.pack_reference(a, kept), inv)), x)
+    xt, _ = ops.compress_roundtrip(jax.random.key(0), x, 4.0, interpret=True)
+    expect = ref.unpack_reference(ref.pack_reference(x, kept), inv)
+    rows.append({"kernel": "varco_pack", "shape": f"{n}x{f}",
+                 "ref_us": round(t_ref.us_per_call, 1),
+                 "max_err": float(jnp.abs(xt - expect).max())})
+
+    # ell spmm
+    ns, nd, kk, ff = (2048, 512, 16, 256) if quick else (16384, 4096, 32, 512)
+    xs = jnp.asarray(rng.normal(0, 1, (ns, ff)), jnp.float32)
+    nbr = jnp.asarray(rng.integers(0, ns, (nd, kk)), jnp.int32)
+    w = jnp.asarray(rng.normal(0, 1, (nd, kk)), jnp.float32)
+    t_ref = StepTimer()
+    refa = t_ref.measure(jax.jit(ref.ell_spmm_reference), xs, nbr, w)
+    agg = ops.aggregate(xs, nbr, w, interpret=True)
+    rows.append({"kernel": "ell_spmm", "shape": f"{ns}->{nd}x{kk}x{ff}",
+                 "ref_us": round(t_ref.us_per_call, 1),
+                 "max_err": float(jnp.abs(agg - refa).max())})
+
+    save_rows("kernel_bench", rows)
+    worst = max(r["max_err"] for r in rows)
+    return {"name": "kernel_bench",
+            "us_per_call": 1e6 * (time.time() - t0) / len(rows),
+            "derived": f"worst_err={worst:.2e}"}
+
+
+if __name__ == "__main__":
+    print(main())

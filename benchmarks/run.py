@@ -1,0 +1,52 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark).
+``--full`` switches to paper-scale settings (bigger graphs, 300 epochs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_partition_stats",
+    "benchmarks.fig3_fig5_accuracy",
+    "benchmarks.fig4_accuracy_vs_servers",
+    "benchmarks.prop1_neighborhood",
+    "benchmarks.transformer_comm",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filter")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        if args.only and not any(s in modname
+                                 for s in args.only.split(",")):
+            continue
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            rec = mod.main(quick=not args.full)
+            print(f"{rec['name']},{rec['us_per_call']:.1f},"
+                  f"{rec['derived']}", flush=True)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{modname},NaN,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

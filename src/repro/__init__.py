@@ -1,0 +1,4 @@
+"""repro — production-grade JAX reproduction of VARCO (Cerviño et al. 2024:
+Distributed Training of Large GNNs with Variable Communication Rates)."""
+
+__version__ = "1.0.0"

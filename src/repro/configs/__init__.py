@@ -1,0 +1,5 @@
+from .base import (ARCH_IDS, ArchConfig, MambaConfig, MoEConfig, all_configs,
+                   get_config)
+
+__all__ = ["ARCH_IDS", "ArchConfig", "MambaConfig", "MoEConfig",
+           "all_configs", "get_config"]

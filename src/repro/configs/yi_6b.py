@@ -1,0 +1,31 @@
+"""yi-6b [dense] — llama-architecture GQA 32H/kv4 [arXiv:2403.04652]."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    family="dense",
+    ref="arXiv:2403.04652",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=5e6,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = ArchConfig(
+    name="yi-smoke",
+    family="dense",
+    ref=CONFIG.ref,
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab_size=512,
+)

@@ -1,0 +1,120 @@
+"""Compressed collectives for ``shard_map`` programs.
+
+These are the on-wire primitives of the distributed runtime: every byte the
+system communicates between workers flows through one of the wrappers below,
+which (i) applies a Definition-1 compressor to the payload *before* the
+collective and (ii) returns the exact number of wire bits charged, so the
+trainer's ledger reproduces the paper's "floating points communicated" axis
+(Fig. 5).
+
+TPU adaptation: the paper's point-to-point sends between adjacent machines
+become dense collectives over a mesh axis (see DESIGN.md §3).  Byte
+accounting nevertheless charges only the *useful* traffic (compressed
+payload × peers), matching how the paper counts communicated floats rather
+than transport-level padding.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .compression import Compressor
+
+Array = jax.Array
+
+
+def _axis_size(axis_name: str) -> int:
+    return lax.axis_size(axis_name)
+
+
+def _per_device_key(key: Array, axis_name: str) -> Array:
+    """Distinct stream per worker, derived from a key shared a priori."""
+    return jax.random.fold_in(key, lax.axis_index(axis_name))
+
+
+def compressed_all_gather(x: Array, axis_name: str, *, compressor: Compressor,
+                          rate: Array, key: Array, axis: int = 0,
+                          tiled: bool = False) -> tuple[Array, Array]:
+    """All-gather of compressed activations (halo / TP activation exchange).
+
+    Each worker compresses its local block with a worker-specific stream of
+    the shared key, then the blocks are gathered.  Every worker's payload
+    crosses the wire to ``Q - 1`` peers.
+
+    Returns ``(gathered, wire_bits)`` where ``wire_bits`` is the *global*
+    bit count for this exchange (identical on all workers).
+    """
+    q = _axis_size(axis_name)
+    x_tilde, bits = compressor(_per_device_key(key, axis_name), x, rate)
+    gathered = lax.all_gather(x_tilde, axis_name, axis=axis, tiled=tiled)
+    wire_bits = lax.psum(bits, axis_name) * (q - 1)
+    return gathered, wire_bits
+
+
+def compressed_psum(x, axis_name: str, *, compressor: Compressor,
+                    rate: Array, key: Array) -> tuple[Array, Array]:
+    """Compressed all-reduce (gradient aggregation over the data axis).
+
+    Each worker compresses its local contribution, then the compressed
+    contributions are summed.  With the unbiased mask compressor this is an
+    unbiased gradient estimator whose variance anneals to zero under a VARCO
+    scheduler.  Ring all-reduce traffic: 2 (Q-1)/Q of the payload per worker.
+
+    ``x`` may be a pytree (e.g. a gradient pytree); a single key is split
+    across leaves.
+    """
+    q = _axis_size(axis_name)
+    leaves, treedef = jax.tree_util.tree_flatten(x)
+    dev_key = _per_device_key(key, axis_name)
+    keys = jax.random.split(dev_key, max(len(leaves), 1))
+    out_leaves = []
+    bits = jnp.zeros((), jnp.float32)
+    for leaf, k in zip(leaves, keys):
+        leaf_t, b = compressor(k, leaf, rate)
+        out_leaves.append(lax.psum(leaf_t, axis_name))
+        bits = bits + b
+    ring_factor = 2.0 * (q - 1) / q
+    wire_bits = lax.psum(bits, axis_name) * ring_factor
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), wire_bits
+
+
+def compressed_pmean(x, axis_name: str, *, compressor: Compressor,
+                     rate: Array, key: Array) -> tuple[Array, Array]:
+    """FedAvg-style parameter/gradient averaging (Algorithm 1 'Server' step)."""
+    q = _axis_size(axis_name)
+    summed, wire_bits = compressed_psum(x, axis_name, compressor=compressor,
+                                        rate=rate, key=key)
+    return jax.tree_util.tree_map(lambda t: t / q, summed), wire_bits
+
+
+def compressed_all_to_all(x: Array, axis_name: str, *, compressor: Compressor,
+                          rate: Array, key: Array, split_axis: int = 0,
+                          concat_axis: int = 0) -> tuple[Array, Array]:
+    """Compressed all-to-all (per-peer halo buffers / MoE dispatch).
+
+    ``x``'s ``split_axis`` must equal the axis size ``Q``; slice ``i`` is the
+    buffer destined for peer ``i``.  The slice a worker keeps for itself is
+    not charged to the wire.
+    """
+    q = _axis_size(axis_name)
+    x_tilde, bits = compressor(_per_device_key(key, axis_name), x, rate)
+    out = lax.all_to_all(x_tilde, axis_name, split_axis=split_axis,
+                         concat_axis=concat_axis, tiled=False)
+    wire_bits = lax.psum(bits, axis_name) * (q - 1) / q
+    return out, wire_bits
+
+
+def uncompressed_bits(x) -> Array:
+    """Bits of a pytree at its native dtypes (full-communication baseline)."""
+    leaves = jax.tree_util.tree_leaves(x)
+    total = 0.0
+    for leaf in leaves:
+        leaf = jnp.asarray(leaf)
+        total += leaf.size * jnp.finfo(leaf.dtype).bits \
+            if jnp.issubdtype(leaf.dtype, jnp.floating) \
+            else leaf.size * jnp.iinfo(leaf.dtype).bits
+    return jnp.asarray(total, jnp.float32)

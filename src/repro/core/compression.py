@@ -1,0 +1,243 @@
+"""Compression / decompression mechanisms (paper Definition 1).
+
+A compressor is a pair ``(g, g_inv)`` parameterised by a compression *ratio*
+``r >= 1``: ``g`` maps a tensor ``x`` to a compressed representation ``z``
+carrying ``size(x) / r`` payload elements, ``g_inv`` reconstructs ``x_tilde``
+with ``E[
+|x_tilde - x|] <= delta`` and ``E[|x_tilde - x|^2] <= eps(r)^2``
+(Definition 1).  ``eps`` is monotone increasing in ``r`` and ``eps(1) = 0``.
+
+The paper's concrete mechanism (Appendix): communicate a uniformly random
+subset of ``n/r`` elements; the decoder — which shares the random key a
+priori — scatters them back and zero-fills the rest.  On TPU we realise the
+identical semantics as a shared-PRNG Bernoulli(1/r) element mask followed by
+a dense pack of kept lanes (see kernels/varco_pack.py for the packing
+kernel).  Because encoder and decoder derive the mask from the same
+``jax.random`` key, no index metadata travels on the wire — exactly the
+paper's "random key generator is shared a priori".
+
+Beyond-paper compressors implementing the same interface:
+
+* ``topk``      — magnitude top-k per row (needs index metadata: accounted).
+* ``int8``      — per-row affine int8 quantisation (r = 4 for f32 payloads).
+* ``randmask_unbiased`` — paper mask rescaled by ``r`` so that
+  ``E[x_tilde] = x`` (delta = 0, first-order lossless).
+
+All compressors are differentiable in ``x`` (straight-through for the index
+selection, exact for the mask multiply), so gradients back-propagate
+"across machines and through the differentiable compression routine"
+(Algorithm 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Compressed representation
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Compressed:
+    """Wire representation of a compressed tensor.
+
+    ``payload`` is what actually crosses the network.  ``meta`` holds
+    side-band tensors (e.g. top-k indices, quantisation scales) that also
+    cross the wire and are charged to the byte ledger.  ``aux`` holds
+    *free* decoder state shared a priori (PRNG-derived masks), charged zero
+    bytes per the paper's shared-key protocol.
+    """
+
+    payload: Array
+    meta: dict
+    aux: dict
+
+    def tree_flatten(self):
+        meta_keys = tuple(sorted(self.meta))
+        aux_keys = tuple(sorted(self.aux))
+        children = (self.payload, tuple(self.meta[k] for k in meta_keys),
+                    tuple(self.aux[k] for k in aux_keys))
+        return children, (meta_keys, aux_keys)
+
+    @classmethod
+    def tree_unflatten(cls, static, children):
+        meta_keys, aux_keys = static
+        payload, meta_vals, aux_vals = children
+        return cls(payload, dict(zip(meta_keys, meta_vals)),
+                   dict(zip(aux_keys, aux_vals)))
+
+    def wire_bits(self) -> Array:
+        """Number of bits that cross the network for this message."""
+        bits = jnp.asarray(0, jnp.float32)
+        for t in (self.payload, *self.meta.values()):
+            t = jnp.asarray(t)
+            bits = bits + jnp.asarray(t.size * jnp.finfo(t.dtype).bits
+                                      if jnp.issubdtype(t.dtype, jnp.floating)
+                                      else t.size * jnp.iinfo(t.dtype).bits,
+                                      jnp.float32)
+        return bits
+
+
+def _nbits(dtype) -> int:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.finfo(dtype).bits
+    return jnp.iinfo(dtype).bits
+
+
+# ---------------------------------------------------------------------------
+# Compressor interface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Definition-1 compression mechanism.
+
+    ``compress(key, x, rate)`` -> ``(x_tilde, wire_bits)`` where ``x_tilde``
+    is the compress->decompress round trip (what the receiving machine sees)
+    and ``wire_bits`` the traffic charged for it.  ``rate`` is a traced
+    scalar so VARCO can anneal it without recompilation.
+    """
+
+    name: str
+    fn: Callable[[Array, Array, Array], tuple[Array, Array]]
+    # expected squared relative error  E||x~ - x||^2 / ||x||^2  as fn of rate
+    eps2: Callable[[Array], Array]
+
+    def __call__(self, key: Array, x: Array, rate: Array) -> tuple[Array, Array]:
+        return self.fn(key, x, rate)
+
+
+# -- paper mechanism: shared-PRNG random element subset ---------------------
+
+
+def _random_mask(key: Array, x: Array, rate: Array, unbiased: bool
+                 ) -> tuple[Array, Array]:
+    """Keep each element independently w.p. 1/rate (paper Appendix).
+
+    ``rate`` may be a traced float >= 1.  rate == 1 keeps everything
+    (lossless, zero compression).  The decoder shares ``key`` a priori, so
+    only the kept payload elements are charged to the wire.
+    """
+    rate = jnp.maximum(jnp.asarray(rate, jnp.float32), 1.0)
+    keep_p = 1.0 / rate
+    mask = jax.random.bernoulli(key, keep_p, x.shape)
+    scale = jnp.where(jnp.asarray(unbiased), rate, 1.0).astype(x.dtype)
+    x_tilde = jnp.where(mask, x * scale, jnp.zeros((), x.dtype))
+    bits = jnp.sum(mask) * _nbits(x.dtype)
+    return x_tilde, jnp.asarray(bits, jnp.float32)
+
+
+def random_mask_compressor(unbiased: bool = False) -> Compressor:
+    name = "randmask_unbiased" if unbiased else "randmask"
+    if unbiased:
+        eps2 = lambda r: jnp.maximum(r - 1.0, 0.0)          # Var of 1/p scaling
+    else:
+        eps2 = lambda r: 1.0 - 1.0 / jnp.maximum(r, 1.0)     # E mask miss
+    return Compressor(name, partial(_random_mask, unbiased=unbiased), eps2)
+
+
+# -- magnitude top-k ---------------------------------------------------------
+
+
+def _topk(key: Array, x: Array, rate: Array) -> tuple[Array, Array]:
+    """Keep the k = ceil(size/rate) largest-magnitude elements (global).
+
+    Index metadata (int32 per kept element) is charged to the wire.  ``rate``
+    must be a *static* python number for top-k (k shapes the computation);
+    VARCO's traced schedule therefore uses the mask compressor, while top-k
+    serves fixed-rate runs.
+    """
+    del key
+    flat = x.reshape(-1)
+    r = float(rate)
+    k = max(int(flat.size / max(r, 1.0)), 1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    x_tilde = jnp.zeros_like(flat).at[idx].set(vals).reshape(x.shape)
+    bits = jnp.asarray(k * (_nbits(x.dtype) + 32), jnp.float32)
+    return x_tilde, bits
+
+
+def topk_compressor() -> Compressor:
+    # per-element squared error of dropping the smallest (1 - 1/r) fraction;
+    # for i.i.d. gaussian entries this is ~ (1 - 1/r)^2 of the energy — we
+    # report the conservative mask bound.
+    return Compressor("topk", _topk, lambda r: 1.0 - 1.0 / jnp.maximum(r, 1.0))
+
+
+# -- int8 affine quantisation ------------------------------------------------
+
+
+def _int8(key: Array, x: Array, rate: Array) -> tuple[Array, Array]:
+    """Per-row symmetric int8 quantisation. Effective rate vs f32 is 4.
+
+    ``rate`` > 4 additionally applies the random mask on top so the
+    mechanism composes to arbitrary ratios (quantise-then-subsample).
+    """
+    orig_shape = x.shape
+    rows = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    amax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(x.dtype) * scale.astype(x.dtype)).reshape(orig_shape)
+    base_bits = jnp.asarray(q.size * 8 + scale.size * 32, jnp.float32)
+    quant_gain = _nbits(x.dtype) / 8.0
+    residual_rate = jnp.maximum(jnp.asarray(rate, jnp.float32) / quant_gain, 1.0)
+    masked, _ = _random_mask(key, deq, residual_rate, unbiased=False)
+    bits = base_bits / jnp.maximum(residual_rate, 1.0)
+    return masked, bits
+
+
+def int8_compressor() -> Compressor:
+    return Compressor(
+        "int8", _int8,
+        lambda r: 1e-4 + (1.0 - 4.0 / jnp.maximum(r, 4.0)))
+
+
+# -- straight-through wrapper ------------------------------------------------
+
+
+def straight_through(compress_fn):
+    """Forward = compressed value, backward = identity.
+
+    The paper back-propagates *through* the compression routine; the mask
+    compressor is already differentiable (gradient masked identically to the
+    forward).  For quantisers the straight-through estimator is standard.
+    """
+
+    def wrapped(key, x, rate):
+        x_tilde, bits = compress_fn(key, x, rate)
+        x_tilde = x + jax.lax.stop_gradient(x_tilde - x)
+        return x_tilde, bits
+
+    return wrapped
+
+
+_REGISTRY: dict[str, Callable[[], Compressor]] = {
+    "randmask": random_mask_compressor,
+    "randmask_unbiased": partial(random_mask_compressor, unbiased=True),
+    "topk": topk_compressor,
+    "int8": int8_compressor,
+}
+
+
+def get_compressor(name: str) -> Compressor:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def available_compressors() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,107 @@
+"""Compression-rate schedulers (paper §IV + Appendix A, eq. (8)).
+
+A scheduler maps a train step ``t`` to a compression ratio ``c(t) >= 1``.
+Proposition 2 only requires the induced compression error to *strictly
+decrease* every step, i.e. ``c`` monotone non-increasing (strictly until it
+hits ``c_min``); no gradient information is needed.
+
+Paper's experiment family (eq. 8, slopes a in {2..7}, c_max=128, c_min=1):
+
+    c(t) = max(c_max - a * (c_max - c_min) * t / T, c_min)
+
+(The paper's eq. (8) prints ``min``; the surrounding text — "strictly
+decreasing", "128 and 1 maximum and minimum" — fixes the intended clamp to
+``max`` toward the floor ``c_min``; we implement the corrected form and note
+the erratum here.)
+
+All schedulers return traced f32 scalars so the rate feeds jit'd train steps
+without recompilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheduler:
+    name: str
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    c_max: float
+    c_min: float
+
+    def __call__(self, step):
+        return jnp.maximum(jnp.asarray(self.fn(jnp.asarray(step, jnp.float32)),
+                                       jnp.float32), self.c_min)
+
+
+def constant(c: float) -> Scheduler:
+    """Fixed compression ratio (paper's 'Fixed Comp Rate' baselines)."""
+    return Scheduler(f"fixed:{c:g}", lambda t: jnp.full((), c, jnp.float32), c, c)
+
+
+def linear(total_steps: int, slope: float = 5.0, c_max: float = 128.0,
+           c_min: float = 1.0) -> Scheduler:
+    """Paper eq. (8): linear decrease with slope multiplier ``a``."""
+
+    def fn(t):
+        c = c_max - slope * (c_max - c_min) * t / total_steps
+        return jnp.clip(c, c_min, c_max)
+
+    return Scheduler(f"linear:a={slope:g}", fn, c_max, c_min)
+
+
+def fixed_step(total_steps: int, decrement: float, c_max: float = 128.0,
+               c_min: float = 1.0) -> Scheduler:
+    """Appendix A 'fixed rate' variant: c_{k+1} = c_k - R."""
+
+    def fn(t):
+        return jnp.clip(c_max - decrement * t, c_min, c_max)
+
+    return Scheduler(f"step:R={decrement:g}", fn, c_max, c_min)
+
+
+def exponential(total_steps: int, c_max: float = 128.0, c_min: float = 1.0
+                ) -> Scheduler:
+    """Appendix A exponential variant: geometric decay c_max -> c_min."""
+    ratio = c_min / c_max
+
+    def fn(t):
+        frac = jnp.clip(t / total_steps, 0.0, 1.0)
+        return c_max * jnp.power(ratio, frac)
+
+    return Scheduler("exp", fn, c_max, c_min)
+
+
+def cosine(total_steps: int, c_max: float = 128.0, c_min: float = 1.0
+           ) -> Scheduler:
+    """Beyond-paper: cosine anneal (smooth endpoints, still monotone)."""
+
+    def fn(t):
+        frac = jnp.clip(t / total_steps, 0.0, 1.0)
+        return c_min + 0.5 * (c_max - c_min) * (1.0 + jnp.cos(math.pi * frac))
+
+    return Scheduler("cosine", fn, c_max, c_min)
+
+
+def parse(spec: str, total_steps: int) -> Scheduler:
+    """Parse CLI specs: 'full' | 'none' | 'fixed:4' | 'linear:5' | 'exp' | 'cosine' | 'step:0.5'."""
+    spec = spec.strip().lower()
+    if spec in ("full", "off", "1"):
+        return constant(1.0)
+    if spec == "exp":
+        return exponential(total_steps)
+    if spec == "cosine":
+        return cosine(total_steps)
+    kind, _, arg = spec.partition(":")
+    if kind == "fixed":
+        return constant(float(arg))
+    if kind == "linear":
+        return linear(total_steps, slope=float(arg) if arg else 5.0)
+    if kind == "step":
+        return fixed_step(total_steps, decrement=float(arg))
+    raise ValueError(f"unknown scheduler spec {spec!r}")

@@ -1,0 +1,143 @@
+"""VARCO communication policy: compressor + scheduler + mode, plus ledger.
+
+This is the user-facing object (``CommPolicy``) threaded through every
+distributed train step.  It owns
+
+* the communication *mode* — ``full`` (paper's Full Comm baseline), ``none``
+  (No Comm baseline: workers never exchange halo activations), ``fixed:<r>``
+  (Fixed Compression baseline) or ``varco:<sched>`` (the paper's method),
+* the Definition-1 compressor realising the rate,
+* a byte ledger accumulated across steps (Fig. 5's x-axis).
+
+``CommPolicy`` is a static (hashable) config; per-step state is just the
+integer step used to query the scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import schedulers
+from .compression import Compressor, get_compressor
+from .schedulers import Scheduler
+
+MODES = ("full", "none", "fixed", "varco")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPolicy:
+    """Static description of the communication scheme for a training run."""
+
+    mode: str = "full"
+    scheduler: Scheduler | None = None
+    compressor_name: str = "randmask"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.mode in ("fixed", "varco") and self.scheduler is None:
+            raise ValueError(f"mode {self.mode!r} requires a scheduler")
+
+    # -- construction --------------------------------------------------------
+
+    @staticmethod
+    def parse(spec: str, total_steps: int, compressor: str = "randmask"
+              ) -> "CommPolicy":
+        """Parse CLI specs.
+
+        ``full`` | ``none`` | ``fixed:<r>`` | ``varco:linear:<a>`` |
+        ``varco:exp`` | ``varco:cosine`` | ``varco:step:<R>``
+        """
+        spec = spec.strip().lower()
+        if spec == "full":
+            return CommPolicy("full")
+        if spec == "none":
+            return CommPolicy("none")
+        kind, _, rest = spec.partition(":")
+        if kind == "fixed":
+            return CommPolicy("fixed", schedulers.constant(float(rest)),
+                              compressor)
+        if kind == "varco":
+            return CommPolicy("varco",
+                              schedulers.parse(rest or "linear:5", total_steps),
+                              compressor)
+        raise ValueError(f"unknown comm spec {spec!r}")
+
+    # -- queries -------------------------------------------------------------
+
+    @property
+    def communicates(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def compresses(self) -> bool:
+        return self.mode in ("fixed", "varco")
+
+    def compressor(self) -> Compressor:
+        return get_compressor(self.compressor_name)
+
+    def rate(self, step) -> jnp.ndarray:
+        """Compression ratio at ``step`` (1.0 for full communication)."""
+        if not self.compresses:
+            return jnp.ones((), jnp.float32)
+        return self.scheduler(step)
+
+    def describe(self) -> str:
+        if self.mode in ("full", "none"):
+            return self.mode
+        return f"{self.mode}({self.scheduler.name},{self.compressor_name})"
+
+
+FULL_COMM = CommPolicy("full")
+NO_COMM = CommPolicy("none")
+
+
+def fixed(rate: float, compressor: str = "randmask") -> CommPolicy:
+    return CommPolicy("fixed", schedulers.constant(rate), compressor)
+
+
+def varco(total_steps: int, slope: float = 5.0, c_max: float = 128.0,
+          c_min: float = 1.0, compressor: str = "randmask") -> CommPolicy:
+    return CommPolicy(
+        "varco",
+        schedulers.linear(total_steps, slope=slope, c_max=c_max, c_min=c_min),
+        compressor)
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CommLedger:
+    """Cumulative wire-traffic counter (floats & bits), a jit-safe pytree."""
+
+    bits: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "CommLedger":
+        return CommLedger(jnp.zeros((), jnp.float32))
+
+    def add_bits(self, bits) -> "CommLedger":
+        return CommLedger(self.bits + bits)
+
+    @property
+    def floats(self) -> jnp.ndarray:
+        """Equivalent f32 floats communicated (paper Fig. 5 unit)."""
+        return self.bits / 32.0
+
+    @property
+    def gigabytes(self) -> jnp.ndarray:
+        return self.bits / 8.0 / 1e9
+
+    def tree_flatten(self):
+        return (self.bits,), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)

@@ -1,0 +1,13 @@
+"""Graph substrate: CSR containers, synthetic datasets, partitioning."""
+
+from .data import GraphData, from_edge_list, normalized_edge_weights
+from .partition import (PartitionedGraph, build_partitioned, edge_cut_stats,
+                        greedy_partition, partition_graph, random_partition)
+from .synthetic import citation_graph, copurchase_graph, load, tiny_graph
+
+__all__ = [
+    "GraphData", "from_edge_list", "normalized_edge_weights",
+    "PartitionedGraph", "build_partitioned", "edge_cut_stats",
+    "greedy_partition", "partition_graph", "random_partition",
+    "citation_graph", "copurchase_graph", "load", "tiny_graph",
+]

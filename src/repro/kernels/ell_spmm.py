@@ -1,0 +1,83 @@
+"""ELLPACK SpMM Pallas TPU kernel — GNN neighbour aggregation.
+
+The GNN hot spot is ``out[i] = Σ_k w[i,k] · x[nbr[i,k]]`` (eq. (2)'s ``S x``
+with degree-padded ELL neighbour lists).  CSR row-gather is replaced by a
+**source-chunked** formulation so arbitrary-size node sets stream through
+VMEM:
+
+  grid (node_tiles, feature_blocks, source_chunks); the kernel holds a
+  ``[sc, bf]`` source-chunk slab of ``x`` in VMEM, gathers the neighbour
+  rows that fall inside the chunk (others masked), and accumulates the
+  weighted sum in a VMEM scratch, writing out on the last chunk.
+
+Every neighbour gather is VMEM-local; HBM traffic is one pass over ``x``
+per node tile.  Validated against ``ref.ell_spmm_reference`` in interpret
+mode over shape sweeps incl. ragged/padded degrees.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ell_kernel(nbr_ref, w_ref, x_ref, out_ref, acc_scr, *,
+                sc: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    nbr = nbr_ref[...]                       # [tn, K] int32 (global ids)
+    w = w_ref[...]                           # [tn, K] f32
+    x = x_ref[...]                           # [sc, bf] source chunk slab
+
+    lo = ci * sc
+    local = nbr - lo
+    in_chunk = (local >= 0) & (local < sc)
+    safe = jnp.where(in_chunk, local, 0)
+    gathered = x[safe]                       # [tn, K, bf] VMEM gather
+    wm = jnp.where(in_chunk, w, 0.0).astype(jnp.float32)
+    acc_scr[...] += jnp.einsum("tk,tkf->tf", wm,
+                               gathered.astype(jnp.float32))
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        out_ref[...] = acc_scr[...].astype(out_ref.dtype)
+
+
+def ell_spmm(x: jax.Array, nbr: jax.Array, w: jax.Array, *,
+             tile_n: int = 128, block_f: int = 128, src_chunk: int = 1024,
+             interpret: bool = False) -> jax.Array:
+    """out[i] = Σ_k w[i,k] x[nbr[i,k]].
+
+    x: [N_src, F]; nbr: [N_dst, K] int32 (pad entries may point anywhere
+    with w == 0); w: [N_dst, K].  Returns [N_dst, F].
+    """
+    n_src, f = x.shape
+    n_dst, k = nbr.shape
+    tn = min(tile_n, n_dst)
+    bf = min(block_f, f)
+    sc = min(src_chunk, n_src)
+    assert n_dst % tn == 0 and f % bf == 0 and n_src % sc == 0
+    n_chunks = n_src // sc
+
+    kernel = functools.partial(_ell_kernel, sc=sc, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_dst // tn, f // bf, n_chunks),
+        in_specs=[
+            pl.BlockSpec((tn, k), lambda i, j, c: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i, j, c: (i, 0)),
+            pl.BlockSpec((sc, bf), lambda i, j, c: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, bf), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_dst, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tn, bf), jnp.float32)],
+        interpret=interpret,
+    )(nbr, w, x)

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run on this
+CPU container (kernel bodies execute in Python) and compile to real Mosaic
+kernels on TPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ell_spmm import ell_spmm
+from .flash_attention import flash_attention
+from .varco_pack import block_mask_indices, varco_pack, varco_unpack
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def mha(q, k, v, *, causal: bool = True, window: int = 0,
+        interpret: bool | None = None):
+    """Flash attention. q [B,H,S,D], k/v [B,KV,S,D]."""
+    it = _default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=it)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def compress_pack(x, block_idx, *, interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return varco_pack(x, block_idx, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def compress_unpack(packed, inv_idx, *, interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return varco_unpack(packed, inv_idx, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("rate", "n_blocks"))
+def compression_indices(key, n_blocks: int, rate: float):
+    return block_mask_indices(key, n_blocks, rate)
+
+
+def compress_roundtrip(key, x, rate: float, *, interpret: bool | None = None):
+    """Full VARCO compress→wire→decompress round trip via the kernels."""
+    n_blocks = x.shape[-1] // 128
+    kept, inv = block_mask_indices(key, n_blocks, rate)
+    packed = compress_pack(x, kept, interpret=interpret)
+    wire_bits = packed.size * jnp.finfo(packed.dtype).bits
+    return compress_unpack(packed, inv, interpret=interpret), wire_bits
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def aggregate(x, nbr, w, *, interpret: bool | None = None):
+    """ELL neighbour aggregation. x [N_src,F], nbr/w [N_dst,K]."""
+    it = _default_interpret() if interpret is None else interpret
+    return ell_spmm(x, nbr, w, interpret=it)
+
+
+# re-exported oracles (benchmarks compare against these)
+mha_reference = ref.mha_reference
+pack_reference = ref.pack_reference
+unpack_reference = ref.unpack_reference
+ell_spmm_reference = ref.ell_spmm_reference
+ssd_reference = ref.ssd_reference

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [B,H,S,D]; k/v: [B,KV,S,D]. Dense masked softmax attention."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def pack_reference(x: jax.Array, block_idx: jax.Array) -> jax.Array:
+    """Gather kept lane-blocks. x [N, F] -> [N, K*LANE]."""
+    n, f = x.shape
+    xb = x.reshape(n, f // LANE, LANE)
+    return xb[:, block_idx].reshape(n, -1)
+
+
+def unpack_reference(packed: jax.Array, inv_idx: jax.Array) -> jax.Array:
+    """Scatter kept blocks; zero dropped. packed [N, K*LANE] -> [N, F]."""
+    n = packed.shape[0]
+    k = packed.shape[1] // LANE
+    nf = inv_idx.shape[0]
+    pb = packed.reshape(n, k, LANE)
+    safe = jnp.maximum(inv_idx, 0)
+    out = pb[:, safe]                              # [N, F/LANE, LANE]
+    out = jnp.where((inv_idx >= 0)[None, :, None], out, 0)
+    return out.reshape(n, nf * LANE)
+
+
+def ell_spmm_reference(x: jax.Array, nbr: jax.Array, w: jax.Array
+                       ) -> jax.Array:
+    """out[i] = sum_k w[i,k] x[nbr[i,k]]."""
+    gathered = x[nbr]                              # [N_dst, K, F]
+    return jnp.einsum("tk,tkf->tf", w.astype(jnp.float32),
+                      gathered.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_reference(x, dt, a_log, b, c, d_skip):
+    """Sequential (non-chunked) SSD recurrence — oracle for ssd_chunked.
+
+    x: [B,T,H,P]  dt: [B,T,H]  a_log: [H]  b,c: [B,T,G,N]  d_skip: [H]
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bg = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cg = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # [B,H,P],[B,H],[B,H,N]x2
+        da = jnp.exp(dtt * a)                     # [B,H]
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhp,bhk->bhpk", dtt[..., None] * xt, bt)
+        y = jnp.einsum("bhpk,bhk->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, init,
+                         (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                          jnp.moveaxis(bg, 1, 0), jnp.moveaxis(cg, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)                    # [B,T,H,P]
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)

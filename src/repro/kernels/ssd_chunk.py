@@ -1,0 +1,99 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+The SSD hot spot (arXiv:2405.21060 §6) is the *intra-chunk quadratic form*:
+for each (batch, chunk, head),
+
+    M[t, s]   = (C_t · B_s) · exp(cum_t − cum_s) · dt_s · 1[s ≤ t]
+    Y_intra   = M @ X                          ([Q, Q] @ [Q, P] — MXU)
+    S_contrib = (exp(cum_end − cum) · dt · B)ᵀ @ X    ([N, Q] @ [Q, P])
+
+This kernel fuses both matmuls and the decay/mask elementwise work over a
+``(B, NC, H)`` grid with ``[Q, N]`` / ``[Q, P]`` VMEM tiles (Q=chunk ≤ 256,
+N=d_state 128, P=head_dim 64 — all MXU-aligned).  The inter-chunk
+recurrence stays a ``lax.scan`` over the per-chunk ``S_contrib`` outputs
+(tiny [H, P, N] state), exactly the split the paper's decomposition calls
+for on TPU.
+
+Validated against the pure-jnp chunk math derived from
+``kernels.ref.ssd_reference`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    cum = cum_ref[0, :, 0].astype(jnp.float32)       # [Q]
+    b = b_ref[0, :, 0, :].astype(jnp.float32)        # [Q, N]
+    c = c_ref[0, :, 0, :].astype(jnp.float32)        # [Q, N]
+    q = x.shape[0]
+
+    # intra-chunk scores with segment decay + causal mask + dt weighting
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    seg = cum[:, None] - cum[None, :]                # cum_t - cum_s
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(s_idx <= t_idx, jnp.exp(seg), 0.0)
+    m = scores * decay * dt[None, :]
+    y_ref[0, :, 0, :] = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    # chunk state contribution: [P, Q] @ [Q, N] (stored as [P, N])
+    decay_to_end = jnp.exp(cum[-1] - cum) * dt       # [Q]
+    bw = b * decay_to_end[:, None]                   # [Q, N]
+    s_ref[0, :, 0, :] = jax.lax.dot_general(
+        x, bw, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(s_ref.dtype)  # [P, N]
+
+
+def ssd_chunk(x: jax.Array, dt: jax.Array, cum: jax.Array, b: jax.Array,
+              c: jax.Array, *, interpret: bool = False
+              ) -> tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD for all (batch, chunk, head) tiles.
+
+    x:   [B, NC, Q, H, P]   (chunked inputs, already dt-free)
+    dt:  [B, NC, Q, H]
+    cum: [B, NC, Q, H]      (within-chunk inclusive cumsum of dt*A)
+    b,c: [B, NC, Q, H, N]   (group-expanded)
+    Returns (y_intra [B,NC,Q,H,P], state_contrib [B,NC,H,P,N]).
+    """
+    bsz, nc, q, h, p = x.shape
+    n = b.shape[-1]
+
+    grid = (bsz * nc, h)
+    xr = x.reshape(bsz * nc, q, h, p)
+    dtr = dt.reshape(bsz * nc, q, h)
+    cumr = cum.reshape(bsz * nc, q, h)
+    br = b.reshape(bsz * nc, q, h, n)
+    cr = c.reshape(bsz * nc, q, h, n)
+
+    y, s = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, hi: (i, 0, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, hi: (i, 0, hi)),
+            pl.BlockSpec((1, q, 1), lambda i, hi: (i, 0, hi)),
+            pl.BlockSpec((1, q, 1, n), lambda i, hi: (i, 0, hi, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, hi: (i, 0, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, hi: (i, 0, hi, 0)),
+            pl.BlockSpec((1, p, 1, n), lambda i, hi: (i, 0, hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz * nc, p, h, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, dtr, cumr, br, cr)
+    y = y.reshape(bsz, nc, q, h, p)
+    s = s.reshape(bsz, nc, p, h, n).transpose(0, 1, 3, 2, 4)  # [B,NC,H,P,N]
+    return y, s

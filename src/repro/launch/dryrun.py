@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+For each combination this builds the full-size model *abstractly*
+(ShapeDtypeStructs only — no allocation), jits the appropriate step
+(train / prefill / decode) with production in/out shardings, compiles it,
+and records:
+
+* ``memory_analysis()``  — per-device HBM: argument/output/temp/peak bytes,
+* ``cost_analysis()``    — HLO FLOPs + bytes accessed,
+* collective traffic    — parsed from the post-SPMD optimized HLO
+  (all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute result sizes × ring factors),
+
+into ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` — the §Roofline
+inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k [--multi-pod] [--out DIR]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, ArchConfig, get_config
+from repro.dist.sharding import (activation_sharding, batch_spec, cache_spec,
+                                 data_axes, param_shardings)
+from repro.launch import analytic
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.shapes import (SHAPES, InputShape, batch_specs,
+                                 long_context_variant)
+from repro.launch.steps import make_decode_step, make_optimizer, \
+    make_train_step
+
+# ---------------------------------------------------------------------------
+# Abstract model construction
+# ---------------------------------------------------------------------------
+
+
+def _eval_shapes(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_dryrun(cfg: ArchConfig, shape: InputShape, mesh,
+                 lr: float = 3e-4):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs w/ shardings)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.transformer import init_lm
+
+    if shape.name == "long_500k":
+        cfg = long_context_variant(cfg)
+
+    params_s = _eval_shapes(lambda: init_lm(jax.random.key(0), cfg))
+    p_shard = param_shardings(params_s, mesh)
+    params_in = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_s, p_shard)
+
+    bspec = NamedSharding(mesh, batch_spec(mesh))
+    batch_s = batch_specs(cfg, shape)
+
+    def shard_batch(s):
+        daxes = data_axes(mesh)
+        dsize = 1
+        for a in daxes:
+            dsize *= mesh.shape[a]
+        # batch dim is dim 0 except positions3 (dim 1)
+        bdim = 1 if s.shape[:1] == (3,) and len(s.shape) == 3 else 0
+        spec = [None] * len(s.shape)
+        if s.shape[bdim] % dsize == 0 and dsize > 1:
+            spec[bdim] = daxes
+        elif len(s.shape) > bdim + 1 and s.shape[bdim + 1] % dsize == 0:
+            spec[bdim + 1] = daxes          # batch=1: shard seq (context par.)
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    batch_in = jax.tree_util.tree_map(shard_batch, batch_s)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg, lr)
+        opt_s = _eval_shapes(opt.init, params_s)
+        o_shard = param_shardings(opt_s, mesh)
+        opt_in = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt_s, o_shard)
+        step = make_train_step(cfg, opt)
+
+        def wrapped(params, opt_state, batch):
+            with activation_sharding(mesh):
+                return step(params, opt_state, batch)
+
+        fn = jax.jit(wrapped,
+                     in_shardings=(p_shard, o_shard,
+                                   jax.tree_util.tree_map(
+                                       lambda s: s.sharding, batch_in)),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        return fn, (params_in, opt_in, batch_in), cfg
+
+    def shard_cache_tree(cache_s):
+        def leaf(s):
+            if len(s.shape) >= 4:   # [nb, B, W, KV, D] attn k/v
+                spec = cache_spec(s.shape, mesh, batch_dim=1,
+                                  seq_dim=2 if len(s.shape) == 5 else None,
+                                  head_dim=3 if len(s.shape) == 5 else None)
+            elif len(s.shape) == 3:  # pos [nb, B, W]
+                spec = cache_spec(s.shape, mesh, batch_dim=1, seq_dim=2)
+            elif len(s.shape) == 0:
+                spec = P()
+            else:
+                spec = cache_spec(s.shape, mesh, batch_dim=1)
+            return NamedSharding(mesh, spec)
+        return jax.tree_util.tree_map(leaf, cache_s)
+
+    if shape.kind == "prefill":
+        from repro.models.transformer import prefill
+
+        def pre_fn(params, batch):
+            with activation_sharding(mesh):
+                return prefill(params, cfg, batch)
+
+        cache_out_s = jax.eval_shape(pre_fn, params_s, batch_s)[1]
+        fn = jax.jit(pre_fn,
+                     in_shardings=(p_shard,
+                                   jax.tree_util.tree_map(
+                                       lambda s: s.sharding, batch_in)),
+                     out_shardings=(None, shard_cache_tree(cache_out_s)))
+        return fn, (params_in, batch_in), cfg
+
+    # decode
+    from repro.models.transformer import init_cache
+    dec = make_decode_step(cfg)
+    cache_s = _eval_shapes(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+    cache_in = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_s, shard_cache_tree(cache_s))
+    # decode batch: 1 token per sequence
+    dec_batch = batch_specs(cfg, shape)
+    dec_batch_in = jax.tree_util.tree_map(shard_batch, dec_batch)
+
+    def dec_fn(params, batch, cache):
+        with activation_sharding(mesh):
+            return dec(params, batch, cache)
+
+    fn = jax.jit(dec_fn,
+                 in_shardings=(p_shard,
+                               jax.tree_util.tree_map(
+                                   lambda s: s.sharding, dec_batch_in),
+                               jax.tree_util.tree_map(
+                                   lambda s: s.sharding, cache_in)),
+                 out_shardings=(None, None,
+                                jax.tree_util.tree_map(
+                                    lambda s: s.sharding, cache_in)),
+                 donate_argnums=(2,))
+    return fn, (params_in, dec_batch_in, cache_in), cfg
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = "experiments/dryrun") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    n_chips = 512 if multi_pod else 256
+
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": n_chips, "kind": shape.kind}
+    t0 = time.time()
+    try:
+        fn, args, cfg_used = build_dryrun(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        rec["cost"] = {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed",
+                                       cost.get("bytes_accessed")),
+            "transcendentals": cost.get("transcendentals"),
+        }
+        hlo = compiled.as_text()
+        rec["hlo_chars"] = len(hlo)
+        # trip-count-aware collective accounting (per device, per step)
+        rec["collectives"] = collective_bytes(hlo)
+        del hlo
+
+        # analytic compute/memory model (XLA cost_analysis counts while
+        # bodies once — see launch/analytic.py; raw values kept above for
+        # cross-checks)
+        est = analytic.estimate(cfg_used, shape, n_chips)
+        rec["analytic"] = {
+            "flops_global": est.flops_global,
+            "hbm_bytes_per_dev": est.hbm_bytes_per_dev,
+            "param_bytes_per_dev": est.param_bytes_per_dev,
+            **est.detail,
+        }
+        coll = rec["collectives"]["bytes"]
+        if cfg_used.activ_dtype == "bfloat16":
+            # CPU-backend f32-upcast artifact; see hlo_analysis
+            coll = rec["collectives"]["bf16_normalized_bytes"]
+        rec["roofline"] = {
+            "compute_s": est.flops_global / n_chips / HW["peak_flops_bf16"],
+            "memory_s": est.hbm_bytes_per_dev / HW["hbm_bw"],
+            "collective_s": coll / HW["ici_bw"],
+        }
+        dom = max(rec["roofline"], key=rec["roofline"].get)
+        rec["roofline"]["dominant"] = dom
+
+        counts = cfg_used.param_counts()
+        tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                       else shape.seq_len)
+        model_flops = (6.0 if shape.kind == "train" else 2.0) \
+            * counts["active"] * tokens
+        rec["model_flops_global"] = model_flops
+        rec["useful_flop_ratio"] = model_flops / est.flops_global
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    for arch in archs:
+        for shp in shapes:
+            rec = run_one(arch, shp, args.multi_pod, args.out)
+            status = "OK " if rec.get("ok") else "FAIL"
+            ro = rec.get("roofline", {})
+            print(f"[{status}] {arch:28s} {shp:12s} {rec['mesh']:10s} "
+                  f"lower={rec.get('lower_s', '-')}s "
+                  f"compile={rec.get('compile_s', '-')}s "
+                  f"peakGB={(rec.get('memory') or {}).get('peak_bytes', 0) and round(rec['memory']['peak_bytes'] / 1e9, 2)} "
+                  f"dom={ro.get('dominant', rec.get('error', ''))}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Trip-count-aware collective accounting from post-SPMD optimized HLO.
+
+``XLA``'s ``cost_analysis()`` (and a naive text scan) counts a ``while``
+body **once**, but ``lax.scan``-over-blocks models execute it
+``n_blocks`` times.  This module parses the optimized HLO into
+computations, resolves each while loop's trip count from its condition
+computation (the loop bound constant), and attributes every collective op
+to its computation's *execution multiplier* (nested loops multiply).
+
+Verified against hand-built HLO in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->",
+                       re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"^\s*%?[\w\.\-]+\s*=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ALT = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    """Split module text into {computation_name: body_text}."""
+    comps: dict[str, str] = {}
+    starts = [(m.start(), m.group(1)) for m in _COMP_HDR.finditer(hlo)]
+    for i, (pos, name) in enumerate(starts):
+        end = starts[i + 1][0] if i + 1 < len(starts) else len(hlo)
+        comps[name] = hlo[pos:end]
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def while_trip_count(cond_text: str) -> int:
+    """Largest integer constant in the loop condition ≈ the trip bound."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|called_computations=\{)%?([\w\.\-]+)")
+
+
+def computation_multipliers(hlo: str) -> dict[str, float]:
+    """Execution count of each computation (entry = 1, loop bodies = trips,
+    nested loops multiply through; plain calls / async-wrapped collectives
+    inherit the caller's multiplier)."""
+    comps = split_computations(hlo)
+    entry = _entry_name(hlo)
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+
+    # iterate to fixpoint (loop nesting depth is small)
+    for _ in range(12):
+        changed = False
+        for name, text in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for w in _WHILE_RE.finditer(text):
+                cond, body = w.group(1), w.group(2)
+                trips = while_trip_count(comps.get(cond, ""))
+                want = m * trips
+                if mult.get(body, 0.0) < want:
+                    mult[body] = want
+                    changed = True
+                if mult.get(cond, 0.0) < want:
+                    mult[cond] = want
+            for c in _CALL_RE.finditer(text):
+                callee = c.group(1)
+                if callee in mult and mult[callee] < m:
+                    mult[callee] = m
+                    changed = True
+        if not changed:
+            break
+    # computations never reached (fusions etc. referenced inline) run with
+    # their caller; give them multiplier 1 so their collectives still count.
+    for name in comps:
+        if mult[name] == 0.0:
+            mult[name] = 1.0
+    return mult
+
+
+def _group_size(text: str, pos: int) -> int:
+    g = _GROUPS_RE.search(text, pos, pos + 4000)
+    if g:
+        return max(len(g.group(1).split(",")), 2)
+    g2 = _GROUPS_ALT.search(text, pos, pos + 4000)
+    if g2:                     # replica_groups=[ngroups,group_size]
+        return max(int(g2.group(2)), 2)
+    return 2
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-device wire bytes per executed step, ring-model factors:
+
+      all-reduce:         2 (g-1)/g · r
+      all-gather:         (g-1)/g · r      (r = gathered result)
+      reduce-scatter:     (g-1) · r        (r = scattered result)
+      all-to-all:         (g-1)/g · r
+      collective-permute: r
+    """
+    comps = split_computations(hlo)
+    mults = computation_multipliers(hlo)
+    per_kind: dict[str, float] = {}
+    per_dtype: dict[str, float] = {}
+    total = 0.0
+    ops = 0
+    for name, text in comps.items():
+        mult = mults.get(name, 1.0)
+        for m in _COLL_RE.finditer(text):
+            result_types, kind = m.group(1), m.group(2)
+            shapes = _SHAPE_RE.findall(result_types)
+            if not shapes:
+                continue
+            # async starts carry (operand, result) tuples: take the largest
+            dt, dims = max(shapes, key=lambda s: _shape_bytes(*s))
+            r = _shape_bytes(dt, dims)
+            g = _group_size(text, m.end())
+            if kind == "all-reduce":
+                b = 2.0 * (g - 1) / g * r
+            elif kind == "all-gather":
+                b = (g - 1) / g * r
+            elif kind == "reduce-scatter":
+                b = (g - 1.0) * r
+            elif kind == "all-to-all":
+                b = (g - 1) / g * r
+            else:
+                b = r
+            per_kind[kind] = per_kind.get(kind, 0.0) + b * mult
+            per_dtype[dt] = per_dtype.get(dt, 0.0) + b * mult
+            total += b * mult
+            ops += 1
+    # XLA:CPU upcasts bf16 dot operands to f32 (convert + replicated f32
+    # collectives); on TPU those payloads stay bf16.  The normalized figure
+    # halves f32 traffic — use it for bf16-configured models.
+    normalized = total - 0.5 * per_dtype.get("f32", 0.0)
+    return {"per_kind": per_kind, "per_dtype": per_dtype, "bytes": total,
+            "bf16_normalized_bytes": normalized, "ops": ops}

@@ -1,0 +1,32 @@
+"""Production meshes (TPU v5e target).
+
+Functions, not module-level constants, so importing never touches jax
+device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; ordinary processes (tests, benches) see the 1 real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_small_mesh(data: int = 2, model: int = 4):
+    """Reduced mesh for in-CI dry-run tests (8 virtual CPU devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_bytes": 16e9,           # capacity
+}

@@ -1,0 +1,93 @@
+"""Assigned input shapes + ``input_specs()`` stand-ins.
+
+The four assigned shapes:
+
+    train_4k     seq 4,096    global_batch 256   (training)
+    prefill_32k  seq 32,768   global_batch 32    (inference prefill)
+    decode_32k   seq 32,768   global_batch 128   (decode: 1 new token, KV=32k)
+    long_500k    seq 524,288  global_batch 1     (long-context decode)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs for every model input
+(weak-type-correct, shardable, zero device allocation) — tokens for LM
+archs, precomputed patch embeddings + M-RoPE ids for the VLM (frontend
+stub), codec token ids for the audio arch.  ``concrete=True`` materialises
+small random arrays instead (smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, concrete: bool = False,
+                batch: int | None = None, seq: int | None = None) -> dict:
+    """Model-input pytree for (cfg, shape): ShapeDtypeStructs or arrays."""
+    b = batch or shape.global_batch
+    s = 1 if shape.kind == "decode" else (seq or shape.seq_len)
+
+    def mk(shp, dtype, maxval=None):
+        if concrete:
+            if jnp.issubdtype(dtype, jnp.integer):
+                return jnp.asarray(
+                    np.random.default_rng(0).integers(0, maxval or 2, shp),
+                    dtype)
+            return jnp.asarray(
+                np.random.default_rng(0).normal(0, 0.02, shp), dtype)
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    specs: dict = {}
+    if cfg.embed_source == "patches":
+        # VLM stub frontend: pre-projected patch embeddings + M-RoPE ids
+        specs["embeds"] = mk((b, s, cfg.d_model), cfg.adtype)
+        specs["labels"] = mk((b, s), jnp.int32, cfg.vocab_size)
+        specs["positions3"] = mk((3, b, s), jnp.int32, max(s, 2))
+        specs["positions"] = mk((b, s), jnp.int32, max(s, 2))
+    else:
+        specs["tokens"] = mk((b, s), jnp.int32, cfg.vocab_size)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, concrete: bool = False,
+                batch: int | None = None, cache_len: int | None = None):
+    """Cache pytree (ShapeDtypeStructs by default) for decode shapes."""
+    from repro.models.transformer import init_cache
+    b = batch or shape.global_batch
+    n = cache_len or shape.seq_len
+    if concrete:
+        return init_cache(cfg, b, n)
+    shapes = jax.eval_shape(lambda: init_cache(cfg, b, n))
+    return shapes
+
+
+def long_context_variant(cfg: ArchConfig, window: int = 8192) -> ArchConfig:
+    """SWA variant used for ``long_500k`` on attention-bearing archs.
+
+    SSM archs pass through unchanged (already O(1) decode); archs with
+    attention layers get a sliding window so the KV cache is bounded —
+    the carve-out that lets dense archs run 524k decode.
+    """
+    if cfg.family == "ssm" or cfg.sliding_window:
+        return cfg
+    return cfg.with_(sliding_window=window)

@@ -1,0 +1,45 @@
+"""Jit-able train / prefill / decode step functions for the assigned archs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import decode_step, lm_loss, prefill
+from repro.train.optim import (Optimizer, adamw, apply_updates,
+                               clip_by_global_norm)
+
+
+def make_optimizer(cfg: ArchConfig, lr: float = 3e-4) -> Optimizer:
+    return adamw(lr, weight_decay=0.1,
+                 moment_dtype=jnp.dtype(cfg.moment_dtype))
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    clip: float = 1.0):
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(params, cfg, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "ce": parts["ce"],
+                   "moe_aux": parts["moe_aux"], "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int | None = None):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, batch, cache):
+        logits, new_cache = decode_step(params, cfg, batch, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+    return serve_step

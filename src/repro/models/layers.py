@@ -1,0 +1,193 @@
+"""Transformer layer primitives shared across the 10 assigned archs.
+
+Attention supports GQA/MQA (n_kv_heads < n_heads), explicit head_dim
+(gemma's 256), qk-RMSNorm (qwen3), RoPE and M-RoPE (qwen2-vl's 3-section
+multimodal rotary), full-causal and sliding-window masks, and a KV cache for
+prefill/decode serving.
+
+Everything is written mask-based over full [S, S] score tiles for the XLA
+path; the Pallas flash-attention kernel (repro.kernels.flash_attention) is
+the TPU hot-spot replacement with identical semantics (validated against
+ref.py in interpret mode).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.modules import rms_norm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: tuple) -> Array:
+    """Qwen2-VL multimodal RoPE [arXiv:2409.12191].
+
+    ``positions3``: [3, B, S] (temporal, height, width) position ids.
+    ``sections``: how many rotary *frequency pairs* each component owns;
+    sums to head_dim // 2.  Text tokens use t == h == w, reducing to RoPE.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                                # [D/2]
+    # pick which position component drives each frequency pair
+    comp = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                      total_repeat_length=d // 2)               # [D/2]
+    pos = positions3.astype(jnp.float32)[comp]                  # [D/2, B, S]
+    angles = jnp.moveaxis(pos, 0, -1) * freqs                   # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-attention-layer cache: keys/values [B, S_cache, KV, D]."""
+    k: Array
+    v: Array
+
+
+def init_attn(key: Array, cfg: ArchConfig) -> dict:
+    d, h, kv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    scale = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h, hd), dt) * scale(d)),
+        "wk": (jax.random.normal(k2, (d, kv, hd), dt) * scale(d)),
+        "wv": (jax.random.normal(k3, (d, kv, hd), dt) * scale(d)),
+        "wo": (jax.random.normal(k4, (h, hd, d), dt) * scale(h * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _attn_mask(q_pos: Array, k_pos: Array, window: int) -> Array:
+    """[.., Sq, Sk] boolean mask: causal, optionally sliding-window."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def sdpa(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """Masked scaled-dot-product attention; q [B,Sq,H,D], k/v [B,Sk,KV,D]."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, sq, kvh, group, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / jnp.sqrt(d).astype(q.dtype)
+    scores = scores.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def attention(params: dict, cfg: ArchConfig, x: Array, positions: Array,
+              cache: Optional[KVCache] = None,
+              cache_index: Optional[Array] = None,
+              positions3: Optional[Array] = None
+              ) -> tuple[Array, Optional[KVCache]]:
+    """Full attention sublayer (projections + rope + sdpa + output).
+
+    Train/prefill: ``cache=None`` → causal over the sequence, returns the
+    fresh KVCache.  Decode: ``cache`` holds S_cache slots, ``cache_index``
+    is the write position; x has S=1.
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections:
+        p3 = positions3 if positions3 is not None else \
+            jnp.broadcast_to(positions[None], (3, *positions.shape))
+        q = apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        mask = _attn_mask(positions, positions, cfg.sliding_window)
+        out = sdpa(q, k, v, mask)
+        new_cache = KVCache(k, v)
+    else:
+        # decode: write the new kv at cache_index, attend over the cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_index, axis=1)
+        s_cache = k_cache.shape[1]
+        k_pos = jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+        valid = k_pos <= cache_index
+        mask = _attn_mask(positions, jnp.broadcast_to(k_pos, (b, s_cache)),
+                          cfg.sliding_window) & valid[:, None, :]
+        out = sdpa(q, k_cache, v_cache, mask)
+        new_cache = KVCache(k_cache, v_cache)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: Array, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d), dtype) * s_out,
+    }
+
+
+def mlp(params: dict, x: Array, kind: str) -> Array:
+    gate = x @ params["w_gate"]
+    act = jax.nn.gelu(gate, approximate=True) if kind == "geglu" \
+        else jax.nn.silu(gate)
+    return (act * (x @ params["w_up"])) @ params["w_down"]

@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+TPU adaptation of the chunked SSD algorithm: the sequence is split into
+chunks of ``Q`` tokens; intra-chunk terms use the quadratic (attention-like)
+form — MXU-friendly [Q, Q] tiles — while inter-chunk terms carry a recurrent
+state [H, P, N] across chunks via ``lax.scan``.  This is exactly the
+decomposition the paper derives; on TPU the chunk matmuls map to the MXU and
+the scan stays in VMEM-resident registers.
+
+Decode maintains (conv_state, ssm_state) and costs O(1) per token — the
+reason mamba2-130m (and jamba's mamba layers) run the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.modules import rms_norm
+
+Array = jax.Array
+
+
+class MambaCache(NamedTuple):
+    conv: Array   # [B, d_conv-1, di + 2*G*N]
+    ssm: Array    # [B, H, P, N]
+
+
+def init_mamba(key: Array, cfg: ArchConfig) -> dict:
+    mc = cfg.mamba
+    d, dt_ = cfg.d_model, cfg.pdtype
+    di = mc.d_inner(d)
+    h = mc.n_heads(d)
+    conv_dim = di + 2 * mc.n_groups * mc.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d)
+    return {
+        # fused input projection: [z, xBC, dt]
+        "in_proj": jax.random.normal(
+            k1, (d, 2 * di + 2 * mc.n_groups * mc.d_state + h), dt_) * s_in,
+        "conv_w": jax.random.normal(k2, (mc.d_conv, conv_dim), dt_) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dt_),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+                   .astype(dt_),
+        "D": jnp.ones((h,), dt_),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (h,), jnp.float32) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+        )).astype(dt_),
+        "norm": jnp.zeros((di,), dt_),
+        "out_proj": jax.random.normal(k4, (di, d), dt_) / jnp.sqrt(di),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: Array):
+    mc = cfg.mamba
+    di = mc.d_inner(cfg.d_model)
+    gn = mc.n_groups * mc.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time. xbc: [B, T, C], w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                d_skip: Array, chunk: int,
+                initial_state: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: [B, T, H, P]  dt: [B, T, H]  a_log: [H]
+    b, c: [B, T, G, N]  d_skip: [H]
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # [H] negative
+    dt_f = dt.astype(jnp.float32)
+    dta = dt_f * a                                              # [B, T, H]
+
+    # reshape to chunks
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt_f.reshape(bsz, nc, chunk, h)
+    dtac = dta.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+
+    cum = jnp.cumsum(dtac, axis=2)                              # [B,NC,Q,H]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,NC,Q,Q,H]
+    q_idx = jnp.arange(chunk)
+    causal = q_idx[:, None] >= q_idx[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk (quadratic form): scores [B,NC,H,Q,Q]
+    bg = jnp.repeat(bc, rep, axis=3)                            # [B,NC,Q,H,N]
+    cg = jnp.repeat(cc, rep, axis=3)
+    scores = jnp.einsum("bnqhk,bnshk->bnqsh", cg.astype(jnp.float32),
+                        bg.astype(jnp.float32))
+    m = scores * decay * dtc[:, :, None, :, :]                  # [B,NC,Q,S,H]
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", m,
+                         xc.astype(jnp.float32))
+
+    # chunk-final states: S_c = sum_s exp(cum_end - cum_s) dt_s B_s x_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # [B,NC,Q,H]
+    state_contrib = jnp.einsum(
+        "bnqh,bnqhk,bnqhp->bnhpk",
+        decay_to_end * dtc, bg.astype(jnp.float32),
+        xc.astype(jnp.float32))                                 # [B,NC,H,P,N]
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [B,NC,H]
+
+    def scan_fn(state, inp):
+        contrib, cdecay = inp                                   # [B,H,P,N],[B,H]
+        new_state = state * cdecay[:, :, None, None] + contrib
+        return new_state, state                                  # emit PREV
+
+    init = initial_state.astype(jnp.float32) if initial_state is not None \
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(state_contrib, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # [B,NC,H,P,N]
+
+    # inter-chunk: y_inter[t] = exp(cum_t) * C_t · state_prev
+    y_inter = jnp.einsum("bnqhk,bnhpk->bnqhp",
+                         cg.astype(jnp.float32) *
+                         jnp.exp(cum)[..., None],
+                         prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, t, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * \
+        x.astype(jnp.float32)
+    return y.astype(x.dtype), final_state
+
+
+def mamba_layer(params: dict, cfg: ArchConfig, x: Array,
+                cache: MambaCache | None = None
+                ) -> tuple[Array, MambaCache]:
+    """Full mamba2 block. Train/prefill: cache=None. Decode: S==1."""
+    mc = cfg.mamba
+    bsz, t, _ = x.shape
+    di = mc.d_inner(cfg.d_model)
+    h = mc.n_heads(cfg.d_model)
+    g, n, p = mc.n_groups, mc.d_state, mc.head_dim
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    if cache is None:
+        xbc_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        conv_state = xbc[:, -(mc.d_conv - 1):, :] if t >= mc.d_conv - 1 else \
+            jnp.pad(xbc, ((0, 0), (mc.d_conv - 1 - t, 0), (0, 0)))
+        xs, bs, cs = jnp.split(xbc_conv, [di, di + g * n], axis=-1)
+        dt_act = jax.nn.softplus(dt.astype(jnp.float32) +
+                                 params["dt_bias"].astype(jnp.float32))
+        y, final_state = ssd_chunked(
+            xs.reshape(bsz, t, h, p), dt_act, params["A_log"],
+            bs.reshape(bsz, t, g, n), cs.reshape(bsz, t, g, n),
+            params["D"], min(mc.chunk, t))
+        new_cache = MambaCache(conv_state.astype(x.dtype),
+                               final_state.astype(jnp.float32))
+    else:
+        # O(1) decode step
+        conv_in = jnp.concatenate([cache.conv, xbc], axis=1)    # [B, K, C]
+        conv_out = jnp.einsum("bkc,kc->bc", conv_in,
+                              params["conv_w"]) + params["conv_b"]
+        xbc_conv = jax.nn.silu(conv_out)[:, None, :]
+        xs, bs, cs = jnp.split(xbc_conv, [di, di + g * n], axis=-1)
+        dt_act = jax.nn.softplus(dt.astype(jnp.float32) +
+                                 params["dt_bias"].astype(jnp.float32))
+        da = jnp.exp(dt_act[:, 0, :] *
+                     -jnp.exp(params["A_log"].astype(jnp.float32)))  # [B,H]
+        xh = xs.reshape(bsz, h, p).astype(jnp.float32)
+        bh = jnp.repeat(bs.reshape(bsz, g, n), h // g, axis=1)
+        ch = jnp.repeat(cs.reshape(bsz, g, n), h // g, axis=1)
+        dtx = dt_act[:, 0, :, None] * xh                        # [B,H,P]
+        new_ssm = cache.ssm * da[:, :, None, None] + \
+            jnp.einsum("bhp,bhk->bhpk", dtx, bh.astype(jnp.float32))
+        yh = jnp.einsum("bhpk,bhk->bhp", new_ssm,
+                        ch.astype(jnp.float32))
+        yh = yh + params["D"].astype(jnp.float32)[None, :, None] * xh
+        y = yh.reshape(bsz, 1, h, p).astype(x.dtype)
+        new_cache = MambaCache(conv_in[:, 1:, :].astype(cache.conv.dtype),
+                               new_ssm)
+
+    # gated RMSNorm + output projection
+    y = y.reshape(bsz, t, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return (y @ params["out_proj"]).astype(x.dtype), new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> MambaCache:
+    mc = cfg.mamba
+    di = mc.d_inner(cfg.d_model)
+    h = mc.n_heads(cfg.d_model)
+    conv_dim = di + 2 * mc.n_groups * mc.d_state
+    return MambaCache(
+        conv=jnp.zeros((batch, mc.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, h, mc.head_dim, mc.d_state), jnp.float32))

@@ -1,0 +1,463 @@
+"""Unified decoder covering all 10 assigned architectures.
+
+A model is ``n_blocks`` repetitions of a *pattern* (a tuple of layer kinds,
+e.g. ``("attn",)`` for dense LMs or ``7×mamba + 1×attn`` for jamba), scanned
+with ``lax.scan`` so the HLO stays block-sized regardless of depth, with
+optional per-block remat (only block-boundary activations live across the
+backward pass).
+
+Three entry points:
+
+* ``lm_loss``     — training forward + next-token CE (+ MoE aux loss).
+* ``prefill``     — forward returning logits + a populated ``Cache``.
+* ``decode_step`` — one-token serve step against a Cache (O(1) for SSM
+  layers; ring-buffer sliding-window or full causal for attention).
+
+Attention uses memory-bounded chunked (flash-style, online-softmax) SDPA
+for long sequences — see ``chunked_sdpa`` — so the 32k prefill lowers
+without materialising [S, S] score matrices.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import maybe_shard
+from repro.models import layers as L
+from repro.models.mamba2 import (MambaCache, init_mamba, init_mamba_cache,
+                                 mamba_layer)
+from repro.models.moe import init_moe, moe_ffn
+from repro.nn.modules import rms_norm, softmax_cross_entropy
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention for long sequences
+# ---------------------------------------------------------------------------
+
+
+def chunked_sdpa(q: Array, k: Array, v: Array, window: int,
+                 q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
+    """Online-softmax causal attention; peak memory O(q_chunk × kv_chunk).
+
+    q: [B, S, H, D], k/v: [B, S, KV, D] (same length, causal, optional
+    sliding window).  Equivalent to ``L.sdpa`` with a causal/window mask.
+
+    Sharding: all tensors keep a *flat* query-head axis constrained to
+    ``model`` — splitting H into (kv, group) axes defeats GSPMD head
+    sharding and made it all-gather every score tile (EXPERIMENTS.md §Perf
+    iteration 6).  GQA is realised by repeating the per-chunk KV slab to H
+    inside the scan body (67 MB-scale, shard-local).
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    nq = s // q_chunk
+    nk = s // kv_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    q = maybe_shard(q, ("pod", "data"), None, "model", None)
+    qc = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 3, 2)
+    qc = maybe_shard(qc, ("pod", "data"), None, "model", None, None)
+    kc = k.reshape(b, nk, kv_chunk, kvh, d)
+    vc = v.reshape(b, nk, kv_chunk, kvh, d)
+
+    def q_block(qi, q_blk):                           # q_blk [B, H, Qc, D]
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        # re-assert head sharding inside the map body — constraints outside
+        # lax.map/scan don't reach the body computation
+        q_blk = maybe_shard(q_blk, ("pod", "data"), "model", None, None)
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            kj, k_blk, v_blk = inp                    # [B, Kc, KV, D]
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            # per-chunk GQA expansion; H/model-sharded via the scores hint
+            krep = jnp.repeat(k_blk, group, axis=2)   # [B, Kc, H, D]
+            vrep = jnp.repeat(v_blk, group, axis=2)
+            krep = maybe_shard(krep, ("pod", "data"), None, "model", None)
+            vrep = maybe_shard(vrep, ("pod", "data"), None, "model", None)
+            scores = jnp.einsum("bhqd,bshd->bhqs", q_blk,
+                                krep).astype(jnp.float32) * scale
+            scores = maybe_shard(scores, ("pod", "data"), "model", None,
+                                 None)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+            scores = jnp.where(mask[None, None], scores,
+                               jnp.finfo(jnp.float32).min)
+            m_new = jnp.maximum(m_run, scores.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(q.dtype), vrep
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, q_chunk), jnp.finfo(jnp.float32).min)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m_f, l_f, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l_f, 1e-20)[..., None]
+        return out.astype(q.dtype)                    # [B, H, Qc, D]
+
+    outs = lax.map(lambda args: q_block(*args),
+                   (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    # outs: [nq, B, H, Qc, D] -> [B, S, H, D]
+    out = jnp.moveaxis(outs, 0, 2)                    # [B, H, nq, Qc, D]
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+class AttnCache(NamedTuple):
+    """Ring-buffer KV cache: ``pos`` holds absolute positions (-1 empty)."""
+    k: Array        # [B, W, KV, D]
+    v: Array        # [B, W, KV, D]
+    pos: Array      # [B, W] int32
+
+
+class Cache(NamedTuple):
+    """Per-pattern-position caches, each stacked over n_blocks."""
+    layers: tuple   # tuple over pattern idx of AttnCache | MambaCache
+    index: Array    # scalar int32: number of tokens already in cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> Cache:
+    dtype = dtype or cfg.adtype
+    nb = cfg.n_blocks
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    per = []
+    for kind in cfg.pattern:
+        if kind == "attn":
+            per.append(AttnCache(
+                k=jnp.zeros((nb, batch, w, kv, hd), dtype),
+                v=jnp.zeros((nb, batch, w, kv, hd), dtype),
+                pos=jnp.full((nb, batch, w), -1, jnp.int32)))
+        else:
+            mc = init_mamba_cache(cfg, batch, dtype)
+            per.append(MambaCache(
+                conv=jnp.broadcast_to(mc.conv, (nb,) + mc.conv.shape),
+                ssm=jnp.broadcast_to(mc.ssm, (nb,) + mc.ssm.shape)))
+    return Cache(layers=tuple(per), index=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key: Array, cfg: ArchConfig) -> dict:
+    """One pattern-period of layers."""
+    block = {}
+    for pi, kind in enumerate(cfg.pattern):
+        key, k_mix, k_ffn = jax.random.split(key, 3)
+        lp: dict = {"norm1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+                    "norm2": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+        if kind == "attn":
+            lp["attn"] = L.init_attn(k_mix, cfg)
+        else:
+            lp["mamba"] = init_mamba(k_mix, cfg)
+        if cfg.layer_uses_moe(pi):
+            lp["moe"] = init_moe(k_ffn, cfg)
+        elif cfg.d_ff > 0:
+            lp["mlp"] = L.init_mlp(k_ffn, cfg.d_model, cfg.d_ff, cfg.pdtype)
+        else:
+            del lp["norm2"]     # mamba2-style blocks: mixer only, no FFN
+        block[f"p{pi}_{kind}"] = lp
+    return block
+
+
+def init_lm(key: Array, cfg: ArchConfig) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": jax.random.normal(
+            k_embed, (cfg.vocab_size, cfg.d_model), cfg.pdtype) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+            jax.random.split(k_blocks, cfg.n_blocks)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.pdtype) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _mixer(lp: dict, cfg: ArchConfig, pi: int, kind: str, h: Array,
+           positions: Array, cache_layer, cache_index,
+           positions3) -> tuple[Array, object]:
+    """Apply the token mixer (attention or mamba) for one layer."""
+    if kind == "attn":
+        if cache_layer is None:
+            s = h.shape[1]
+            use_chunked = s >= 2048 and s % 1024 == 0 and \
+                positions3 is None and not cfg.mrope_sections
+            if use_chunked:
+                q, k, v, _ = _attn_qkv(lp["attn"], cfg, h, positions)
+                # after sequence parallelism, k/v inherit S/model sharding;
+                # left that way, every kv-chunk slice in the attention loop
+                # re-gathers over model (observed 17 GB/layer on yi).
+                # Materialise them ONCE per layer: S unsharded, heads on
+                # model when they divide (else replicated — KV slabs are
+                # ~67 MB).  EXPERIMENTS.md §Perf iteration 8.
+                q = maybe_shard(q, ("pod", "data"), None, "model", None)
+                k = maybe_shard(k, ("pod", "data"), None, "model", None)
+                v = maybe_shard(v, ("pod", "data"), None, "model", None)
+                out = chunked_sdpa(q, k, v, cfg.sliding_window)
+                y = jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+                return y.astype(h.dtype), AttnCache(
+                    k.astype(cfg.adtype), v.astype(cfg.adtype),
+                    jnp.broadcast_to(positions, (h.shape[0], s)))
+            y, kvc = L.attention(lp["attn"], cfg, h, positions,
+                                 positions3=positions3)
+            return y, AttnCache(kvc.k.astype(cfg.adtype),
+                                kvc.v.astype(cfg.adtype),
+                                jnp.broadcast_to(positions,
+                                                 (h.shape[0], h.shape[1])))
+        y, new = _attn_decode(lp["attn"], cfg, h, positions, cache_layer,
+                              cache_index, positions3)
+        return y, new
+    # mamba
+    y, new = mamba_layer(lp["mamba"], cfg, h,
+                         cache=cache_layer)
+    return y, new
+
+
+def _attn_qkv(params, cfg: ArchConfig, x: Array, positions: Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v, None
+
+
+def _attn_decode(params, cfg: ArchConfig, x: Array, positions: Array,
+                 cache: AttnCache, cache_index: Array, positions3):
+    """One-token decode against a (possibly ring-buffer) KV cache."""
+    b, s, _ = x.shape
+    assert s == 1
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections:
+        p3 = positions3 if positions3 is not None else \
+            jnp.broadcast_to(positions[None], (3, *positions.shape))
+        q = L.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    w = cache.k.shape[1]
+    slot = jnp.mod(cache_index, w)
+    k_c = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                          slot, axis=1)
+    v_c = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                          slot, axis=1)
+    pos_c = lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.broadcast_to(positions, (b, 1)).astype(jnp.int32),
+        slot, axis=1)
+
+    q_pos = positions[:, :1]                                   # [B, 1]
+    valid = (pos_c >= 0) & (pos_c <= q_pos)
+    if cfg.sliding_window:
+        valid &= pos_c > (q_pos - cfg.sliding_window)
+    out = L.sdpa(q, k_c, v_c, valid[:, None, :])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y.astype(x.dtype), AttnCache(k_c, v_c, pos_c)
+
+
+def _apply_block(block: dict, cfg: ArchConfig, h: Array, positions: Array,
+                 block_cache: Optional[tuple], cache_index,
+                 positions3) -> tuple[Array, tuple, Array]:
+    """One pattern period: pre-norm mixer + pre-norm FFN per layer."""
+    new_caches = []
+    aux = jnp.zeros((), jnp.float32)
+    decode = h.shape[1] == 1
+    for pi, kind in enumerate(cfg.pattern):
+        lp = block[f"p{pi}_{kind}"]
+        cl = block_cache[pi] if block_cache is not None else None
+        # sequence parallelism (Korthikanti et al.): between layers the
+        # residual stream is sharded over `model` on the SEQUENCE dim, so
+        # each TP layer costs all-gather(in) + reduce-scatter(out) instead
+        # of all-gather + all-reduce (EXPERIMENTS.md §Perf iteration 5).
+        # decode steps (S=1) keep the d-sharded layout.
+        if decode:
+            h = maybe_shard(h, ("pod", "data"), None, "model")
+        else:
+            h = maybe_shard(h, ("pod", "data"), "model", None)
+        mixed, new_c = _mixer(lp, cfg, pi, kind, rms_norm(h, lp["norm1"]),
+                              positions, cl, cache_index, positions3)
+        h = h + mixed
+        if cfg.layer_uses_moe(pi):
+            ffn_out, a = moe_ffn(lp["moe"], cfg, rms_norm(h, lp["norm2"]))
+            aux = aux + a
+            h = h + ffn_out
+        elif cfg.d_ff > 0:
+            h = h + L.mlp(lp["mlp"], rms_norm(h, lp["norm2"]), cfg.mlp)
+        new_caches.append(new_c)
+    return h, tuple(new_caches), aux
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ArchConfig, batch: dict) -> tuple[Array, Array]:
+    if "embeds" in batch:                       # vlm / stubbed frontend
+        x = batch["embeds"].astype(cfg.adtype)
+    else:
+        x = params["embed"][batch["tokens"]].astype(cfg.adtype)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions
+
+
+def _lm_head(params, cfg: ArchConfig, h: Array) -> Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T.astype(h.dtype)
+    return h @ params["lm_head"].astype(h.dtype)
+
+
+def forward_train(params, cfg: ArchConfig, batch: dict
+                  ) -> tuple[Array, Array]:
+    """Training forward: scan over blocks, no cache emission.
+
+    Returns (hidden [B,S,d], moe_aux).  With ``cfg.remat`` each block is
+    checkpointed — only block-boundary activations survive the forward.
+    """
+    x, positions = _embed_in(params, cfg, batch)
+    positions3 = batch.get("positions3")
+    x = maybe_shard(x, ("pod", "data"), "model", None)   # sequence parallel
+
+    def block_fn(block, h):
+        h, _, aux = _apply_block(block, cfg, h, positions, None, None,
+                                 positions3)
+        return h, aux
+
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+
+    def scan_body(h, block):
+        h, aux = block_fn(block, h)
+        return h, aux
+
+    h, auxs = lax.scan(scan_body, x, params["blocks"])
+    return h, jnp.sum(auxs)
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict) -> tuple[Array, dict]:
+    """Next-token CE + MoE aux. ``batch``: tokens [B,S] (+ embeds/labels)."""
+    h, aux = forward_train(params, cfg, batch)
+    logits = _lm_head(params, cfg, h).astype(jnp.float32)
+    labels = batch.get("labels", batch.get("tokens"))
+    ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        loss = jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(ce)
+    return loss + aux, {"ce": loss, "moe_aux": aux}
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int | None = None
+            ) -> tuple[Array, Cache]:
+    """Process a full prompt; returns last-position logits + a Cache with
+    ``max_len`` slots (ring-truncated to the sliding window if set).
+
+    Note: with a sliding window ``w``, prompt length must satisfy
+    ``s % w == 0 or s <= w`` so the ring-buffer slot arithmetic stays
+    aligned for subsequent decode steps.
+    """
+    x, positions = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    max_len = max_len or s
+    positions3 = batch.get("positions3")
+    x = maybe_shard(x, ("pod", "data"), "model", None)   # sequence parallel
+
+    def scan_body(h, block):
+        h, new_c, aux = _apply_block(block, cfg, h, positions, None, None,
+                                     positions3)
+        return h, new_c
+
+    h, layer_caches = lax.scan(scan_body, x, params["blocks"])
+    logits = _lm_head(params, cfg, h[:, -1:])
+
+    # size the per-layer KV caches to max_len (or the SWA window)
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.sliding_window and not (s <= w or s % w == 0):
+        raise ValueError(f"prefill length {s} incompatible with window {w}")
+    padded = []
+    for pi, kind in enumerate(cfg.pattern):
+        lc = layer_caches[pi]
+        if kind == "attn":
+            pad = w - lc.k.shape[2]
+            if pad > 0:
+                z = lambda a: jnp.pad(
+                    a, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 3))
+                padded.append(AttnCache(
+                    z(lc.k), z(lc.v),
+                    jnp.pad(lc.pos, ((0, 0), (0, 0), (0, pad)),
+                            constant_values=-1)))
+            else:  # keep the last w entries (SWA ring layout)
+                padded.append(AttnCache(lc.k[:, :, -w:], lc.v[:, :, -w:],
+                                        lc.pos[:, :, -w:]))
+        else:
+            padded.append(lc)
+    return logits[:, 0], Cache(layers=tuple(padded),
+                               index=jnp.full((), s, jnp.int32))
+
+
+def decode_step(params, cfg: ArchConfig, batch: dict, cache: Cache
+                ) -> tuple[Array, Cache]:
+    """One-token serve step: batch['tokens'] [B,1] (or embeds [B,1,d])."""
+    b = batch["tokens"].shape[0] if "tokens" in batch else \
+        batch["embeds"].shape[0]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(cache.index[None, None],
+                                     (b, 1)).astype(jnp.int32)
+        batch = dict(batch, positions=positions)
+    x, positions = _embed_in(params, cfg, batch)
+    positions3 = batch.get("positions3")
+
+    def scan_body(h, inp):
+        block, bc = inp
+        h, new_c, _aux = _apply_block(block, cfg, h, positions, bc,
+                                      cache.index, positions3)
+        return h, new_c
+
+    h, new_layers = lax.scan(scan_body, x, (params["blocks"], cache.layers))
+    logits = _lm_head(params, cfg, h)
+    return logits[:, 0], Cache(layers=new_layers, index=cache.index + 1)

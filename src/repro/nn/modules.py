@@ -1,0 +1,57 @@
+"""Minimal functional NN building blocks (param pytrees + pure apply fns).
+
+No flax/haiku on this box; every model in the framework is a pair of
+``init(key, ...) -> params`` and ``apply(params, ...) -> out`` functions over
+plain dict pytrees.  Initialisers follow the conventions of the respective
+source papers (LeCun/He fan-in scaling).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key: Array, d_in: int, d_out: int, *, bias: bool = True,
+               scale: float = 1.0, dtype=jnp.float32) -> dict:
+    std = scale / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: dict, x: Array) -> Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def layer_norm(x: Array, eps: float = 1e-5) -> Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    # compute in f32 for stability regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: Array, labels: Array) -> Array:
+    """Per-example CE; labels int. Stable log-softmax."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return logz - gold
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,17 @@
+from .optim import (adamw, apply_updates, clip_by_global_norm, constant_lr,
+                    cosine_lr, global_norm, linear_decay_lr, sgd)
+
+__all__ = [
+    "adamw", "apply_updates", "clip_by_global_norm", "constant_lr",
+    "cosine_lr", "global_norm", "linear_decay_lr", "sgd",
+    "History", "TrainResult", "train_gnn",
+]
+
+
+def __getattr__(name):
+    # lazy: trainer imports repro.dist.gnn_parallel which imports
+    # repro.train.optim — eager import here would be circular.
+    if name in ("History", "TrainResult", "train_gnn"):
+        from . import trainer
+        return getattr(trainer, name)
+    raise AttributeError(name)

@@ -1,0 +1,72 @@
+"""Checkpointing: msgpack-serialised param/opt pytrees (no orbax offline).
+
+Layout-stable: leaves are stored as (dtype, shape, raw bytes) in tree-flatten
+order with the treedef structure recorded as a string for validation.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> dict:
+    a = np.asarray(x)
+    if a.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(a.shape),
+                "data": a.view(np.uint16).tobytes()}
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _decode_leaf(d) -> jnp.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        a = np.frombuffer(d["data"], np.uint16).reshape(shape)
+        return jnp.asarray(a.view(jnp.bfloat16))
+    return jnp.asarray(np.frombuffer(d["data"],
+                                     np.dtype(d["dtype"])).reshape(shape))
+
+
+def save(path: str, tree, extra: dict | None = None) -> None:
+    """Atomically write ``tree`` (any pytree of arrays) to ``path``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_encode_leaf(l) for l in leaves],
+        "extra": extra or {},
+    }
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".ckpt.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (validates treedef + shapes)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if payload["treedef"] != str(treedef):
+        raise ValueError("checkpoint treedef mismatch")
+    if len(payload["leaves"]) != len(leaves):
+        raise ValueError("checkpoint leaf count mismatch")
+    out = []
+    for stored, ref in zip(payload["leaves"], leaves):
+        arr = _decode_leaf(stored)
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), payload["extra"]

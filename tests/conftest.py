@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src/ onto the path so `import repro` works without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — smoke
+# tests and benches must see the single real CPU device.  Multi-device
+# behaviour is exercised via subprocess tests (test_multidevice.py) which
+# set the flag in a fresh interpreter.

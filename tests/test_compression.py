@@ -1,0 +1,103 @@
+"""Definition-1 compressor properties (paper §III-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import available_compressors, get_compressor
+
+
+@pytest.mark.parametrize("name", available_compressors())
+def test_rate_one_lossless_mask(name):
+    """r = 1 must communicate everything (mask compressors exactly)."""
+    c = get_compressor(name)
+    x = jax.random.normal(jax.random.key(0), (64, 128))
+    xt, bits = c(jax.random.key(1), x, 1.0)
+    if name in ("randmask", "randmask_unbiased", "topk"):
+        np.testing.assert_allclose(np.asarray(xt), np.asarray(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rate", [2.0, 4.0, 16.0, 128.0])
+def test_mask_moment_bound(rate):
+    """E||x~ - x||^2 <= eps(r)^2 ||x||^2 (Definition 1), statistically."""
+    c = get_compressor("randmask")
+    x = jax.random.normal(jax.random.key(0), (512, 128))
+    errs, kept = [], []
+    for i in range(8):
+        xt, bits = c(jax.random.key(i), x, rate)
+        errs.append(float(jnp.sum((xt - x) ** 2) / jnp.sum(x ** 2)))
+        kept.append(float(bits) / (x.size * 32))
+    mean_err = np.mean(errs)
+    expect = float(c.eps2(rate))
+    assert abs(mean_err - expect) < 0.05, (mean_err, expect)
+    assert abs(np.mean(kept) - 1.0 / rate) < 0.05
+
+
+def test_eps_monotone_in_rate():
+    c = get_compressor("randmask")
+    rates = jnp.array([1.0, 2.0, 4.0, 8.0, 64.0, 128.0])
+    eps = np.asarray(c.eps2(rates))
+    assert np.all(np.diff(eps) >= 0)
+
+
+def test_unbiased_mask_is_unbiased():
+    c = get_compressor("randmask_unbiased")
+    x = jax.random.normal(jax.random.key(0), (256, 64))
+    acc = jnp.zeros_like(x)
+    n = 64
+    for i in range(n):
+        xt, _ = c(jax.random.key(i), x, 4.0)
+        acc = acc + xt
+    bias = float(jnp.abs(acc / n - x).mean() / jnp.abs(x).mean())
+    assert bias < 0.2, bias
+
+
+def test_topk_keeps_largest():
+    c = get_compressor("topk")
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (32, 32)))
+    xt, bits = c(jax.random.key(0), x, 4.0)
+    kept = np.asarray(xt != 0)
+    thresh = np.quantile(np.abs(np.asarray(x)), 0.75)
+    assert np.all(np.abs(np.asarray(x))[kept] >= thresh - 1e-6)
+    # index metadata charged: 32-bit value + 32-bit index per kept element
+    assert float(bits) == kept.sum() * 64
+
+
+def test_int8_error_small_at_rate4():
+    c = get_compressor("int8")
+    x = jax.random.normal(jax.random.key(0), (64, 128))
+    xt, bits = c(jax.random.key(1), x, 4.0)
+    rel = float(jnp.abs(xt - x).max() / jnp.abs(x).max())
+    assert rel < 0.02, rel          # pure quantisation at r=4, no masking
+    assert float(bits) <= x.size * 8 + x.shape[0] * 32
+
+
+def test_compression_differentiable():
+    c = get_compressor("randmask")
+
+    def loss(x):
+        xt, _ = c(jax.random.key(0), x, 4.0)
+        return jnp.sum(xt ** 2)
+
+    x = jax.random.normal(jax.random.key(2), (32, 32))
+    g = jax.grad(loss)(x)
+    xt, _ = c(jax.random.key(0), x, 4.0)
+    # gradient flows exactly through kept entries
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * xt), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 64), cols=st.integers(1, 64),
+       rate=st.floats(1.0, 64.0))
+def test_mask_shape_preserving_property(rows, cols, rate):
+    c = get_compressor("randmask")
+    x = jnp.ones((rows, cols))
+    xt, bits = c(jax.random.key(0), x, rate)
+    assert xt.shape == x.shape
+    kept = float((xt != 0).sum())
+    assert float(bits) == kept * 32
+    # masked output only contains 0 or the original value
+    vals = np.unique(np.asarray(xt))
+    assert set(vals.tolist()) <= {0.0, 1.0}

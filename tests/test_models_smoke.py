@@ -1,0 +1,130 @@
+"""Per-arch smoke tests: reduced configs, one forward/train step on CPU,
+shape + finiteness assertions (deliverable f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import SHAPES, batch_specs, long_context_variant
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models.transformer import (decode_step, forward_train, init_cache,
+                                      init_lm, lm_loss, prefill, _lm_head)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = init_lm(jax.random.key(0), cfg)
+    batch = batch_specs(cfg, SHAPES["train_4k"], concrete=True, batch=2,
+                        seq=64)
+    # forward shapes
+    h, aux = forward_train(params, cfg, batch)
+    assert h.shape == (2, 64, cfg.d_model)
+    logits = _lm_head(params, cfg, h)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # one train step
+    opt = make_optimizer(cfg, lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    params2, _, m = step(params, opt.init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    # params actually changed
+    deltas = [float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree.leaves(params), jax.tree.leaves(params2))]
+    assert max(deltas) > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "qwen3-32b", "gemma-7b",
+                                  "mamba2-130m", "musicgen-large", "yi-6b"])
+def test_smoke_decode_consistency(arch):
+    """prefill+decode logits == full-forward logits at the same position."""
+    cfg = get_config(arch, smoke=True)
+    params = init_lm(jax.random.key(1), cfg)
+    b, s = 2, 16
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+    h, _ = forward_train(params, cfg, {"tokens": toks})
+    ref = _lm_head(params, cfg, h)[:, s]
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :s]}, max_len=s + 8)
+    got, cache2 = decode_step(params, cfg, {"tokens": toks[:, s:s + 1]},
+                              cache)
+    rel = float(jnp.abs(got - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 1e-3, rel
+    assert int(cache2.index) == s + 1
+
+
+def test_smoke_moe_decode_consistency_with_headroom():
+    """MoE archs match once expert capacity can't differ between runs."""
+    base = get_config("qwen2-moe-a2.7b", smoke=True)
+    cfg = base.with_(moe=dataclasses.replace(base.moe, capacity_factor=8.0))
+    params = init_lm(jax.random.key(1), cfg)
+    b, s = 2, 12
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+    h, _ = forward_train(params, cfg, {"tokens": toks})
+    ref = _lm_head(params, cfg, h)[:, s]
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :s]}, max_len=s + 4)
+    got, _ = decode_step(params, cfg, {"tokens": toks[:, s:s + 1]}, cache)
+    rel = float(jnp.abs(got - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 1e-3, rel
+
+
+def test_sliding_window_variant_bounds_cache():
+    cfg = long_context_variant(get_config("yi-6b", smoke=True), window=8)
+    assert cfg.sliding_window == 8
+    cache = init_cache(cfg, batch=2, max_len=1024)
+    for pi, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            assert cache.layers[pi].k.shape[2] == 8   # ring window, not 1024
+
+
+def test_swa_ring_decode_matches_full_attention_inside_window():
+    """With window >= total length, SWA decode == full-cache decode."""
+    base = get_config("granite-3-2b", smoke=True)
+    swa = base.with_(sliding_window=32)
+    params = init_lm(jax.random.key(2), base)
+    b, s = 1, 8
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, base.vocab_size, (b, s + 2)), jnp.int32)
+    _, c_full = prefill(params, base, {"tokens": toks[:, :s]}, max_len=32)
+    _, c_swa = prefill(params, swa, {"tokens": toks[:, :s]}, max_len=32)
+    g1, c_full = decode_step(params, base, {"tokens": toks[:, s:s + 1]},
+                             c_full)
+    g2, c_swa = decode_step(params, swa, {"tokens": toks[:, s:s + 1]}, c_swa)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """qwen2-vl M-RoPE with t==h==w positions equals standard RoPE."""
+    from repro.models.layers import apply_mrope, apply_rope
+    cfg = get_config("qwen2-vl-2b", smoke=True)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 8, 4, 32)),
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    p3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    a = apply_rope(x, pos, cfg.rope_theta)
+    b = apply_mrope(x, p3, cfg.rope_theta, cfg.mrope_sections)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_sane(arch):
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    assert counts["total"] > 0 and counts["active"] <= counts["total"]
+    # headline sizes within 2x of the model names where stated
+    expected = {"jamba-1.5-large-398b": 398e9, "mamba2-130m": 130e6,
+                "gemma-7b": 8.5e9, "yi-6b": 6e9,
+                "llama4-maverick-400b-a17b": 400e9}
+    if arch in expected:
+        assert 0.5 < counts["total"] / expected[arch] < 2.0, counts

@@ -1,0 +1,105 @@
+"""Optimizer math + checkpoint round trips."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint
+from repro.train.optim import (adamw, apply_updates, clip_by_global_norm,
+                               cosine_lr, linear_decay_lr, sgd)
+
+
+def test_sgd_momentum_math():
+    opt = sgd(0.1, momentum=0.9)
+    p = {"w": jnp.ones((3,))}
+    s = opt.init(p)
+    g = {"w": jnp.full((3,), 2.0)}
+    u1, s = opt.update(g, s, p)
+    np.testing.assert_allclose(np.asarray(u1["w"]), -0.1 * 2.0)
+    u2, s = opt.update(g, s, p)
+    np.testing.assert_allclose(np.asarray(u2["w"]), -0.1 * (0.9 * 2 + 2))
+
+
+def test_adamw_first_step_is_lr_signed():
+    opt = adamw(1e-2, weight_decay=0.0)
+    p = {"w": jnp.zeros((4,))}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5, 0.0])}
+    u, s = opt.update(g, s, p)
+    # bias-corrected first step: -lr * g / (|g| + eps) = -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(u["w"])[:3],
+                               [-1e-2, 1e-2, -1e-2], rtol=1e-4)
+    assert float(u["w"][3]) == 0.0
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    kf = jax.random.key(0)
+    p = {"w": jax.random.normal(kf, (64,))}
+    g = {"w": jax.random.normal(jax.random.key(1), (64,)) * 0.1}
+    o32 = adamw(1e-3)
+    obf = adamw(1e-3, moment_dtype=jnp.bfloat16)
+    s32, sbf = o32.init(p), obf.init(p)
+    p32, pbf = p, p
+    for _ in range(10):
+        u, s32 = o32.update(g, s32, p32)
+        p32 = apply_updates(p32, u)
+        u, sbf = obf.update(g, sbf, pbf)
+        pbf = apply_updates(pbf, u)
+    rel = float(jnp.abs(p32["w"] - pbf["w"]).max() /
+                jnp.abs(p32["w"]).max())
+    assert rel < 0.05, rel
+    assert sbf["mu"]["w"].dtype == jnp.bfloat16
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1)
+    p = {"w": jnp.full((8,), 5.0)}
+    s = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        u, s = opt.update(g, s, p)
+        p = apply_updates(p, u)
+    assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-3
+
+
+def test_lr_schedules():
+    f = cosine_lr(1.0, 100, warmup=10)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert float(f(100)) < 1e-3
+    g = linear_decay_lr(2.0, 100, warmup=0)
+    assert abs(float(g(50)) - 1.0) < 1e-5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+    path = os.path.join(tmp_path, "ck", "state.msgpack")
+    checkpoint.save(path, tree, extra={"step": 7})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = checkpoint.restore(path, like)
+    assert extra["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_rejects_mismatch(tmp_path):
+    import pytest
+    path = os.path.join(tmp_path, "s.msgpack")
+    checkpoint.save(path, {"a": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"b": jnp.ones((2,))})

@@ -1,0 +1,100 @@
+"""Partitioner + halo layout correctness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (citation_graph, edge_cut_stats, partition_graph,
+                         tiny_graph)
+from repro.graph.partition import PARTITIONERS
+
+
+@pytest.mark.parametrize("scheme", list(PARTITIONERS))
+@pytest.mark.parametrize("q", [2, 4, 8])
+def test_partition_covers_disjoint(scheme, q):
+    g = tiny_graph(n=256)
+    pg = partition_graph(g, q, scheme=scheme)
+    assert pg.owner.shape == (g.num_nodes,)
+    assert pg.owner.min() >= 0 and pg.owner.max() < q
+    sizes = np.bincount(pg.owner, minlength=q)
+    assert sizes.sum() == g.num_nodes
+    if scheme == "random":
+        assert sizes.max() - sizes.min() <= 1
+    else:
+        assert sizes.max() <= 1.1 * g.num_nodes / q + 1
+
+
+def test_edge_stats_sum_to_total():
+    g = tiny_graph(n=256)
+    pg = partition_graph(g, 4, scheme="random")
+    st_ = edge_cut_stats(g, pg.owner)
+    assert st_["self_edges"] + st_["cross_edges"] == g.num_edges
+    assert abs(st_["self_frac"] + st_["cross_frac"] - 1.0) < 1e-9
+
+
+def test_metis_like_cuts_fewer_edges_than_random():
+    g = citation_graph(n=4000, seed=0)
+    cut_r = edge_cut_stats(g, partition_graph(g, 8, "random").owner)
+    cut_m = edge_cut_stats(g, partition_graph(g, 8, "metis-like").owner)
+    assert cut_m["cross_frac"] < 0.75 * cut_r["cross_frac"], (cut_m, cut_r)
+
+
+def test_halo_layout_reconstructs_full_aggregation():
+    """local + remote edge arrays must reproduce the exact full-graph Sx."""
+    g = tiny_graph(n=256)
+    pg = partition_graph(g, 4, scheme="random", norm="mean")
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (g.num_nodes, 8)).astype(np.float32)
+
+    # reference aggregation
+    from repro.graph.data import normalized_edge_weights
+    dst, src = g.edge_list()
+    w = normalized_edge_weights(g, "mean")
+    ref = np.zeros_like(x)
+    np.add.at(ref, dst, w[:, None] * x[src])
+
+    # partitioned aggregation using the padded halo layout
+    xq = np.zeros((pg.q, pg.part_size, 8), np.float32)
+    xq[pg.owner, pg.local_index] = x
+    publish = np.stack([xq[p][pg.send_idx[p]] * pg.send_valid[p][:, None]
+                        for p in range(pg.q)])          # [Q, B, F]
+    halo_flat = publish.reshape(pg.q * pg.halo_size, 8)
+    out = np.zeros((pg.q, pg.part_size + 1, 8), np.float32)
+    for p in range(pg.q):
+        np.add.at(out[p], pg.local_dst[p],
+                  pg.local_w[p][:, None] * xq[p][pg.local_src[p]])
+        np.add.at(out[p], pg.remote_dst[p],
+                  pg.remote_w[p][:, None] * halo_flat[pg.remote_src[p]])
+    got = out[pg.owner, pg.local_index]
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_halo_demand_counts_distinct_pairs():
+    g = tiny_graph(n=128)
+    pg = partition_graph(g, 4, scheme="random")
+    dst, src = g.edge_list()
+    demand = len({(pg.owner[d], s) for d, s in zip(dst, src)
+                  if pg.owner[d] != pg.owner[s]})
+    assert pg.halo_demand == demand
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(40, 200), q=st.sampled_from([2, 3, 4]),
+       seed=st.integers(0, 5))
+def test_partition_property_random_graphs(n, q, seed):
+    g = tiny_graph(n=n, seed=seed)
+    pg = partition_graph(g, q, scheme="random", seed=seed)
+    # every node appears exactly once across partitions
+    seen = np.zeros(g.num_nodes, bool)
+    for p in range(q):
+        nodes = np.flatnonzero(pg.owner == p)
+        assert not seen[nodes].any()
+        seen[nodes] = True
+    assert seen.all()
+    # every remote edge's halo slot points at a published boundary node
+    for p in range(q):
+        valid = pg.remote_w[p] > 0
+        flat = pg.remote_src[p][valid]
+        owners = flat // pg.halo_size
+        slots = flat % pg.halo_size
+        assert (pg.send_valid[owners, slots] == 1.0).all()

@@ -1,0 +1,58 @@
+"""Scheduler properties (paper Prop. 2 requires strict decrease)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedulers
+from repro.core.varco import CommPolicy
+
+
+@pytest.mark.parametrize("sched", [
+    schedulers.linear(100, slope=5),
+    schedulers.linear(100, slope=2),
+    schedulers.fixed_step(100, decrement=1.5),
+    schedulers.exponential(100),
+    schedulers.cosine(100),
+])
+def test_monotone_nonincreasing_and_clamped(sched):
+    ts = jnp.arange(0, 130)
+    cs = np.asarray(jnp.stack([sched(t) for t in ts]))
+    assert np.all(np.diff(cs) <= 1e-6)
+    assert cs.min() >= sched.c_min - 1e-6
+    assert cs.max() <= sched.c_max + 1e-6
+    # strictly decreasing until the floor (Prop. 2's condition)
+    before_floor = cs > sched.c_min + 1e-6
+    if before_floor.sum() > 2:
+        seg = cs[before_floor]
+        assert np.all(np.diff(seg) < 0)
+
+
+def test_linear_matches_paper_eq8():
+    """c(t) = clamp(c_max - a (c_max - c_min) t / T, c_min, c_max)."""
+    T, a = 300, 5.0
+    s = schedulers.linear(T, slope=a)
+    for t in [0, 10, 30, 59, 60, 200]:
+        expect = np.clip(128.0 - a * 127.0 * t / T, 1.0, 128.0)
+        assert abs(float(s(t)) - expect) < 1e-4
+
+
+def test_parse_specs():
+    assert schedulers.parse("fixed:4", 10).name == "fixed:4"
+    assert schedulers.parse("linear:3", 10).name == "linear:a=3"
+    assert schedulers.parse("exp", 10).name == "exp"
+    with pytest.raises(ValueError):
+        schedulers.parse("bogus", 10)
+
+
+def test_policy_parse_and_rates():
+    p = CommPolicy.parse("varco:linear:5", 300)
+    assert p.mode == "varco" and p.compresses
+    assert float(p.rate(0)) == 128.0
+    assert float(p.rate(300)) == 1.0
+    full = CommPolicy.parse("full", 300)
+    assert not full.compresses and float(full.rate(0)) == 1.0
+    none = CommPolicy.parse("none", 300)
+    assert not none.communicates
+    fixed = CommPolicy.parse("fixed:4", 300)
+    assert float(fixed.rate(123)) == 4.0

@@ -1,0 +1,81 @@
+"""Parameter/cache sharding rules (divisibility, axis assignment)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import cache_spec, param_spec
+from repro.launch.mesh import make_small_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 real device but mesh construction only needs shape arithmetic:
+    # use (1, 1) sizes for rule tests that only exercise divisibility=no,
+    # and a fake 16x16 via AbstractMesh for the real checks.
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_attention_param_rules(mesh):
+    assert param_spec("blocks/p0_attn/attn/wq", (9, 8192, 64, 128), mesh) \
+        == P(None, ("data",), ("model",), None)
+    assert param_spec("blocks/p0_attn/attn/wo", (9, 64, 128, 8192), mesh) \
+        == P(None, ("model",), None, ("data",))
+    # kv heads 8 don't divide model=16 -> replicated on that dim
+    assert param_spec("blocks/p0_attn/attn/wk", (9, 8192, 8, 128), mesh) \
+        == P(None, ("data",), None, None)
+
+
+def test_mlp_and_embed_rules(mesh):
+    assert param_spec("blocks/p0_attn/mlp/w_gate", (9, 4096, 11008), mesh) \
+        == P(None, ("data",), ("model",))
+    assert param_spec("blocks/p0_attn/mlp/w_down", (9, 11008, 4096), mesh) \
+        == P(None, ("model",), ("data",))
+    # vocab over model only (2D-sharded tables defeat GSPMD sparse lookup;
+    # EXPERIMENTS.md §Perf it. 9)
+    assert param_spec("embed", (64000, 4096), mesh) \
+        == P(("model",), None)
+    assert param_spec("lm_head", (4096, 64000), mesh) \
+        == P(None, ("model",))
+
+
+def test_moe_expert_parallel_rules(mesh):
+    # expert parallelism lives on the DATA axis (single-axis MoE all-to-all,
+    # EXPERIMENTS.md §Perf it. 3); expert ffn dim gets TP over model
+    assert param_spec("blocks/p1_attn/moe/w_gate", (24, 128, 5120, 8192),
+                      mesh) == P(None, ("data",), None, ("model",))
+    assert param_spec("blocks/p1_attn/moe/w_down", (24, 128, 8192, 5120),
+                      mesh) == P(None, ("data",), ("model",), None)
+    # shared expert is a plain gated MLP
+    assert param_spec("blocks/p1_attn/moe/shared/w_up", (24, 5120, 8192),
+                      mesh) == P(None, ("data",), ("model",))
+
+
+def test_norms_replicated(mesh):
+    assert param_spec("blocks/p0_attn/norm1", (9, 8192), mesh) == P(None, None)
+    assert param_spec("final_norm", (8192,), mesh) == P(None)
+
+
+def test_cache_spec_kv_heads_vs_seq(mesh):
+    # kv=8 can't shard over model=16 -> seq gets the model axis
+    spec = cache_spec((40, 128, 32768, 8, 64), mesh, batch_dim=1, seq_dim=2,
+                      head_dim=3)
+    assert spec == P(None, ("data",), ("model",), None, None)
+    # kv=16 divides -> heads sharded, seq left alone
+    spec = cache_spec((40, 128, 32768, 16, 64), mesh, batch_dim=1, seq_dim=2,
+                      head_dim=3)
+    assert spec == P(None, ("data",), None, ("model",), None)
+    # batch=1 long-context: seq takes data (and model if it still divides)
+    spec = cache_spec((9, 1, 524288, 8, 128), mesh, batch_dim=1, seq_dim=2,
+                      head_dim=3)
+    assert spec == P(None, None, ("data", "model"), None, None)
+
+
+def test_multipod_axes():
+    from jax.sharding import AbstractMesh
+    mesh3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    assert param_spec("embed", (65536, 8192), mesh3) \
+        == P(("model",), None)
+    assert param_spec("blocks/p0_mamba/mamba/in_proj", (9, 8192, 33536),
+                      mesh3) == P(None, ("pod", "data"), ("model",))
