@@ -1,0 +1,20 @@
+# Tier-1 verification + smoke entry points (mirrors .github/workflows/ci.yml)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test verify fast smoke bench-smoke all
+
+test verify:
+	$(PY) -m pytest -x -q
+
+fast:                        # skip the multi-device subprocess tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+smoke:
+	$(PY) examples/quickstart.py
+
+bench-smoke:
+	$(PY) benchmarks/transformer_comm.py --smoke
+
+all: verify smoke bench-smoke

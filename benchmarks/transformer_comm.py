@@ -5,7 +5,12 @@ the compressor acts per worker before the (here trivial) psum."""
 
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+if __package__ in (None, ""):               # `python benchmarks/...py` direct
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import jax.numpy as jnp
@@ -61,4 +66,14 @@ def main(quick: bool = True) -> dict:
 
 
 if __name__ == "__main__":
-    print(main())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--smoke", action="store_true",
+                     help="reduced settings (CPU, ~1 min); the default")
+    grp.add_argument("--full", action="store_true",
+                     help="longer run (200 steps instead of 60; still the "
+                          "smoke model config on CPU)")
+    args = ap.parse_args()
+    print(main(quick=not args.full))

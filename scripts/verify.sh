@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verify: full test suite + CPU smoke runs.  Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python examples/quickstart.py
+python benchmarks/transformer_comm.py --smoke

@@ -28,7 +28,9 @@ Array = jax.Array
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    if hasattr(lax, "axis_size"):              # jax >= 0.5
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)              # jax 0.4.x fallback
 
 
 def _per_device_key(key: Array, axis_name: str) -> Array:

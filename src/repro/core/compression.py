@@ -192,11 +192,16 @@ def _int8(key: Array, x: Array, rate: Array) -> tuple[Array, Array]:
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
     deq = (q.astype(x.dtype) * scale.astype(x.dtype)).reshape(orig_shape)
-    base_bits = jnp.asarray(q.size * 8 + scale.size * 32, jnp.float32)
     quant_gain = _nbits(x.dtype) / 8.0
     residual_rate = jnp.maximum(jnp.asarray(rate, jnp.float32) / quant_gain, 1.0)
-    masked, _ = _random_mask(key, deq, residual_rate, unbiased=False)
-    bits = base_bits / jnp.maximum(residual_rate, 1.0)
+    masked, mask_bits = _random_mask(key, deq, residual_rate, unbiased=False)
+    # wire payload: surviving int8 elements (8 bits each; the mask itself is
+    # free — shared-key protocol) + EVERY per-row f32 scale.  Scales are
+    # side-band metadata that always crosses the wire; only the quantised
+    # elements are subsampled, so the scales must not be divided by the
+    # residual rate.
+    kept = mask_bits / _nbits(deq.dtype)          # surviving element count
+    bits = kept * 8.0 + jnp.asarray(scale.size * 32, jnp.float32)
     return masked, bits
 
 

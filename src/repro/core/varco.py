@@ -44,7 +44,7 @@ class CommPolicy:
     # -- construction --------------------------------------------------------
 
     @staticmethod
-    def parse(spec: str, total_steps: int, compressor: str = "randmask"
+    def parse(spec: str, total_steps: int, compressor: str | None = None
               ) -> "CommPolicy":
         """Parse CLI specs.
 
@@ -59,11 +59,11 @@ class CommPolicy:
         kind, _, rest = spec.partition(":")
         if kind == "fixed":
             return CommPolicy("fixed", schedulers.constant(float(rest)),
-                              compressor)
+                              compressor or "randmask")
         if kind == "varco":
             return CommPolicy("varco",
                               schedulers.parse(rest or "linear:5", total_steps),
-                              compressor)
+                              compressor or "randmask")
         raise ValueError(f"unknown comm spec {spec!r}")
 
     # -- queries -------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""Distributed runtime: partition-parallel GNN training (the paper's
+setting), mesh/sharding specs for the transformer workloads, and VARCO
+gradient compression for data-parallel LM training.
+
+Three modules, one per distribution style (DESIGN.md §2):
+
+* ``gnn_parallel``  — the paper's Algorithm 1 over a ``workers`` mesh axis:
+  each worker owns one graph partition and exchanges compressed halo
+  activations every layer.
+* ``sharding``      — GSPMD mesh/sharding rules (param placement, activation
+  constraints, KV-cache layout) for the transformer dry-run/serve stack.
+* ``grad_compress`` — VARCO applied to data-parallel gradient all-reduce,
+  transplanting the paper's variable-rate scheme to LM training.
+"""
+
+from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
+                                     make_train_step, make_worker_mesh,
+                                     shard_graph)
+from repro.dist.grad_compress import make_dp_mesh, make_varco_dp_train_step
+from repro.dist.sharding import (activation_sharding, batch_spec, cache_spec,
+                                 data_axes, dispatch_groups, maybe_shard,
+                                 param_shardings, param_spec)
+
+__all__ = [
+    "DistMeta", "make_eval_step", "make_train_step", "make_worker_mesh",
+    "shard_graph",
+    "make_dp_mesh", "make_varco_dp_train_step",
+    "activation_sharding", "batch_spec", "cache_spec", "data_axes",
+    "dispatch_groups", "maybe_shard", "param_shardings", "param_spec",
+]

@@ -1,0 +1,377 @@
+"""Partition-parallel GNN runtime (paper Algorithm 1, DESIGN.md §3).
+
+Each of the ``Q`` workers owns one graph partition in the padded ``[Q, ...]``
+layout produced by :class:`repro.graph.partition.PartitionedGraph`.  A layer's
+aggregation ``S x`` decomposes into
+
+* a **local** scatter over edges whose endpoints are both owned, plus
+* a **remote** scatter over cross edges whose source activations arrive via
+  the *halo exchange*: every worker publishes its boundary nodes, the blocks
+  are (optionally compressed, then) all-gathered, and the flattened
+  ``[Q·B, F]`` halo buffer supplies the remote neighbour terms.
+
+The same aggregation oracle (``nn.gnn.AggregateFn``) is built two ways:
+
+* ``_make_aggregate_emulated`` — single-device emulation over the stacked
+  ``[Q, ...]`` arrays (vmap over partitions, the all-gather is a reshape).
+  This is the default test/CPU path.
+* ``_make_aggregate_shard`` — the real collective path for ``shard_map``
+  over a ``workers`` mesh axis, using
+  :func:`repro.core.collectives.compressed_all_gather`.
+
+Both draw per-worker compression masks from ``fold_in(key, worker_index)``
+of a per-exchange key, so the emulated and shard_map runs are *bitwise
+identical* (tests/test_multidevice.py pins this).
+
+Ledger accounting (paper Fig. 5 axis): every exchange charges the analytic
+``halo_demand × F × 32 / rate`` bits — the activations a point-to-point
+implementation would ship, not the transport-level padding of the dense
+collective (DESIGN.md §3.2).  A train step charges twice the forward traffic
+(activations forward + their cotangents backward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.collectives import compressed_all_gather
+from repro.core.compression import Compressor
+from repro.core.varco import FULL_COMM, CommPolicy
+from repro.graph.partition import PartitionedGraph
+from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
+from repro.train.optim import Optimizer, apply_updates
+
+AXIS = "workers"
+
+
+# ---------------------------------------------------------------------------
+# Static partition metadata
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DistMeta:
+    """Static (hashable) facts about a partitioning, shared by every step.
+
+    ``halo_demand`` is the paper's communication unit: the number of distinct
+    (requesting partition, remote node) pairs whose activations must cross
+    the wire each exchange.  Split sizes are *global* so per-worker losses
+    normalise identically (``psum(local grads) == full gradient``).
+    """
+
+    q: int
+    part_size: int
+    halo_size: int
+    num_nodes: int
+    feat_dim: int
+    num_classes: int
+    halo_demand: int
+    cross_edges: int
+    n_train: int
+    n_val: int
+    n_test: int
+    layer_dims: tuple[int, ...]
+
+    @staticmethod
+    def build(pg: PartitionedGraph, params: dict) -> "DistMeta":
+        dims = []
+        for layer in params["layers"]:
+            if "self" in layer:                       # sage
+                dims.append(int(layer["self"]["w"].shape[0]))
+            else:                                     # poly taps
+                dims.append(int(layer["taps"][0]["w"].shape[0]))
+        return DistMeta(
+            q=pg.q, part_size=pg.part_size, halo_size=pg.halo_size,
+            num_nodes=pg.num_nodes, feat_dim=pg.feat_dim,
+            num_classes=pg.num_classes, halo_demand=pg.halo_demand,
+            cross_edges=pg.cross_edges,
+            n_train=int(pg.train_mask.sum()),
+            n_val=int(pg.val_mask.sum()),
+            n_test=int(pg.test_mask.sum()),
+            layer_dims=tuple(dims))
+
+    def ledger_bits(self, feat: int, rate=1.0) -> jnp.ndarray:
+        """Analytic wire bits of one halo exchange at feature width ``feat``."""
+        return jnp.asarray(self.halo_demand * feat * 32.0, jnp.float32) / \
+            jnp.asarray(rate, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mesh / placement
+# ---------------------------------------------------------------------------
+
+
+def make_worker_mesh(q: int) -> Mesh:
+    """1-D ``workers`` mesh over the first ``q`` local devices."""
+    devs = jax.devices()
+    if len(devs) < q:
+        raise ValueError(f"need {q} devices for a worker mesh, have "
+                         f"{len(devs)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={q})")
+    return Mesh(np.asarray(devs[:q]), (AXIS,))
+
+
+def shard_graph(graph: dict, mesh: Mesh) -> dict:
+    """Place the ``[Q, ...]`` graph pytree over the ``workers`` axis."""
+    sharding = NamedSharding(mesh, P(AXIS))
+    return {k: jax.device_put(v, sharding) for k, v in graph.items()}
+
+
+# ---------------------------------------------------------------------------
+# Aggregation oracles
+# ---------------------------------------------------------------------------
+
+
+def _local_w_for(graph: dict, policy: CommPolicy, rate):
+    """Local edge weights for a communicating exchange at rate ``r``.
+
+    VARCO mode blends toward the isolated-subgraph renormalisation: the
+    biased mask delivers remote halo mass attenuated by ``1/r`` in
+    expectation, so the aggregation realises ``(1/r)·S_full + (1-1/r)·S_iso``
+    — local weights interpolate from the global-degree normalisation
+    (``r=1``, bitwise the centralized operator) toward the No-Comm operator
+    (``r→∞``).  Without the blend, heavy early compression under-scales
+    every aggregation instead of degrading gracefully to the
+    (well-conditioned) local-only training that the schedule then anneals
+    away from.
+
+    Fixed-compression and full-comm runs keep the paper's plain baseline
+    semantics (no renormalisation), which the Definition-1 error-envelope
+    tests pin down.
+    """
+    lw = graph["local_w"]
+    if policy.mode != "varco":
+        return lw
+    mix = 1.0 - 1.0 / jnp.maximum(jnp.asarray(rate, jnp.float32), 1.0)
+    return lw + mix * (graph["local_w_iso"] - lw)
+
+
+def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
+                             compressor: Compressor | None, rate, key):
+    """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
+
+    Numerically identical to the shard_map path: the all-gather becomes a
+    reshape of the per-partition published blocks, and compression draws the
+    worker-``i`` mask from ``fold_in(per-exchange key, i)`` exactly as
+    ``compressed_all_gather`` does on device ``i``.
+    """
+    p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
+    calls = itertools.count()
+
+    def aggregate(li, x):                              # x: [Q, P, F]
+        del li
+        call = next(calls)
+        f = x.shape[-1]
+        if not policy.communicates:                    # No-Comm baseline
+            agg = jax.vmap(lambda xq, ld, ls, w:
+                           jnp.zeros((p_sz + 1, f), x.dtype)
+                           .at[ld].add(w[:, None] * xq[ls])[:p_sz])(
+                x, graph["local_dst"], graph["local_src"],
+                graph["local_w_iso"])
+            return agg, jnp.zeros((), jnp.float32)
+
+        sent = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
+            x, graph["send_idx"], graph["send_valid"])  # [Q, B, F]
+        if compressor is not None:
+            k_call = jax.random.fold_in(key, call)
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                k_call, jnp.arange(q))
+            sent = jax.vmap(lambda k, blk: compressor(k, blk, rate)[0])(
+                keys, sent)
+        halo = sent.reshape(q * b_sz, f)
+        local_w = _local_w_for(graph, policy, rate)
+
+        def part(xq, ld, ls, lw, rd, rs, rw):
+            out = jnp.zeros((p_sz + 1, f), x.dtype)
+            out = out.at[ld].add(lw[:, None] * xq[ls])
+            out = out.at[rd].add(rw[:, None] * halo[rs])
+            return out[:p_sz]
+
+        agg = jax.vmap(part, (0, 0, 0, 0, 0, 0, 0))(
+            x, graph["local_dst"], graph["local_src"], local_w,
+            graph["remote_dst"], graph["remote_src"], graph["remote_w"])
+        return agg, meta.ledger_bits(f, rate)
+
+    return aggregate
+
+
+def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
+                          compressor: Compressor | None, rate, key,
+                          axis: str = AXIS):
+    """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``)."""
+    p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
+    calls = itertools.count()
+
+    def aggregate(li, x):                              # x: [1, P, F]
+        del li
+        call = next(calls)
+        f = x.shape[-1]
+        xq = x[0]
+        if not policy.communicates:
+            out = jnp.zeros((p_sz + 1, f), x.dtype)
+            out = out.at[graph["local_dst"][0]].add(
+                graph["local_w_iso"][0][:, None] * xq[graph["local_src"][0]])
+            return out[:p_sz][None], jnp.zeros((), jnp.float32)
+
+        sent = xq[graph["send_idx"][0]] * graph["send_valid"][0][:, None]
+        if compressor is not None:
+            k_call = jax.random.fold_in(key, call)
+            halo, _ = compressed_all_gather(sent, axis, compressor=compressor,
+                                            rate=rate, key=k_call)
+        else:
+            halo = lax.all_gather(sent, axis)          # [Q, B, F]
+        halo = halo.reshape(q * b_sz, f)
+
+        out = jnp.zeros((p_sz + 1, f), x.dtype)
+        out = out.at[graph["local_dst"][0]].add(
+            _local_w_for(graph, policy, rate)[0][:, None] *
+            xq[graph["local_src"][0]])
+        out = out.at[graph["remote_dst"][0]].add(
+            graph["remote_w"][0][:, None] * halo[graph["remote_src"][0]])
+        return out[:p_sz][None], meta.ledger_bits(f, rate)
+
+    return aggregate
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+# ---------------------------------------------------------------------------
+
+
+def _local_loss_fn(params, cfg: GNNConfig, graph: dict, aggregate,
+                   meta: DistMeta, psum: bool = False):
+    """Masked CE over owned train nodes, normalised by the GLOBAL count.
+
+    With the global normalisation, ``psum(per-worker grads)`` equals the full
+    centralized gradient — the identity the grad-sync mode relies on.
+    Returns ``(loss, forward wire bits)``.
+    """
+    logits, bits = gnn_forward(params, cfg, graph["features"], aggregate)
+    loss_sum, _ = masked_loss_and_correct(logits, graph["labels"],
+                                          graph["train_mask"])
+    if psum:
+        loss_sum = lax.psum(loss_sum, AXIS)
+    return loss_sum / max(meta.n_train, 1), bits
+
+
+def _pmean_inexact(tree, axis: str):
+    """FedAvg server step: average float state, keep integer state local."""
+    return jax.tree_util.tree_map(
+        lambda t: lax.pmean(t, axis)
+        if jnp.issubdtype(t.dtype, jnp.inexact) else t, tree)
+
+
+def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
+                    meta: DistMeta, mesh: Mesh | None = None,
+                    sync: str = "grad"):
+    """One full-batch step of Algorithm 1.
+
+    ``step(params, opt_state, graph, step_idx, key)`` ->
+    ``(params, opt_state, {loss, rate, halo_bits})``.
+
+    ``mesh=None`` runs the single-device emulation over ``[Q, ...]`` stacks;
+    with a ``workers`` mesh the same program runs under ``shard_map`` with
+    real collectives.  ``sync``: ``'grad'`` psums gradients (exact
+    centralized step), ``'fedavg'`` applies local updates then averages
+    parameters (Algorithm 1's server step).
+    """
+    if sync not in ("grad", "fedavg"):
+        raise ValueError(f"sync must be 'grad' or 'fedavg', got {sync!r}")
+    compressor = policy.compressor() if policy.compresses else None
+
+    if mesh is None:
+        @jax.jit
+        def step(params, opt_state, graph, step_idx, key):
+            rate = policy.rate(step_idx)
+
+            def loss_fn(p):
+                agg = _make_aggregate_emulated(graph, meta, policy,
+                                               compressor, rate, key)
+                return _local_loss_fn(p, cfg, graph, agg, meta)
+
+            (loss, bits), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            updates, new_state = opt.update(grads, opt_state, params)
+            new_params = apply_updates(params, updates)
+            return new_params, new_state, {"loss": loss, "rate": rate,
+                                           "halo_bits": 2.0 * bits}
+
+        return step
+
+    def worker(params, opt_state, gblk, rate, key):
+        def loss_fn(p):
+            agg = _make_aggregate_shard(gblk, meta, policy, compressor,
+                                        rate, key)
+            return _local_loss_fn(p, cfg, gblk, agg, meta)
+
+        (loss, bits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        loss = lax.psum(loss, AXIS)
+        if sync == "grad":
+            grads = jax.tree_util.tree_map(lambda g: lax.psum(g, AXIS), grads)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+        else:  # fedavg: local step, then parameter averaging
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            params = _pmean_inexact(params, AXIS)
+            opt_state = _pmean_inexact(opt_state, AXIS)
+        return params, opt_state, {"loss": loss, "rate": rate,
+                                   "halo_bits": 2.0 * bits}
+
+    sm = shard_map(worker, mesh=mesh,
+                   in_specs=(P(), P(), P(AXIS), P(), P()),
+                   out_specs=(P(), P(), P()), check_rep=False)
+
+    @jax.jit
+    def step(params, opt_state, graph, step_idx, key):
+        return sm(params, opt_state, graph, policy.rate(step_idx), key)
+
+    return step
+
+
+def make_eval_step(cfg: GNNConfig, meta: DistMeta, mesh: Mesh | None = None):
+    """Full-communication accuracy over the train/val/test splits."""
+    splits = (("train", "train_mask", meta.n_train),
+              ("val", "val_mask", meta.n_val),
+              ("test", "test_mask", meta.n_test))
+
+    def _accs(logits, gblk, reduce_psum: bool):
+        pred = jnp.argmax(logits, -1)
+        out = {}
+        for name, mask_key, n in splits:
+            correct = jnp.sum((pred == gblk["labels"]) *
+                              gblk[mask_key].astype(jnp.float32))
+            if reduce_psum:
+                correct = lax.psum(correct, AXIS)
+            out[name] = correct / max(n, 1)
+        return out
+
+    if mesh is None:
+        @jax.jit
+        def evaluate(params, graph):
+            agg = _make_aggregate_emulated(graph, meta, FULL_COMM, None,
+                                           jnp.ones((), jnp.float32),
+                                           jax.random.key(0))
+            logits, _ = gnn_forward(params, cfg, graph["features"], agg)
+            return _accs(logits, graph, reduce_psum=False)
+
+        return evaluate
+
+    def worker(params, gblk):
+        agg = _make_aggregate_shard(gblk, meta, FULL_COMM, None,
+                                    jnp.ones((), jnp.float32),
+                                    jax.random.key(0))
+        logits, _ = gnn_forward(params, cfg, gblk["features"], agg)
+        return _accs(logits, gblk, reduce_psum=True)
+
+    sm = shard_map(worker, mesh=mesh, in_specs=(P(), P(AXIS)),
+                   out_specs=P(), check_rep=False)
+    return jax.jit(sm)

@@ -1,0 +1,235 @@
+"""Mesh/sharding specs for the transformer workloads (DESIGN.md §5).
+
+Two surfaces:
+
+* **Rules** — :func:`param_spec` / :func:`cache_spec` map a parameter path +
+  shape (or a cache layout) to a :class:`PartitionSpec` under the production
+  ``(data, model)`` or multi-pod ``(pod, data, model)`` meshes.  Every
+  assignment is divisibility-guarded: a dim that doesn't divide its mesh
+  axis group is replicated rather than unevenly split (e.g. 8 KV heads on a
+  16-way model axis).
+* **Activation constraints** — :func:`maybe_shard` applies
+  ``with_sharding_constraint`` hints *only* inside an
+  :func:`activation_sharding` context, so the same model code runs
+  unannotated on a bare CPU device and fully constrained under the dry-run
+  meshes.  Axis names absent from the active mesh (e.g. ``pod`` on a
+  single-pod mesh) are silently dropped.
+
+The rule choices encode the experiments' hard-won layout decisions
+(EXPERIMENTS.md §Perf iterations): vocab tables shard over ``model`` only
+(2-D-sharded tables defeat GSPMD sparse lookup), MoE expert parallelism
+lives on the ``data`` axis (single-axis dispatch all-to-all), and the
+``pod`` axis joins ``data`` for parameter/batch sharding.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _current_mesh():
+    return getattr(_ctx, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh):
+    """Enable :func:`maybe_shard` constraints against ``mesh`` while tracing."""
+    prev = getattr(_ctx, "mesh", None)
+    _ctx.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _ctx.mesh = prev
+
+
+# ---------------------------------------------------------------------------
+# Axis helpers
+# ---------------------------------------------------------------------------
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axis group: ``(pod, data)`` filtered to the mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def dispatch_groups() -> int:
+    """Token groups for MoE dispatch = active data-parallel degree (or 1)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return 1
+    return max(_size(mesh, data_axes(mesh)), 1)
+
+
+def batch_spec(mesh) -> P:
+    """Leading-dim batch sharding over the data axis group."""
+    d = data_axes(mesh)
+    return P(d) if d else P()
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+
+def maybe_shard(x, *dims):
+    """Constrain ``x``'s layout, one entry per dim (name, tuple, or None).
+
+    No-op outside an :func:`activation_sharding` context.  Entries naming
+    axes absent from the active mesh, or groups that don't divide the dim,
+    degrade to replicated.
+    """
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for i, d in enumerate(dims):
+        if d is None:
+            spec.append(None)
+            continue
+        axes = (d,) if isinstance(d, str) else tuple(d)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes or _size(mesh, axes) <= 1 or \
+                x.shape[i] % _size(mesh, axes) != 0:
+            spec.append(None)
+        else:
+            spec.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path: str, shape, mesh) -> P:
+    """PartitionSpec for the parameter at ``path`` (``/``-joined pytree keys).
+
+    Rules (megatron-style TP over ``model``, FSDP-style weight sharding over
+    the ``(pod, data)`` group; every assignment divisibility-guarded):
+
+    * norms / 1-D / unrecognised 2-D      -> replicated
+    * ``embed [V, d]``, ``lm_head [d, V]`` -> vocab over ``model`` only
+    * attention ``wq/wk/wv [L, d, h, dh]`` -> d over data, heads over model
+    * attention ``wo [L, h, dh, d]``       -> heads over model, d over data
+    * MoE experts ``[L, E, a, b]``         -> E over data, d_expert over model
+    * generic 3-D ``[L, d_in, d_out]``     -> column-parallel (down
+      projections named ``w_down`` are row-parallel)
+    """
+    name = path.split("/")[-1]
+    rank = len(shape)
+    data = data_axes(mesh)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    spec = [None] * rank
+
+    def assign(dim, axes):
+        axes = tuple(axes)
+        while axes and (_size(mesh, axes) <= 1
+                        or shape[dim] % _size(mesh, axes) != 0):
+            axes = axes[1:]                    # shrink the group, keep inner
+        if axes and _size(mesh, axes) > 1:
+            spec[dim] = axes
+
+    if rank == 0 or "norm" in name or rank == 1:
+        return P(*spec)
+    if name == "embed":
+        assign(0, model)                       # vocab over model ONLY
+        return P(*spec)
+    if name == "lm_head":
+        assign(1, model)
+        return P(*spec)
+    if name == "router":
+        return P(*spec)                        # tiny; replicate
+    if rank == 4 and name in ("wq", "wk", "wv"):
+        assign(1, data)
+        assign(2, model)                       # query/kv heads
+        return P(*spec)
+    if rank == 4 and name == "wo":
+        assign(1, model)
+        assign(3, data)
+        return P(*spec)
+    if rank == 4:                              # stacked MoE experts [L,E,a,b]
+        assign(1, data)                        # expert parallel on data axis
+        assign(2 if name == "w_down" else 3, model)
+        return P(*spec)
+    if rank == 3:
+        if name == "w_down":                   # row-parallel [L, f, d]
+            assign(1, model)
+            assign(2, data)
+        else:                                  # column-parallel [L, d, f]
+            assign(1, data)
+            assign(2, model)
+        return P(*spec)
+    return P(*spec)                            # unknown 2-D: replicate
+
+
+def param_shardings(params, mesh):
+    """NamedSharding pytree for a parameter (or optimizer-state) pytree."""
+
+    def _path_str(path) -> str:
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            elif hasattr(k, "name"):
+                parts.append(str(k.name))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: NamedSharding(mesh,
+                                      param_spec(_path_str(path), x.shape,
+                                                 mesh)),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM cache rules
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(shape, mesh, batch_dim: int | None = None,
+               seq_dim: int | None = None,
+               head_dim: int | None = None) -> P:
+    """Cache layout: heads over ``model`` when they divide, else the
+    sequence dim absorbs ``model``; batch over ``data`` when it divides,
+    else (batch=1 long-context) the sequence dim takes the data group too.
+    """
+    spec = [None] * len(shape)
+    data = data_axes(mesh)
+    dsize = _size(mesh, data)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    msize = _size(mesh, model) if model else 1
+    model_free = bool(model) and msize > 1
+
+    if head_dim is not None and model_free and shape[head_dim] % msize == 0:
+        spec[head_dim] = model
+        model_free = False
+    if batch_dim is not None and dsize > 1 and shape[batch_dim] % dsize == 0:
+        spec[batch_dim] = data
+        if seq_dim is not None and model_free and shape[seq_dim] % msize == 0:
+            spec[seq_dim] = model
+    elif seq_dim is not None:
+        group = data + (model if model_free else ())
+        while group and (_size(mesh, group) <= 1
+                         or shape[seq_dim] % _size(mesh, group) != 0):
+            group = group[1:]
+        if group and _size(mesh, group) > 1:
+            spec[seq_dim] = group
+    return P(*spec)

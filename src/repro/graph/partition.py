@@ -115,8 +115,14 @@ def refine_partition(g: GraphData, owner: np.ndarray, q: int,
             counts[:] = 0.0
             np.add.at(counts, owner[neigh], 1.0)
             cur = owner[u]
+            cur_count = counts[cur]
             counts[sizes >= capacity] = -np.inf
-            counts[cur] = np.inf if False else counts[cur]  # keep comparable
+            # staying put is always feasible: restore the true neighbour
+            # count of the current partition so a move happens only when it
+            # is strictly better (keep-current tie-breaking).  Moving to the
+            # argmax then strictly reduces u's cut edges, so a refinement
+            # pass can never increase the total edge cut.
+            counts[cur] = cur_count
             best = int(np.argmax(counts))
             if best != cur and counts[best] > counts[cur]:
                 owner[u] = best

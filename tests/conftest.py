@@ -1,5 +1,7 @@
 import os
+import random
 import sys
+import types
 
 # src/ onto the path so `import repro` works without installation
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -8,3 +10,65 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # tests and benches must see the single real CPU device.  Multi-device
 # behaviour is exercised via subprocess tests (test_multidevice.py) which
 # set the flag in a fresh interpreter.
+
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis (requirements-dev.txt): when absent, install a minimal
+# deterministic stand-in so property-based tests still collect and run a few
+# fixed examples instead of hard-failing the whole module at import.
+# ---------------------------------------------------------------------------
+
+
+def _install_hypothesis_stub() -> None:
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    st.integers = lambda min_value=0, max_value=100: _Strategy(
+        lambda r: r.randint(int(min_value), int(max_value)))
+    st.floats = lambda min_value=0.0, max_value=1.0, **_: _Strategy(
+        lambda r: r.uniform(float(min_value), float(max_value)))
+    st.sampled_from = lambda elements: _Strategy(
+        lambda r: r.choice(list(elements)))
+    st.booleans = lambda: _Strategy(lambda r: r.choice([False, True]))
+
+    def given(**strategies):
+        def deco(fn):
+            # NOT functools.wraps: copying the signature would make pytest
+            # look for fixtures named after the strategy parameters.
+            def runner(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(runner, "_stub_examples", 5)):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            runner.__module__ = fn.__module__
+            runner.__doc__ = fn.__doc__
+            runner._stub_examples = 5
+            return runner
+        return deco
+
+    def settings(max_examples=5, deadline=None, **_):
+        del deadline
+
+        def deco(fn):
+            fn._stub_examples = min(int(max_examples), 5)
+            return fn
+        return deco
+
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_stub()

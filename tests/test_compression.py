@@ -101,3 +101,19 @@ def test_mask_shape_preserving_property(rows, cols, rate):
     # masked output only contains 0 or the original value
     vals = np.unique(np.asarray(xt))
     assert set(vals.tolist()) <= {0.0, 1.0}
+
+
+@pytest.mark.parametrize("rate", [4.0, 16.0, 64.0])
+def test_int8_bits_match_payload_composition(rate):
+    """Charged bits == surviving int8 elements × 8 + per-row f32 scales × 32.
+
+    The scales are side-band metadata that always crosses the wire; only the
+    quantised payload is subsampled past rate 4.
+    """
+    c = get_compressor("int8")
+    x = jax.random.normal(jax.random.key(0), (32, 64))
+    _, bits = c(jax.random.key(1), x, rate)
+    residual = max(rate / 4.0, 1.0)
+    mask = jax.random.bernoulli(jax.random.key(1), 1.0 / residual, x.shape)
+    expect = float(mask.sum()) * 8 + x.shape[0] * 32
+    np.testing.assert_allclose(float(bits), expect)

@@ -98,3 +98,19 @@ def test_partition_property_random_graphs(n, q, seed):
         owners = flat // pg.halo_size
         slots = flat % pg.halo_size
         assert (pg.send_valid[owners, slots] == 1.0).all()
+
+
+@pytest.mark.parametrize("scheme_seed", [0, 1, 2])
+@pytest.mark.parametrize("q", [2, 4, 8])
+def test_refine_never_increases_edge_cut(scheme_seed, q):
+    """KL refinement moves only strictly-improving nodes (keep-current
+    tie-breaking), so a pass can never increase the cut."""
+    from repro.graph.partition import (greedy_partition, random_partition,
+                                       refine_partition)
+    g = tiny_graph(n=300, seed=scheme_seed)
+    for base in (random_partition(g, q, seed=scheme_seed),
+                 greedy_partition(g, q, seed=scheme_seed)):
+        before = edge_cut_stats(g, base)["cross_edges"]
+        refined = refine_partition(g, base, q, seed=scheme_seed)
+        after = edge_cut_stats(g, refined)["cross_edges"]
+        assert after <= before, (after, before)

@@ -8,13 +8,21 @@ from repro.dist.sharding import cache_spec, param_spec
 from repro.launch.mesh import make_small_mesh
 
 
+def abstract_mesh(shape, names):
+    """Compat: jax >= 0.5 takes (sizes, names); 0.4.x takes (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
 @pytest.fixture(scope="module")
 def mesh():
     # 1 real device but mesh construction only needs shape arithmetic:
     # use (1, 1) sizes for rule tests that only exercise divisibility=no,
     # and a fake 16x16 via AbstractMesh for the real checks.
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_attention_param_rules(mesh):
@@ -73,8 +81,7 @@ def test_cache_spec_kv_heads_vs_seq(mesh):
 
 
 def test_multipod_axes():
-    from jax.sharding import AbstractMesh
-    mesh3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert param_spec("embed", (65536, 8192), mesh3) \
         == P(("model",), None)
     assert param_spec("blocks/p0_mamba/mamba/in_proj", (9, 8192, 33536),
