@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify fast smoke bench-smoke all
+.PHONY: test verify fast smoke bench-smoke wire-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -17,4 +17,10 @@ smoke:
 bench-smoke:
 	$(PY) benchmarks/transformer_comm.py --smoke
 
-all: verify smoke bench-smoke
+wire-smoke:                  # packed halo-exchange acceptance checks
+	$(PY) benchmarks/halo_exchange.py --smoke
+
+docs:                        # intra-repo markdown link check (CI docs job)
+	$(PY) scripts/check_links.py
+
+all: verify smoke bench-smoke wire-smoke docs

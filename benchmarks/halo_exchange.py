@@ -1,0 +1,222 @@
+"""Halo-exchange wire-volume sweep: dense vs packed transport (rate × Q × F).
+
+The packed wire (DESIGN.md §3.3) is the repo's "make a hot path measurably
+faster" step: where the dense collective ships the masked ``[B, F]`` block
+no matter the rate, the packed wire ships ``[B, K·128]``.  This sweep
+*measures* the reduction instead of asserting it — per (Q, F, rate) it
+records the analytic point-to-point charge, the dense and packed transport
+charges, the raw collective buffer bytes, and the wall time of one emulated
+forward exchange on each wire.
+
+``--smoke`` additionally checks the acceptance bound
+``packed ≤ (1/r + 1/(F/128)) × dense`` for r ∈ {2, 4, 16} and runs a rate-1
+training-parity check of the packed vs dense wire on both backends
+(emulated inline, shard_map in a 4-virtual-device subprocess).
+
+Output: ``experiments/bench/halo_exchange.csv`` (schema in
+benchmarks/README.md).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+if __package__ in (None, ""):               # `python benchmarks/...py` direct
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import StepTimer, save_rows
+
+RATES = [1.0, 2.0, 4.0, 16.0]
+
+
+def _setup(n: int, q: int, f: int):
+    from repro.dist.gnn_parallel import DistMeta
+    from repro.graph import partition_graph
+    from repro.graph.synthetic import citation_graph
+    from repro.nn import GNNConfig, init_gnn
+
+    g = citation_graph(n=n, feat_dim=f, seed=0)
+    cfg = GNNConfig(conv="sage", in_dim=f, hidden=128,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, q, scheme="random")
+    graph = pg.device_arrays()
+    return (cfg, params, pg, graph,
+            DistMeta.build(pg, params),
+            DistMeta.build(pg, params, wire="packed"))
+
+
+def _time_exchange(graph, meta, policy, compressor, rate, key) -> float:
+    """Median us of one jitted forward aggregation (layer-0 exchange)."""
+    from repro.dist.gnn_parallel import _make_aggregate_emulated
+
+    @jax.jit
+    def once(x):
+        agg = _make_aggregate_emulated(graph, meta, policy, compressor,
+                                       rate, key)
+        out, bits = agg(0, x)
+        return out
+
+    t = StepTimer()
+    t.measure(once, graph["features"])
+    return t.us_per_call
+
+
+def main(quick: bool = True) -> dict:
+    from repro.core import FULL_COMM, fixed
+
+    n = 2000 if quick else 8000
+    qs = [4] if quick else [4, 8, 16]
+    fs = [256, 512] if quick else [256, 512, 1024]
+    rows = []
+    t0 = time.time()
+    worst_ratio = 0.0
+    for q in qs:
+        for f in fs:
+            cfg, params, pg, graph, meta_d, meta_p = _setup(n, q, f)
+            for rate in RATES:
+                pol = FULL_COMM if rate == 1.0 \
+                    else fixed(rate, compressor="blockmask")
+                comp = pol.compressor() if pol.compresses else None
+                width = meta_p.packed_width(f, rate)
+                dense_mb = float(meta_d.transport_bits(f)) / 8e6
+                packed_mb = float(meta_p.transport_bits(f, rate)) / 8e6
+                bound = 1.0 / rate + 128.0 / f
+                us_d = _time_exchange(graph, meta_d, pol, comp,
+                                      jnp.asarray(rate), jax.random.key(1))
+                us_p = _time_exchange(graph, meta_p, pol, comp, rate,
+                                      jax.random.key(1))
+                ratio = packed_mb / dense_mb
+                worst_ratio = max(worst_ratio, ratio - bound)
+                rows.append({
+                    "q": q, "f": f, "rate": rate, "wire_cols": width,
+                    "analytic_mb": round(
+                        float(meta_d.ledger_bits(f, rate)) / 8e6, 4),
+                    "dense_transport_mb": round(dense_mb, 4),
+                    "packed_transport_mb": round(packed_mb, 4),
+                    "dense_buffer_mb": round(
+                        graph["send_idx"].size * f * 4 / 1e6, 4),
+                    "packed_buffer_mb": round(
+                        graph["send_idx"].size * width * 4 / 1e6, 4),
+                    "packed_over_dense": round(ratio, 4),
+                    "bound": round(bound, 4),
+                    "dense_us": round(us_d, 1),
+                    "packed_us": round(us_p, 1),
+                })
+    save_rows("halo_exchange", rows)
+    return {"name": "halo_exchange",
+            "us_per_call": 1e6 * (time.time() - t0) / max(len(rows), 1),
+            "derived": f"rows={len(rows)}|worst_ratio_minus_bound="
+                       f"{worst_ratio:.4f}"}
+
+
+# ---------------------------------------------------------------------------
+# --smoke acceptance checks
+# ---------------------------------------------------------------------------
+
+_SHARD_PARITY = """
+import jax, jax.numpy as jnp
+from repro.graph import tiny_graph, partition_graph
+from repro.nn import GNNConfig, init_gnn
+from repro.dist.gnn_parallel import (DistMeta, make_train_step,
+                                     make_worker_mesh, shard_graph)
+from repro.core import FULL_COMM
+from repro.train.optim import adamw
+
+g = tiny_graph(n=256, feat_dim=256)
+cfg = GNNConfig(conv='sage', in_dim=256, hidden=128,
+                out_dim=g.num_classes, layers=2)
+params = init_gnn(jax.random.key(0), cfg)
+pg = partition_graph(g, 4, scheme='random')
+graph = pg.device_arrays()
+opt = adamw(1e-2)
+mesh = make_worker_mesh(4)
+gs = shard_graph(graph, mesh)
+outs = []
+for wire in ('dense', 'packed'):
+    meta = DistMeta.build(pg, params, wire=wire)
+    p, s = params, opt.init(params)
+    step = make_train_step(cfg, FULL_COMM, opt, meta, mesh=mesh)
+    for i in range(3):
+        p, s, m = step(p, s, gs, jnp.asarray(i), jax.random.key(i))
+    outs.append(p)
+d = max(float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])))
+assert d < 1e-5, d
+print('SHARD_PARITY_OK', d)
+"""
+
+
+def smoke() -> None:
+    from repro.core import FULL_COMM
+    from repro.dist.gnn_parallel import DistMeta, make_train_step
+    from repro.graph import partition_graph, tiny_graph
+    from repro.nn import GNNConfig, init_gnn
+    from repro.train.optim import adamw
+
+    # 1. wire-volume bound at every (f, rate) the criteria name
+    for f in (256, 512, 1024):
+        cfg, params, pg, graph, meta_d, meta_p = _setup(1000, 4, f)
+        dense = float(meta_d.transport_bits(f))
+        for rate in (2.0, 4.0, 16.0):
+            packed = float(meta_p.transport_bits(f, rate))
+            bound = (1.0 / rate + 128.0 / f) * dense
+            assert packed <= bound + 1e-6, (f, rate, packed, bound)
+            print(f"wire volume ok: F={f} r={rate:g}  packed/dense="
+                  f"{packed / dense:.3f} <= bound {bound / dense:.3f}")
+
+    # 2. packed rate-1 training == dense full comm (emulated backend)
+    g = tiny_graph(n=256, feat_dim=256)
+    cfg = GNNConfig(conv="sage", in_dim=256, hidden=128,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, 4, scheme="random")
+    graph = pg.device_arrays()
+    opt = adamw(1e-2)
+    outs = []
+    for wire in ("dense", "packed"):
+        meta = DistMeta.build(pg, params, wire=wire)
+        p, s = params, opt.init(params)
+        step = make_train_step(cfg, FULL_COMM, opt, meta)
+        for i in range(3):
+            p, s, _ = step(p, s, graph, jnp.asarray(i), jax.random.key(i))
+        outs.append(p)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                            jax.tree_util.tree_leaves(outs[1])))
+    assert d < 1e-5, d
+    print(f"emulated rate-1 parity ok: max param diff {d:.2e}")
+
+    # 3. same on the shard_map backend (subprocess: 4 virtual devices)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", _SHARD_PARITY], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:{out.stderr}"
+    print(f"shard_map rate-1 parity ok: {out.stdout.strip()}")
+    print("SMOKE_OK")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--smoke", action="store_true",
+                     help="acceptance checks: wire-volume bound + rate-1 "
+                          "training parity on both backends (~2 min)")
+    grp.add_argument("--full", action="store_true",
+                     help="paper-scale sweep (bigger graphs, more Q/F)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print(main(quick=not args.full))

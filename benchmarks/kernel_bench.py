@@ -49,6 +49,20 @@ def main(quick: bool = True) -> dict:
                  "ref_us": round(t_ref.us_per_call, 1),
                  "max_err": float(jnp.abs(xt - expect).max())})
 
+    # packed wire path (runtime integration: wire_pack -> wire_unpack with
+    # custom VJP; Pallas on TPU, ref oracle here).  max_err compares against
+    # the dense blockmask round trip the packed exchange must match bitwise;
+    # the shape column records the on-wire width reduction.
+    from repro.core.compression import get_compressor
+    t_ref = StepTimer()
+    wired = t_ref.measure(jax.jit(lambda a: ops.wire_unpack(
+        ops.wire_pack(a, kept, inv), kept, inv)), x)
+    dense, _ = get_compressor("blockmask")(jax.random.key(0), x, 4.0)
+    rows.append({"kernel": "wire_pack+unpack",
+                 "shape": f"{n}x{f}->wire {n}x{kept.shape[0] * 128}",
+                 "ref_us": round(t_ref.us_per_call, 1),
+                 "max_err": float(jnp.abs(wired - dense).max())})
+
     # ell spmm
     ns, nd, kk, ff = (2048, 512, 16, 256) if quick else (16384, 4096, 32, 512)
     xs = jnp.asarray(rng.normal(0, 1, (ns, ff)), jnp.float32)

@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.prop1_neighborhood",
     "benchmarks.transformer_comm",
     "benchmarks.kernel_bench",
+    "benchmarks.halo_exchange",
     "benchmarks.roofline",
 ]
 

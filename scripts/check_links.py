@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker (the CI docs job).
+
+Scans the repo's curated docs for ``[text](target)`` links and fails if a
+relative target doesn't exist on disk, or an in-page ``#anchor`` doesn't
+match any heading (GitHub slug rules).  External ``http(s)://`` / ``mailto:``
+targets are ignored — CI must not depend on the network.
+
+Usage: python scripts/check_links.py [files...]   (defaults to the doc set)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md",
+                 "benchmarks/README.md"]
+
+# [text](target) — ignore images' leading '!' (still checked) and code spans
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, spaces→'-'."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    heading = re.sub(r"[^\w\- ]", "", heading.lower())
+    return heading.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_file(md_path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(md_path)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    # strip fenced code blocks — links inside them are examples, not refs
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            resolved = os.path.normpath(os.path.join(base, path_part))
+            if not os.path.exists(resolved):
+                errors.append(f"{md_path}: broken link target {target!r}")
+                continue
+            anchor_file = resolved
+        else:
+            anchor_file = md_path
+        if anchor and os.path.isfile(anchor_file) \
+                and anchor_file.endswith(".md"):
+            if slugify(anchor) not in anchors_of(anchor_file):
+                errors.append(f"{md_path}: missing anchor {target!r}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = argv or [os.path.join(REPO, f) for f in DEFAULT_FILES]
+    errors, checked = [], 0
+    for f in files:
+        if not os.path.exists(f):
+            errors.append(f"missing doc file: {f}")
+            continue
+        checked += 1
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"check_links: {checked} files, "
+          f"{'FAILED' if errors else 'ok'} ({len(errors)} errors)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

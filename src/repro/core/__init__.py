@@ -3,15 +3,17 @@ collectives and the communication policy/ledger (the paper's primary
 contribution, as a composable JAX module)."""
 
 from .compression import (Compressed, Compressor, available_compressors,
-                          get_compressor, int8_compressor,
-                          random_mask_compressor, topk_compressor)
+                          block_mask_compressor, get_compressor,
+                          int8_compressor, random_mask_compressor,
+                          topk_compressor)
 from .schedulers import (Scheduler, constant, cosine, exponential, fixed_step,
                          linear)
 from .varco import (FULL_COMM, NO_COMM, CommLedger, CommPolicy, fixed, varco)
 
 __all__ = [
-    "Compressed", "Compressor", "available_compressors", "get_compressor",
-    "int8_compressor", "random_mask_compressor", "topk_compressor",
+    "Compressed", "Compressor", "available_compressors",
+    "block_mask_compressor", "get_compressor", "int8_compressor",
+    "random_mask_compressor", "topk_compressor",
     "Scheduler", "constant", "cosine", "exponential", "fixed_step", "linear",
     "FULL_COMM", "NO_COMM", "CommLedger", "CommPolicy", "fixed", "varco",
 ]

@@ -12,6 +12,11 @@ become dense collectives over a mesh axis (see DESIGN.md §3).  Byte
 accounting nevertheless charges only the *useful* traffic (compressed
 payload × peers), matching how the paper counts communicated floats rather
 than transport-level padding.
+
+:func:`packed_all_gather` is the exception that actually shrinks the bytes
+on the wire: it gathers the ``[B, K·128]`` lane-block-packed payload instead
+of the masked dense block, and its bit count is the *transport* charge — the
+buffer physically shipped (DESIGN.md §3.3).
 """
 
 from __future__ import annotations
@@ -55,6 +60,62 @@ def compressed_all_gather(x: Array, axis_name: str, *, compressor: Compressor,
     gathered = lax.all_gather(x_tilde, axis_name, axis=axis, tiled=tiled)
     wire_bits = lax.psum(bits, axis_name) * (q - 1)
     return gathered, wire_bits
+
+
+def packed_all_gather(x: Array, axis_name: str, *, key: Array,
+                      rate: float | None = None,
+                      n_keep: int | None = None) -> tuple[Array, Array]:
+    """All-gather of *packed* boundary activations (DESIGN.md §3.3).
+
+    The real reduced-volume wire path: where :func:`compressed_all_gather`
+    ships the dense ``[B, F]`` block with dropped entries zeroed (compression
+    is ledger accounting only), this packs the kept lane-blocks first so only
+    the ``[B, K·128]`` payload crosses the wire, ``K = max(floor((F/128)/r),
+    1)``.  Sender packs with :func:`repro.kernels.ops.wire_pack` (Pallas on
+    TPU, the jnp ``ref`` oracle elsewhere); every receiver re-derives all
+    workers' kept/inverse maps from the shared ``key`` — fold_in(worker)
+    exactly as the dense path draws its masks — and unpacks, zero-filling
+    dropped blocks.  No index metadata travels (paper App. A); the values
+    equal the dense ``blockmask`` round trip bitwise.
+
+    The kept-block count ``K`` shapes the wire buffer, so it must be static:
+    pass either ``n_keep`` directly (how the runtime calls it — the rate may
+    then stay a traced operand elsewhere in the step) or a static python
+    ``rate``, which quantises to ``K = max(floor((F/128)/rate), 1)``.
+    ``x.shape[-1]`` must be a multiple of 128.
+
+    Returns ``(gathered [Q, B, F], collective_bits)``.  ``collective_bits``
+    counts the buffer the collective physically moves — every worker's
+    packed payload, halo-padding rows included, crossing to ``Q - 1`` peers
+    (identical on all workers).  Note this is a *collective-level* count;
+    the runtime ledger's ``transport_bits`` charge is the point-to-point
+    equivalent ``halo_demand × K·128`` instead, so the two are comparable
+    across wire formats (DESIGN.md §3.2–3.3).
+    """
+    from repro.kernels.ops import wire_pack, wire_unpack
+    from repro.kernels.varco_pack import LANE, block_mask_indices_k
+
+    f = x.shape[-1]
+    if f % LANE:
+        raise ValueError(f"packed wire needs F % {LANE} == 0, got F={f}")
+    q = _axis_size(axis_name)
+    n_blocks = f // LANE
+    if n_keep is None:
+        if rate is None:
+            raise ValueError("pass n_keep or a static rate")
+        n_keep = max(int(n_blocks / max(float(rate), 1.0)), 1)
+    # every worker's (kept, inv) pair from the shared key — receivers need
+    # all of them to decode the gathered buffer
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
+    kept_all, inv_all = jax.vmap(
+        lambda k: block_mask_indices_k(k, n_blocks, n_keep))(keys)
+    idx = lax.axis_index(axis_name)
+    packed = wire_pack(x, kept_all[idx], inv_all[idx])     # [B, K*128]
+    gathered = lax.all_gather(packed, axis_name)           # [Q, B, K*128]
+    halo = jax.vmap(wire_unpack)(gathered, kept_all, inv_all)
+    payload = packed.size * jnp.finfo(packed.dtype).bits
+    wire_bits = jnp.asarray(payload * q * (q - 1), jnp.float32)
+    return halo, wire_bits
 
 
 def compressed_psum(x, axis_name: str, *, compressor: Compressor,

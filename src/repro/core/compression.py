@@ -18,6 +18,13 @@ paper's "random key generator is shared a priori".
 
 Beyond-paper compressors implementing the same interface:
 
+* ``blockmask`` — the TPU-native lane-block variant of the paper mask: the
+  shared PRNG keeps ``K = (F/128)/r`` whole 128-lane feature blocks.  Its
+  kept set is bitwise identical to
+  :func:`repro.kernels.varco_pack.block_mask_indices`, so the dense
+  round-trip here equals the **packed wire path** (pack → all-gather →
+  unpack, DESIGN.md §3.3) value-for-value — this compressor is the dense
+  reference the packed transport is tested against.
 * ``topk``      — magnitude top-k per row (needs index metadata: accounted).
 * ``int8``      — per-row affine int8 quantisation (r = 4 for f32 payloads).
 * ``randmask_unbiased`` — paper mask rescaled by ``r`` so that
@@ -148,6 +155,53 @@ def random_mask_compressor(unbiased: bool = False) -> Compressor:
     return Compressor(name, partial(_random_mask, unbiased=unbiased), eps2)
 
 
+# -- lane-block mask (the packed-wire mechanism, dense round-trip form) ------
+
+
+LANE = 128
+
+
+def _block_mask(key: Array, x: Array, rate: Array) -> tuple[Array, Array]:
+    """Keep ``K = max(floor((F/128)/rate), 1)`` whole 128-lane blocks.
+
+    The kept set derives from ``jax.random.permutation(key, F/128)`` exactly
+    as :func:`repro.kernels.varco_pack.block_mask_indices` does, so for the
+    same key this round trip is bitwise identical to the packed wire path
+    (``wire_unpack(wire_pack(x))``).  ``rate`` may be traced: the block
+    *count* is computed with jnp arithmetic, only shapes stay static.
+
+    Requires ``x.shape[-1] % 128 == 0`` — this is an activation-wire
+    compressor; feature widths off the lane grid cannot ride the packed
+    wire either.
+    """
+    f = x.shape[-1]
+    if f % LANE:
+        raise ValueError(
+            f"blockmask needs a feature width divisible by {LANE}, got {f}; "
+            "use 'randmask' for off-lane-grid payloads")
+    nb = f // LANE
+    rate = jnp.maximum(jnp.asarray(rate, jnp.float32), 1.0)
+    # floor matches block_mask_indices' int() truncation for positive values
+    k = jnp.maximum(jnp.floor(nb / rate), 1.0)
+    perm = jax.random.permutation(key, nb)
+    pos = jnp.zeros((nb,), jnp.int32).at[perm].set(
+        jnp.arange(nb, dtype=jnp.int32))
+    keep = pos < k                                   # block b kept iff its
+    xb = x.reshape(x.shape[:-1] + (nb, LANE))        # permutation slot < K
+    x_tilde = jnp.where(keep[:, None], xb, jnp.zeros((), x.dtype))
+    x_tilde = x_tilde.reshape(x.shape)
+    rows = x.size // f
+    bits = k * LANE * rows * _nbits(x.dtype)
+    return x_tilde, jnp.asarray(bits, jnp.float32)
+
+
+def block_mask_compressor() -> Compressor:
+    # block-granular subsetting of exchangeable coordinates keeps the
+    # element-mask error envelope: eps^2(r) = 1 - 1/r (DESIGN.md §3.3)
+    return Compressor("blockmask", _block_mask,
+                      lambda r: 1.0 - 1.0 / jnp.maximum(r, 1.0))
+
+
 # -- magnitude top-k ---------------------------------------------------------
 
 
@@ -233,6 +287,7 @@ def straight_through(compress_fn):
 _REGISTRY: dict[str, Callable[[], Compressor]] = {
     "randmask": random_mask_compressor,
     "randmask_unbiased": partial(random_mask_compressor, unbiased=True),
+    "blockmask": block_mask_compressor,
     "topk": topk_compressor,
     "int8": int8_compressor,
 }

@@ -115,16 +115,38 @@ def varco(total_steps: int, slope: float = 5.0, c_max: float = 128.0,
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class CommLedger:
-    """Cumulative wire-traffic counter (floats & bits), a jit-safe pytree."""
+    """Cumulative wire-traffic counter (floats & bits), a jit-safe pytree.
+
+    Two parallel counters (DESIGN.md §3.3):
+
+    * ``bits`` — the *analytic* point-to-point charge: the compressed
+      payload a pairwise implementation would ship (``halo_demand × F × 32
+      / rate`` per halo exchange).  This is the paper's Fig. 5 axis.
+    * ``transport`` — the bits *actually shipped* by the wire format in use:
+      the dense collective moves the full masked buffer regardless of rate,
+      while the packed wire moves the ``K·128``-wide lane-block payload.
+      ``transport == bits`` exactly for the packed wire at rate 1.
+
+    Example::
+
+        ledger = CommLedger.zero()
+        ledger = ledger.add_bits(analytic, transport=shipped)
+        print(float(ledger.floats), float(ledger.transport_gigabytes))
+    """
 
     bits: jnp.ndarray
+    transport: jnp.ndarray
 
     @staticmethod
     def zero() -> "CommLedger":
-        return CommLedger(jnp.zeros((), jnp.float32))
+        return CommLedger(jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.float32))
 
-    def add_bits(self, bits) -> "CommLedger":
-        return CommLedger(self.bits + bits)
+    def add_bits(self, bits, transport=None) -> "CommLedger":
+        """Charge one exchange: analytic ``bits`` plus the transport-level
+        count (defaults to ``bits`` — exact for uncompressed dense wires)."""
+        t = bits if transport is None else transport
+        return CommLedger(self.bits + bits, self.transport + t)
 
     @property
     def floats(self) -> jnp.ndarray:
@@ -135,8 +157,13 @@ class CommLedger:
     def gigabytes(self) -> jnp.ndarray:
         return self.bits / 8.0 / 1e9
 
+    @property
+    def transport_gigabytes(self) -> jnp.ndarray:
+        """GB physically shipped by the active wire format."""
+        return self.transport / 8.0 / 1e9
+
     def tree_flatten(self):
-        return (self.bits,), None
+        return (self.bits, self.transport), None
 
     @classmethod
     def tree_unflatten(cls, _, children):

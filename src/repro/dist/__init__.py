@@ -6,7 +6,9 @@ Three modules, one per distribution style (DESIGN.md §2):
 
 * ``gnn_parallel``  — the paper's Algorithm 1 over a ``workers`` mesh axis:
   each worker owns one graph partition and exchanges compressed halo
-  activations every layer.
+  activations every layer.  Two wire formats (``DistMeta.wire``): the dense
+  masked all-gather, and the packed ``[B, K·128]`` lane-block exchange
+  backed by the varco_pack Pallas kernels (DESIGN.md §3.3).
 * ``sharding``      — GSPMD mesh/sharding rules (param placement, activation
   constraints, KV-cache layout) for the transformer dry-run/serve stack.
 * ``grad_compress`` — VARCO applied to data-parallel gradient all-reduce,

@@ -23,16 +23,30 @@ Both draw per-worker compression masks from ``fold_in(key, worker_index)``
 of a per-exchange key, so the emulated and shard_map runs are *bitwise
 identical* (tests/test_multidevice.py pins this).
 
-Ledger accounting (paper Fig. 5 axis): every exchange charges the analytic
-``halo_demand × F × 32 / rate`` bits — the activations a point-to-point
-implementation would ship, not the transport-level padding of the dense
-collective (DESIGN.md §3.2).  A train step charges twice the forward traffic
-(activations forward + their cotangents backward).
+Wire formats (``DistMeta.wire``, DESIGN.md §3.3): ``"dense"`` all-gathers
+the masked ``[B, F]`` boundary block — compression shrinks the ledger, not
+the buffer; ``"packed"`` ships only the kept lane-blocks (``[B, K·128]``,
+via :func:`repro.core.collectives.packed_all_gather` / the varco_pack
+kernels), so the wire volume itself drops with the rate.  Both formats draw
+the same per-worker masks, so packed and dense-``blockmask`` runs agree
+bitwise; the packed wire's buffer shape is set by the static kept-block
+counts, which each step quantises from the schedule outside jit (bounded
+recompiles — see :func:`make_train_step`).
+
+Ledger accounting (paper Fig. 5 axis): every exchange charges two numbers,
+``[analytic, transport]``.  Analytic is ``halo_demand × F × 32 / rate``
+bits — the activations a point-to-point implementation would ship.
+Transport is what the active wire format actually ships per needed boundary
+row: the full ``F`` columns on the dense wire (zeros travel too), the
+``K·128`` packed columns on the packed wire (DESIGN.md §3.2–3.3).  A train
+step charges twice the forward traffic (activations forward + their
+cotangents backward).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 
 import jax
@@ -42,14 +56,17 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.collectives import compressed_all_gather
+from repro.core.collectives import compressed_all_gather, packed_all_gather
 from repro.core.compression import Compressor
 from repro.core.varco import FULL_COMM, CommPolicy
 from repro.graph.partition import PartitionedGraph
+from repro.kernels.ops import wire_pack, wire_unpack
+from repro.kernels.varco_pack import LANE, block_mask_indices_k
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
 from repro.train.optim import Optimizer, apply_updates
 
 AXIS = "workers"
+WIRES = ("dense", "packed")
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +82,16 @@ class DistMeta:
     (requesting partition, remote node) pairs whose activations must cross
     the wire each exchange.  Split sizes are *global* so per-worker losses
     normalise identically (``psum(local grads) == full gradient``).
+
+    ``wire`` selects the halo-exchange transport (DESIGN.md §3.3):
+    ``"dense"`` ships the masked ``[B, F]`` block, ``"packed"`` ships only
+    the kept ``[B, K·128]`` lane-blocks via the varco_pack kernels.
+
+    Example::
+
+        pg = partition_graph(g, q=8, scheme="random")
+        meta = DistMeta.build(pg, params, wire="packed")
+        step = make_train_step(cfg, policy, opt, meta)
     """
 
     q: int
@@ -79,9 +106,26 @@ class DistMeta:
     n_val: int
     n_test: int
     layer_dims: tuple[int, ...]
+    wire: str = "dense"
+
+    def __post_init__(self):
+        if self.wire not in WIRES:
+            raise ValueError(f"wire must be one of {WIRES}, got {self.wire!r}")
+        if self.wire == "packed":
+            # halo exchanges happen at each layer's *input* width, which is
+            # what layer_dims records (sage exchanges once per layer, poly
+            # once per extra tap — same widths)
+            for f in {self.feat_dim, *self.layer_dims}:
+                if f % LANE:
+                    raise ValueError(
+                        f"packed wire needs every exchanged feature width "
+                        f"divisible by {LANE}, got {f} (exchanged widths: "
+                        f"{sorted({self.feat_dim, *self.layer_dims})}); "
+                        f"use wire='dense' for off-lane-grid models")
 
     @staticmethod
-    def build(pg: PartitionedGraph, params: dict) -> "DistMeta":
+    def build(pg: PartitionedGraph, params: dict,
+              wire: str = "dense") -> "DistMeta":
         dims = []
         for layer in params["layers"]:
             if "self" in layer:                       # sage
@@ -96,12 +140,32 @@ class DistMeta:
             n_train=int(pg.train_mask.sum()),
             n_val=int(pg.val_mask.sum()),
             n_test=int(pg.test_mask.sum()),
-            layer_dims=tuple(dims))
+            layer_dims=tuple(dims), wire=wire)
 
     def ledger_bits(self, feat: int, rate=1.0) -> jnp.ndarray:
         """Analytic wire bits of one halo exchange at feature width ``feat``."""
         return jnp.asarray(self.halo_demand * feat * 32.0, jnp.float32) / \
             jnp.asarray(rate, jnp.float32)
+
+    def packed_width(self, feat: int, rate: float = 1.0) -> int:
+        """Columns of the packed wire payload: ``K·128`` with ``K =
+        max(floor((feat/128)/rate), 1)`` (matches ``block_mask_indices``).
+        ``rate`` must be static; ``feat % 128 == 0``."""
+        if feat % LANE:
+            raise ValueError(f"packed wire needs feat % {LANE} == 0, "
+                             f"got {feat}")
+        n_blocks = feat // LANE
+        return max(int(n_blocks / max(float(rate), 1.0)), 1) * LANE
+
+    def transport_bits(self, feat: int, rate: float = 1.0) -> jnp.ndarray:
+        """Bits the active wire format actually ships per halo exchange,
+        charged per needed boundary row (same point-to-point ``halo_demand``
+        unit as :meth:`ledger_bits`): the full ``feat`` columns on the dense
+        wire — dropped entries travel as zeros — vs the ``K·128`` packed
+        columns.  Equals ``ledger_bits`` at rate 1 on the packed wire."""
+        width = self.packed_width(feat, rate) if self.wire == "packed" \
+            else feat
+        return jnp.asarray(self.halo_demand * width * 32.0, jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +174,14 @@ class DistMeta:
 
 
 def make_worker_mesh(q: int) -> Mesh:
-    """1-D ``workers`` mesh over the first ``q`` local devices."""
+    """1-D ``workers`` mesh over the first ``q`` local devices.
+
+    Example (8 virtual CPU devices)::
+
+        # XLA_FLAGS=--xla_force_host_platform_device_count=8
+        mesh = make_worker_mesh(8)
+        step = make_train_step(cfg, policy, opt, meta, mesh=mesh)
+    """
     devs = jax.devices()
     if len(devs) < q:
         raise ValueError(f"need {q} devices for a worker mesh, have "
@@ -120,7 +191,12 @@ def make_worker_mesh(q: int) -> Mesh:
 
 
 def shard_graph(graph: dict, mesh: Mesh) -> dict:
-    """Place the ``[Q, ...]`` graph pytree over the ``workers`` axis."""
+    """Place the ``[Q, ...]`` graph pytree over the ``workers`` axis.
+
+    Example::
+
+        graph = shard_graph(pg.device_arrays(), make_worker_mesh(pg.q))
+    """
     sharding = NamedSharding(mesh, P(AXIS))
     return {k: jax.device_put(v, sharding) for k, v in graph.items()}
 
@@ -154,16 +230,52 @@ def _local_w_for(graph: dict, policy: CommPolicy, rate):
     return lw + mix * (graph["local_w_iso"] - lw)
 
 
+def _exchange_bits(meta: DistMeta, f: int, rate,
+                   wire_width: int | None = None) -> jnp.ndarray:
+    """Per-exchange ledger charge ``[analytic, transport]`` (module docs).
+    ``wire_width`` is the static on-wire column count — ``K·128`` on the
+    packed wire, the full ``f`` (dense buffer) when ``None``."""
+    transport = meta.halo_demand * (f if wire_width is None
+                                    else wire_width) * 32.0
+    return jnp.stack([meta.ledger_bits(f, rate),
+                      jnp.asarray(transport, jnp.float32)])
+
+
+def _keep_of(f: int, rate, packed_k: dict | None) -> int:
+    """Static kept-block count for a packed exchange at width ``f``: from
+    the quantised ``packed_k`` map when the rate is traced (train steps),
+    else derived from a concrete rate directly (tests / eval call sites)."""
+    n_blocks = f // LANE
+    if packed_k is not None:
+        return packed_k[n_blocks]
+    return max(int(n_blocks / max(float(rate), 1.0)), 1)
+
+
+def _packed_k_for(meta: DistMeta, rate_f: float) -> tuple:
+    """Quantise a concrete rate to the kept-block count of every exchanged
+    width (``layer_dims`` = each layer's input width) — the *only* static
+    fact the packed wire needs per step, so an annealing schedule triggers
+    at most ``Π n_blocks`` recompiles (a handful) instead of one per
+    distinct rate value."""
+    nbs = sorted({d // LANE for d in (meta.feat_dim, *meta.layer_dims)})
+    return tuple((nb, max(int(nb / max(rate_f, 1.0)), 1)) for nb in nbs)
+
+
 def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
-                             compressor: Compressor | None, rate, key):
+                             compressor: Compressor | None, rate, key,
+                             packed_k: dict | None = None):
     """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
 
     Numerically identical to the shard_map path: the all-gather becomes a
     reshape of the per-partition published blocks, and compression draws the
     worker-``i`` mask from ``fold_in(per-exchange key, i)`` exactly as
-    ``compressed_all_gather`` does on device ``i``.
+    ``compressed_all_gather`` does on device ``i``.  On the packed wire the
+    same keys select the kept lane-blocks, and the wire payload is
+    materialised through ``wire_pack``/``wire_unpack`` so the emulation
+    exercises the real pack→ship→unpack round trip.
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
+    packed_wire = meta.wire == "packed"
     calls = itertools.count()
 
     def aggregate(li, x):                              # x: [Q, P, F]
@@ -176,11 +288,23 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                            .at[ld].add(w[:, None] * xq[ls])[:p_sz])(
                 x, graph["local_dst"], graph["local_src"],
                 graph["local_w_iso"])
-            return agg, jnp.zeros((), jnp.float32)
+            return agg, jnp.zeros((2,), jnp.float32)
 
         sent = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
             x, graph["send_idx"], graph["send_valid"])  # [Q, B, F]
-        if compressor is not None:
+        wire_width = None
+        if packed_wire:
+            n_keep = _keep_of(f, rate, packed_k)
+            wire_width = n_keep * LANE
+            k_call = jax.random.fold_in(key, call)
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                k_call, jnp.arange(q))
+            kept, inv = jax.vmap(
+                lambda kk: block_mask_indices_k(kk, f // LANE, n_keep))(
+                keys)
+            packed = jax.vmap(wire_pack)(sent, kept, inv)   # the wire buffer
+            sent = jax.vmap(wire_unpack)(packed, kept, inv)
+        elif compressor is not None:
             k_call = jax.random.fold_in(key, call)
             keys = jax.vmap(jax.random.fold_in, (None, 0))(
                 k_call, jnp.arange(q))
@@ -198,16 +322,24 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         agg = jax.vmap(part, (0, 0, 0, 0, 0, 0, 0))(
             x, graph["local_dst"], graph["local_src"], local_w,
             graph["remote_dst"], graph["remote_src"], graph["remote_w"])
-        return agg, meta.ledger_bits(f, rate)
+        return agg, _exchange_bits(meta, f, rate, wire_width)
 
     return aggregate
 
 
 def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                           compressor: Compressor | None, rate, key,
-                          axis: str = AXIS):
-    """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``)."""
+                          axis: str = AXIS, packed_k: dict | None = None):
+    """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``).
+
+    Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
+    communication).  Packed wire: :func:`packed_all_gather`, which ships the
+    ``[B, K·128]`` lane-block payload; the per-worker masks derive from the
+    same ``fold_in`` streams as the emulated path, so both backends agree
+    bitwise.
+    """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
+    packed_wire = meta.wire == "packed"
     calls = itertools.count()
 
     def aggregate(li, x):                              # x: [1, P, F]
@@ -219,10 +351,17 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             out = jnp.zeros((p_sz + 1, f), x.dtype)
             out = out.at[graph["local_dst"][0]].add(
                 graph["local_w_iso"][0][:, None] * xq[graph["local_src"][0]])
-            return out[:p_sz][None], jnp.zeros((), jnp.float32)
+            return out[:p_sz][None], jnp.zeros((2,), jnp.float32)
 
         sent = xq[graph["send_idx"][0]] * graph["send_valid"][0][:, None]
-        if compressor is not None:
+        wire_width = None
+        if packed_wire:
+            n_keep = _keep_of(f, rate, packed_k)
+            wire_width = n_keep * LANE
+            k_call = jax.random.fold_in(key, call)
+            halo, _ = packed_all_gather(sent, axis, n_keep=n_keep,
+                                        key=k_call)
+        elif compressor is not None:
             k_call = jax.random.fold_in(key, call)
             halo, _ = compressed_all_gather(sent, axis, compressor=compressor,
                                             rate=rate, key=k_call)
@@ -236,7 +375,7 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             xq[graph["local_src"][0]])
         out = out.at[graph["remote_dst"][0]].add(
             graph["remote_w"][0][:, None] * halo[graph["remote_src"][0]])
-        return out[:p_sz][None], meta.ledger_bits(f, rate)
+        return out[:p_sz][None], _exchange_bits(meta, f, rate, wire_width)
 
     return aggregate
 
@@ -269,66 +408,124 @@ def _pmean_inexact(tree, axis: str):
         if jnp.issubdtype(t.dtype, jnp.inexact) else t, tree)
 
 
+def _step_metrics(loss, rate, bits) -> dict:
+    """Common step metrics: ``bits`` is the forward ``[analytic, transport]``
+    pair; a train step ships it twice (activations + cotangents)."""
+    return {"loss": loss, "rate": jnp.asarray(rate, jnp.float32),
+            "halo_bits": 2.0 * bits[0], "transport_bits": 2.0 * bits[1]}
+
+
 def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                     meta: DistMeta, mesh: Mesh | None = None,
                     sync: str = "grad"):
     """One full-batch step of Algorithm 1.
 
     ``step(params, opt_state, graph, step_idx, key)`` ->
-    ``(params, opt_state, {loss, rate, halo_bits})``.
+    ``(params, opt_state, {loss, rate, halo_bits, transport_bits})``.
 
     ``mesh=None`` runs the single-device emulation over ``[Q, ...]`` stacks;
     with a ``workers`` mesh the same program runs under ``shard_map`` with
     real collectives.  ``sync``: ``'grad'`` psums gradients (exact
     centralized step), ``'fedavg'`` applies local updates then averages
     parameters (Algorithm 1's server step).
+
+    ``meta.wire == "packed"`` runs the reduced-volume packed halo exchange.
+    The packed payload's shape depends only on the kept-block counts, so
+    each call quantises the schedule's rate to that static map outside jit
+    (:func:`_packed_k_for`) while the rate itself stays a traced operand —
+    a continuously-annealing VARCO schedule recompiles once per distinct
+    kept-block map (at most ``Π (width/128)`` times, a handful), not per
+    rate value.  A compressing policy must then use the ``blockmask``
+    compressor (the packed wire realises exactly that mechanism).
+
+    Example::
+
+        step = make_train_step(cfg, varco(300, compressor="blockmask"),
+                               adamw(5e-3), meta, mesh=None)
+        params, opt_state, m = step(params, opt_state, graph, 0,
+                                    jax.random.key(0))
     """
     if sync not in ("grad", "fedavg"):
         raise ValueError(f"sync must be 'grad' or 'fedavg', got {sync!r}")
+    packed_wire = meta.wire == "packed"
+    if packed_wire and policy.compresses and \
+            policy.compressor_name != "blockmask":
+        raise ValueError(
+            f"the packed wire ships PRNG-selected lane-blocks; a compressing "
+            f"policy must use the 'blockmask' compressor, got "
+            f"{policy.compressor_name!r}")
     compressor = policy.compressor() if policy.compresses else None
 
     if mesh is None:
-        @jax.jit
-        def step(params, opt_state, graph, step_idx, key):
+        @functools.partial(jax.jit, static_argnames=("packed_k",))
+        def _jit_step(params, opt_state, graph, step_idx, key,
+                      packed_k=None):
             rate = policy.rate(step_idx)
 
             def loss_fn(p):
-                agg = _make_aggregate_emulated(graph, meta, policy,
-                                               compressor, rate, key)
+                agg = _make_aggregate_emulated(
+                    graph, meta, policy, compressor, rate, key,
+                    packed_k=dict(packed_k) if packed_k else None)
                 return _local_loss_fn(p, cfg, graph, agg, meta)
 
             (loss, bits), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params)
             updates, new_state = opt.update(grads, opt_state, params)
             new_params = apply_updates(params, updates)
-            return new_params, new_state, {"loss": loss, "rate": rate,
-                                           "halo_bits": 2.0 * bits}
+            return new_params, new_state, _step_metrics(loss, rate, bits)
+
+        if not packed_wire:
+            return _jit_step
+
+        def step(params, opt_state, graph, step_idx, key):
+            kb = _packed_k_for(meta, float(policy.rate(int(step_idx))))
+            return _jit_step(params, opt_state, graph, step_idx, key,
+                             packed_k=kb)
 
         return step
 
-    def worker(params, opt_state, gblk, rate, key):
-        def loss_fn(p):
-            agg = _make_aggregate_shard(gblk, meta, policy, compressor,
-                                        rate, key)
-            return _local_loss_fn(p, cfg, gblk, agg, meta)
+    def make_worker(packed_k: dict | None):
+        def worker(params, opt_state, gblk, rate, key):
+            def loss_fn(p):
+                agg = _make_aggregate_shard(gblk, meta, policy, compressor,
+                                            rate, key, packed_k=packed_k)
+                return _local_loss_fn(p, cfg, gblk, agg, meta)
 
-        (loss, bits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        loss = lax.psum(loss, AXIS)
-        if sync == "grad":
-            grads = jax.tree_util.tree_map(lambda g: lax.psum(g, AXIS), grads)
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = apply_updates(params, updates)
-        else:  # fedavg: local step, then parameter averaging
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = apply_updates(params, updates)
-            params = _pmean_inexact(params, AXIS)
-            opt_state = _pmean_inexact(opt_state, AXIS)
-        return params, opt_state, {"loss": loss, "rate": rate,
-                                   "halo_bits": 2.0 * bits}
+            (loss, bits), grads = jax.value_and_grad(loss_fn,
+                                                     has_aux=True)(params)
+            loss = lax.psum(loss, AXIS)
+            if sync == "grad":
+                grads = jax.tree_util.tree_map(lambda g: lax.psum(g, AXIS),
+                                               grads)
+                updates, new_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+            else:  # fedavg: local step, then parameter averaging
+                updates, new_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+                params = _pmean_inexact(params, AXIS)
+                new_state = _pmean_inexact(new_state, AXIS)
+            return params, new_state, _step_metrics(loss, rate, bits)
 
-    sm = shard_map(worker, mesh=mesh,
-                   in_specs=(P(), P(), P(AXIS), P(), P()),
-                   out_specs=(P(), P(), P()), check_rep=False)
+        return worker
+
+    def make_sm(packed_k: dict | None):
+        return jax.jit(shard_map(make_worker(packed_k), mesh=mesh,
+                                 in_specs=(P(), P(), P(AXIS), P(), P()),
+                                 out_specs=(P(), P(), P()), check_rep=False))
+
+    if packed_wire:
+        @functools.lru_cache(maxsize=None)
+        def _compiled_for(kblocks: tuple):
+            return make_sm(dict(kblocks))
+
+        def step(params, opt_state, graph, step_idx, key):
+            kb = _packed_k_for(meta, float(policy.rate(int(step_idx))))
+            return _compiled_for(kb)(params, opt_state, graph,
+                                     policy.rate(step_idx), key)
+
+        return step
+
+    sm = make_sm(None)
 
     @jax.jit
     def step(params, opt_state, graph, step_idx, key):
@@ -338,7 +535,19 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
 
 
 def make_eval_step(cfg: GNNConfig, meta: DistMeta, mesh: Mesh | None = None):
-    """Full-communication accuracy over the train/val/test splits."""
+    """Full-communication accuracy over the train/val/test splits.
+
+    ``evaluate(params, graph) -> {"train": acc, "val": acc, "test": acc}``.
+    Always evaluates over the dense wire: at rate 1 the packed exchange
+    keeps every lane-block, so the two formats are bitwise identical and
+    the dense path avoids the packed wire's static-rate bookkeeping.
+
+    Example::
+
+        evaluate = make_eval_step(cfg, meta)
+        accs = evaluate(params, graph)      # graph from pg.device_arrays()
+    """
+    meta = dataclasses.replace(meta, wire="dense")
     splits = (("train", "train_mask", meta.n_train),
               ("val", "val_mask", meta.n_val),
               ("test", "test_mask", meta.n_test))

@@ -28,7 +28,14 @@ AXIS = "data"
 
 
 def make_dp_mesh(n_devices: int | None = None) -> Mesh:
-    """1-D data-parallel mesh over the first ``n_devices`` local devices."""
+    """1-D data-parallel mesh over the first ``n_devices`` local devices
+    (all of them by default).
+
+    Example::
+
+        mesh = make_dp_mesh()               # axis name: "data"
+        step = make_varco_dp_train_step(cfg, opt, policy, mesh)
+    """
     devs = jax.devices()
     n = len(devs) if n_devices is None else n_devices
     if len(devs) < n:
@@ -49,6 +56,16 @@ def make_varco_dp_train_step(cfg: ArchConfig, optimizer: Optimizer,
     all-reduce traffic of the (compressed) payload; the full-communication
     baseline charges the uncompressed equivalent so accuracy-per-byte curves
     share an axis.
+
+    Example::
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        policy = CommPolicy.parse("varco:linear:5", total_steps=200)
+        step = make_varco_dp_train_step(cfg, make_optimizer(cfg), policy,
+                                        make_dp_mesh())
+        params, opt_state, m = step(params, opt_state,
+                                    {"tokens": tokens}, 0,
+                                    jax.random.key(0))
     """
     # deferred: models.transformer imports repro.dist.sharding at module
     # scope, so a top-level import here would be circular

@@ -39,7 +39,13 @@ def _current_mesh():
 
 @contextlib.contextmanager
 def activation_sharding(mesh):
-    """Enable :func:`maybe_shard` constraints against ``mesh`` while tracing."""
+    """Enable :func:`maybe_shard` constraints against ``mesh`` while tracing.
+
+    Example::
+
+        with activation_sharding(mesh):
+            compiled = jax.jit(step).lower(params, opt_state, batch).compile()
+    """
     prev = getattr(_ctx, "mesh", None)
     _ctx.mesh = mesh
     try:
@@ -54,7 +60,11 @@ def activation_sharding(mesh):
 
 
 def data_axes(mesh) -> tuple:
-    """The batch-parallel axis group: ``(pod, data)`` filtered to the mesh."""
+    """The batch-parallel axis group: ``(pod, data)`` filtered to the mesh.
+
+    Example: ``data_axes(make_multipod_mesh()) == ("pod", "data")`` while a
+    single-pod ``(data, model)`` mesh gives ``("data",)``.
+    """
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
@@ -66,7 +76,12 @@ def _size(mesh, axes) -> int:
 
 
 def dispatch_groups() -> int:
-    """Token groups for MoE dispatch = active data-parallel degree (or 1)."""
+    """Token groups for MoE dispatch = active data-parallel degree (or 1).
+
+    Only meaningful inside :func:`activation_sharding`; model code calls it
+    to pick the all-to-all group count, e.g.
+    ``tokens.reshape(dispatch_groups(), -1, d)``.
+    """
     mesh = _current_mesh()
     if mesh is None:
         return 1
@@ -74,7 +89,12 @@ def dispatch_groups() -> int:
 
 
 def batch_spec(mesh) -> P:
-    """Leading-dim batch sharding over the data axis group."""
+    """Leading-dim batch sharding over the data axis group.
+
+    Example::
+
+        tokens = jax.device_put(tokens, NamedSharding(mesh, batch_spec(mesh)))
+    """
     d = data_axes(mesh)
     return P(d) if d else P()
 
@@ -90,6 +110,10 @@ def maybe_shard(x, *dims):
     No-op outside an :func:`activation_sharding` context.  Entries naming
     axes absent from the active mesh, or groups that don't divide the dim,
     degrade to replicated.
+
+    Example (activations ``[batch, seq, d_model]``)::
+
+        h = maybe_shard(h, ("pod", "data"), None, "model")
     """
     mesh = _current_mesh()
     if mesh is None:
@@ -128,6 +152,9 @@ def param_spec(path: str, shape, mesh) -> P:
     * MoE experts ``[L, E, a, b]``         -> E over data, d_expert over model
     * generic 3-D ``[L, d_in, d_out]``     -> column-parallel (down
       projections named ``w_down`` are row-parallel)
+
+    Example: ``param_spec("blocks/attn/wq", (32, 4096, 32, 128), mesh)``
+    returns ``P(None, ("pod", "data"), "model", None)`` on a multi-pod mesh.
     """
     name = path.split("/")[-1]
     rank = len(shape)
@@ -177,7 +204,13 @@ def param_spec(path: str, shape, mesh) -> P:
 
 
 def param_shardings(params, mesh):
-    """NamedSharding pytree for a parameter (or optimizer-state) pytree."""
+    """NamedSharding pytree for a parameter (or optimizer-state) pytree.
+
+    Example::
+
+        p_sh = param_shardings(jax.eval_shape(init_fn), mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, ...), out_shardings=(p_sh, ...))
+    """
 
     def _path_str(path) -> str:
         parts = []
@@ -210,6 +243,10 @@ def cache_spec(shape, mesh, batch_dim: int | None = None,
     """Cache layout: heads over ``model`` when they divide, else the
     sequence dim absorbs ``model``; batch over ``data`` when it divides,
     else (batch=1 long-context) the sequence dim takes the data group too.
+
+    Example (KV cache ``[batch, seq, kv_heads, head_dim]``)::
+
+        spec = cache_spec(kv.shape, mesh, batch_dim=0, seq_dim=1, head_dim=2)
     """
     spec = [None] * len(shape)
     data = data_axes(mesh)

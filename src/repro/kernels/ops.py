@@ -57,6 +57,94 @@ def compress_roundtrip(key, x, rate: float, *, interpret: bool | None = None):
     return compress_unpack(packed, inv, interpret=interpret), wire_bits
 
 
+# ---------------------------------------------------------------------------
+# Differentiable wire ops (the packed halo-exchange payload path)
+# ---------------------------------------------------------------------------
+#
+# ``wire_pack`` / ``wire_unpack`` are what the distributed runtime puts on
+# the wire (DESIGN.md §3.3): Pallas kernels on TPU, the jnp ``ref`` oracles
+# on every other backend — interpret-mode Pallas executes kernel bodies in
+# Python, far too slow for a train loop, while the oracles are ordinary XLA
+# gathers.  Gradients flow through the wire (Algorithm 1 back-propagates
+# across machines), so both ops carry custom VJPs: pack and unpack are each
+# other's transpose under the same (kept, inv) index pair.
+
+
+def _padded_rows(n: int, tile: int = 256) -> int:
+    """Row count the Pallas kernels accept: their ``tile_n`` grid needs
+    ``n % min(tile, n) == 0``, but the runtime feeds arbitrary boundary
+    counts (B = halo_size).  Pad small inputs to the f32 sublane (8), large
+    ones to a whole tile."""
+    if n <= tile:
+        return -(-n // 8) * 8
+    return -(-n // tile) * tile
+
+
+def _pad_call(kernel, x, idx):
+    n = x.shape[0]
+    pad = _padded_rows(n) - n
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = kernel(x, idx)
+    return out[:n] if pad else out
+
+
+def _pack_impl(x, kept):
+    if jax.default_backend() == "tpu":
+        return _pad_call(varco_pack, x, kept)
+    return ref.pack_reference(x, kept)
+
+
+def _unpack_impl(packed, inv):
+    if jax.default_backend() == "tpu":
+        return _pad_call(varco_unpack, packed, inv)
+    return ref.unpack_reference(packed, inv)
+
+
+@jax.custom_vjp
+def wire_pack(x, kept, inv):
+    """Gather kept lane-blocks for the wire: ``[N, F] -> [N, K*128]``.
+
+    ``kept``/``inv`` must be the matched pair from
+    :func:`repro.kernels.varco_pack.block_mask_indices`; ``inv`` is carried
+    for the backward scatter.
+    """
+    del inv
+    return _pack_impl(x, kept)
+
+
+def _wire_pack_fwd(x, kept, inv):
+    return _pack_impl(x, kept), (kept, inv)
+
+
+def _wire_pack_bwd(res, g):
+    _, inv = res
+    return _unpack_impl(g, inv), None, None
+
+
+wire_pack.defvjp(_wire_pack_fwd, _wire_pack_bwd)
+
+
+@jax.custom_vjp
+def wire_unpack(packed, kept, inv):
+    """Scatter a received wire payload back: ``[N, K*128] -> [N, F]``,
+    zero-filling dropped blocks (the paper's decoder)."""
+    del kept
+    return _unpack_impl(packed, inv)
+
+
+def _wire_unpack_fwd(packed, kept, inv):
+    return _unpack_impl(packed, inv), (kept, inv)
+
+
+def _wire_unpack_bwd(res, g):
+    kept, _ = res
+    return _pack_impl(g, kept), None, None
+
+
+wire_unpack.defvjp(_wire_unpack_fwd, _wire_unpack_bwd)
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def aggregate(x, nbr, w, *, interpret: bool | None = None):
     """ELL neighbour aggregation. x [N_src,F], nbr/w [N_dst,K]."""

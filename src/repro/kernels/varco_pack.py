@@ -16,8 +16,17 @@ costs zero VPU work; it is pure DMA steering.  ``unpack`` iterates all
 output blocks, copying from the packed buffer where the inverse map is
 valid and zeroing otherwise (``inv`` also in SMEM).
 
-Validated against ``ref.pack_reference`` / ``ref.unpack_reference`` in
-interpret mode, including the round-trip mask identity.
+These kernels are the TPU realisation of the runtime's **packed wire
+format** (DESIGN.md §3.3): :func:`repro.core.collectives.packed_all_gather`
+packs each worker's boundary block before the all-gather so only the
+``[B, K·128]`` payload crosses the wire, and unpacks on receipt.  The
+differentiable entry points are :func:`repro.kernels.ops.wire_pack` /
+:func:`repro.kernels.ops.wire_unpack`, which dispatch to these Pallas
+kernels on TPU and to the ``ref.py`` jnp oracles elsewhere (the CPU
+fallback rule), with custom VJPs (pack and unpack are each other's
+transpose).  Correctness vs ``ref.pack_reference`` / ``ref.unpack_reference``
+is pinned by ``tests/test_kernels.py``; the runtime integration — packed vs
+dense parity at every rate — by ``tests/test_packed_wire.py``.
 """
 
 from __future__ import annotations
@@ -107,12 +116,21 @@ def varco_unpack(packed: jax.Array, inv_idx: jax.Array, *, tile_n: int = 256,
 
 def block_mask_indices(key: jax.Array, n_blocks: int, rate: float
                        ) -> tuple[jax.Array, jax.Array]:
-    """Shared-PRNG selection of ceil(n_blocks/rate) kept lane-blocks.
+    """Shared-PRNG selection of ``K = max(floor(n_blocks/rate), 1)`` kept
+    lane-blocks (floor, clamped to one block — never zero payload).
 
     Returns (block_idx [K] sorted, inv_idx [n_blocks]).  Both ends derive
     these from the same key — no index metadata on the wire (paper App. A).
     """
     k = max(int(n_blocks / max(rate, 1.0)), 1)
+    return block_mask_indices_k(key, n_blocks, k)
+
+
+def block_mask_indices_k(key: jax.Array, n_blocks: int, k: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """:func:`block_mask_indices` with the kept-block count ``k`` given
+    directly — the runtime quantises the (possibly annealing) rate to ``k``
+    outside jit so the rate itself can stay a traced operand."""
     perm = jax.random.permutation(key, n_blocks)
     kept = jnp.sort(perm[:k])
     inv = jnp.full((n_blocks,), -1, jnp.int32)

@@ -34,12 +34,13 @@ class History:
     val_acc: list = dataclasses.field(default_factory=list)
     test_acc: list = dataclasses.field(default_factory=list)
     halo_gfloats: list = dataclasses.field(default_factory=list)  # cumulative
+    transport_gfloats: list = dataclasses.field(default_factory=list)
     wall_s: list = dataclasses.field(default_factory=list)
 
     def row(self, i: int) -> dict:
         return {k: getattr(self, k)[i] for k in
                 ("epoch", "loss", "rate", "train_acc", "val_acc", "test_acc",
-                 "halo_gfloats", "wall_s")}
+                 "halo_gfloats", "transport_gfloats", "wall_s")}
 
     def rows(self):
         return [self.row(i) for i in range(len(self.epoch))]
@@ -56,6 +57,11 @@ class History:
     def total_halo_gfloats(self) -> float:
         return self.halo_gfloats[-1] if self.halo_gfloats else 0.0
 
+    @property
+    def total_transport_gfloats(self) -> float:
+        """Gfloats the wire format actually shipped (DESIGN.md §3.3)."""
+        return self.transport_gfloats[-1] if self.transport_gfloats else 0.0
+
 
 @dataclasses.dataclass
 class TrainResult:
@@ -70,18 +76,21 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
               weight_decay: float = 0.0, hidden: int = 256, layers: int = 3,
               conv: str = "sage", seed: int = 0, eval_every: int = 5,
               use_shard_map: bool = False, optimizer: Optimizer | None = None,
-              sync: str = "grad", log_fn=None) -> TrainResult:
+              sync: str = "grad", wire: str = "dense",
+              log_fn=None) -> TrainResult:
     """Partition ``g`` over ``q`` workers and train under ``policy``.
 
     Mirrors the paper's §V setup by default: 3-layer SAGE, 256 hidden,
-    full-batch, 300 epochs.
+    full-batch, 300 epochs.  ``wire="packed"`` runs the reduced-volume
+    packed halo exchange (DESIGN.md §3.3; feature widths must be multiples
+    of 128, and compressing policies must use the ``blockmask`` compressor).
     """
     cfg = GNNConfig(conv=conv, in_dim=g.feat_dim, hidden=hidden,
                     out_dim=g.num_classes, layers=layers)
     params = init_gnn(jax.random.key(seed), cfg)
     pg: PartitionedGraph = partition_graph(g, q, scheme=scheme, seed=seed)
     graph = pg.device_arrays()
-    meta = DistMeta.build(pg, params)
+    meta = DistMeta.build(pg, params, wire=wire)
     opt = optimizer or adamw(lr, weight_decay=weight_decay)
     opt_state = opt.init(params)
 
@@ -93,11 +102,13 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
 
     hist = History()
     halo_bits_cum = 0.0
+    transport_bits_cum = 0.0
     t0 = time.time()
     for epoch in range(epochs):
         params, opt_state, m = step(params, opt_state, graph,
                                     jnp.asarray(epoch), jax.random.key(epoch))
         halo_bits_cum += float(m["halo_bits"])
+        transport_bits_cum += float(m["transport_bits"])
         if epoch % eval_every == 0 or epoch == epochs - 1:
             accs = evaluate(params, graph)
             hist.epoch.append(epoch)
@@ -107,6 +118,7 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
             hist.val_acc.append(float(accs["val"]))
             hist.test_acc.append(float(accs["test"]))
             hist.halo_gfloats.append(halo_bits_cum / 32.0 / 1e9)
+            hist.transport_gfloats.append(transport_bits_cum / 32.0 / 1e9)
             hist.wall_s.append(time.time() - t0)
             if log_fn:
                 log_fn(hist.row(len(hist.epoch) - 1))
