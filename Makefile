@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify fast smoke bench-smoke wire-smoke docs all
+.PHONY: test verify fast smoke bench-smoke wire-smoke ring-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -17,10 +17,13 @@ smoke:
 bench-smoke:
 	$(PY) benchmarks/transformer_comm.py --smoke
 
-wire-smoke:                  # packed halo-exchange acceptance checks
+wire-smoke:                  # packed + p2p halo-exchange acceptance checks
 	$(PY) benchmarks/halo_exchange.py --smoke
+
+ring-smoke:                  # p2p ring: transport == analytic at rates {1,4}
+	$(PY) benchmarks/halo_exchange.py --smoke-ring
 
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
-all: verify smoke bench-smoke wire-smoke docs
+all: verify smoke bench-smoke wire-smoke ring-smoke docs

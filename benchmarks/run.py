@@ -7,8 +7,12 @@ Prints ``name,us_per_call,derived`` CSV (one row per benchmark).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+if __package__ in (None, ""):               # `python benchmarks/run.py` direct
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 MODULES = [
     "benchmarks.table1_partition_stats",
@@ -17,7 +21,7 @@ MODULES = [
     "benchmarks.prop1_neighborhood",
     "benchmarks.transformer_comm",
     "benchmarks.kernel_bench",
-    "benchmarks.halo_exchange",
+    "benchmarks.halo_exchange",              # dense/packed/p2p wire sweep
     "benchmarks.roofline",
 ]
 

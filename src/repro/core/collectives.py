@@ -16,7 +16,10 @@ than transport-level padding.
 :func:`packed_all_gather` is the exception that actually shrinks the bytes
 on the wire: it gathers the ``[B, K·128]`` lane-block-packed payload instead
 of the masked dense block, and its bit count is the *transport* charge — the
-buffer physically shipped (DESIGN.md §3.3).
+buffer physically shipped (DESIGN.md §3.3).  :func:`neighbor_exchange` goes
+further (DESIGN.md §3.5): a ``ppermute`` ring that ships each peer only the
+halo rows it actually references, so transport equals the paper's analytic
+point-to-point edge-cut charge instead of ``O(Q·B)``.
 """
 
 from __future__ import annotations
@@ -93,7 +96,7 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     across wire formats (DESIGN.md §3.2–3.3).
     """
     from repro.kernels.ops import wire_pack, wire_unpack
-    from repro.kernels.varco_pack import LANE, block_mask_indices_k
+    from repro.kernels.varco_pack import LANE, worker_block_maps
 
     f = x.shape[-1]
     if f % LANE:
@@ -106,9 +109,7 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
         n_keep = max(int(n_blocks / max(float(rate), 1.0)), 1)
     # every worker's (kept, inv) pair from the shared key — receivers need
     # all of them to decode the gathered buffer
-    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
-    kept_all, inv_all = jax.vmap(
-        lambda k: block_mask_indices_k(k, n_blocks, n_keep))(keys)
+    kept_all, inv_all = worker_block_maps(key, q, n_blocks, n_keep)
     idx = lax.axis_index(axis_name)
     packed = wire_pack(x, kept_all[idx], inv_all[idx])     # [B, K*128]
     gathered = lax.all_gather(packed, axis_name)           # [Q, B, K*128]
@@ -116,6 +117,75 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     payload = packed.size * jnp.finfo(packed.dtype).bits
     wire_bits = jnp.asarray(payload * q * (q - 1), jnp.float32)
     return halo, wire_bits
+
+
+def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
+                      axis_name: str, *, key: Array | None = None,
+                      n_keep: int | None = None) -> tuple[Array, Array]:
+    """Neighbor-only p2p halo exchange over a ``ppermute`` ring (§3.5).
+
+    Where :func:`packed_all_gather` ships every worker's whole boundary
+    block to all ``Q - 1`` peers, this runs ``Q - 1`` ring offsets: at
+    offset ``d`` worker ``j`` sends *only* the rows worker ``(j+d) mod Q``
+    actually references (the per-pair halo sets of
+    ``repro.dist.halo.halo_arrays``) via ``lax.ppermute``.  Transport is
+    the edge-cut rows — the paper's analytic point-to-point charge — not
+    ``O(Q·B)``.  Each hop is an independent collective with no data
+    dependence on the caller's local compute, so XLA overlaps the transfers
+    with whatever runs alongside (the ELL local aggregation in
+    ``repro.dist.gnn_parallel``).  Gradients flow: the VJP of ``ppermute``
+    is the inverted-permutation ``ppermute``, so cotangents ride the same
+    neighbor-only ring backward.
+
+    ``publish [B, F]`` is the worker's boundary block (its ``send_idx``
+    rows, invalid rows zeroed);  ``send_slot``/``send_valid [Q-1, H]``
+    hold, per offset, the *boundary slots* to ship and their 0/1 padding
+    mask.  With ``n_keep`` (static kept-lane-block count) the sender packs
+    its boundary block **once** to ``[B, n_keep·128]`` via
+    :func:`repro.kernels.ops.wire_pack` under its ``fold_in(key, sender)``
+    mask — the same per-worker streams the all-gather wires draw — then
+    slices every hop buffer out of the packed rows; receivers unpack with
+    the sender's inverse map re-derived from the shared ``key`` (no index
+    metadata on the wire).
+
+    Returns ``(compact, wire_bits)``: ``compact [(Q-1)·H, F]`` stacks the
+    received hops (offset ``d`` at rows ``[(d-1)·H, d·H)``; ``[1, F]``
+    zeros when ``Q == 1``), and ``wire_bits`` counts the genuine rows
+    shipped ring-wide × on-wire columns — which equals
+    ``halo_demand × width × 32`` (identical on all workers).
+    """
+    q = _axis_size(axis_name)
+    f = publish.shape[-1]
+    if q == 1:
+        return jnp.zeros((1, f), publish.dtype), jnp.zeros((), jnp.float32)
+    width = f
+    kept_all = inv_all = None
+    if n_keep is not None:
+        from repro.kernels.ops import wire_pack, wire_unpack
+        from repro.kernels.varco_pack import LANE, worker_block_maps
+        if f % LANE:
+            raise ValueError(f"packed p2p hops need F % {LANE} == 0, "
+                             f"got F={f}")
+        if key is None:
+            raise ValueError("n_keep needs the shared exchange key")
+        width = n_keep * LANE
+        kept_all, inv_all = worker_block_maps(key, q, f // LANE, n_keep)
+    me = lax.axis_index(axis_name)
+    if n_keep is not None:
+        publish = wire_pack(publish, kept_all[me], inv_all[me])
+
+    hops = []
+    for d in range(1, q):
+        rows = publish[send_slot[d - 1]] * send_valid[d - 1][:, None]
+        rows = lax.ppermute(rows, axis_name,
+                            [(j, (j + d) % q) for j in range(q)])
+        if n_keep is not None:
+            src = (me - d) % q      # hop d's rows came from worker me - d
+            rows = wire_unpack(rows, kept_all[src], inv_all[src])
+        hops.append(rows)
+    compact = jnp.concatenate(hops, axis=0)
+    wire_bits = lax.psum(jnp.sum(send_valid), axis_name) * width * 32.0
+    return compact, wire_bits
 
 
 def compressed_psum(x, axis_name: str, *, compressor: Compressor,

@@ -6,11 +6,17 @@ Three modules, one per distribution style (DESIGN.md §2):
 
 * ``gnn_parallel``  — the paper's Algorithm 1 over a ``workers`` mesh axis:
   each worker owns one graph partition and exchanges compressed halo
-  activations every layer.  Two wire formats (``DistMeta.wire``): the dense
-  masked all-gather, and the packed ``[B, K·128]`` lane-block exchange
-  backed by the varco_pack Pallas kernels (DESIGN.md §3.3).
+  activations every layer.  Three wire formats (``DistMeta.wire``): the
+  dense masked all-gather, the packed ``[B, K·128]`` lane-block exchange
+  backed by the varco_pack Pallas kernels (DESIGN.md §3.3), and the
+  neighbor-only ``p2p`` ppermute ring with ELL-kernel local aggregation
+  (DESIGN.md §3.5).
+* ``halo``          — host-side construction of the p2p wire's static
+  indices: per-pair halo sets, the compacted ``remote_src`` remap, and the
+  degree-padded (forward + reversed) ELL neighbour lists.
 * ``sharding``      — GSPMD mesh/sharding rules (param placement, activation
-  constraints, KV-cache layout) for the transformer dry-run/serve stack.
+  constraints, KV-cache layout) for the transformer dry-run/serve stack,
+  plus the worker-axis specs of the GNN graph pytree.
 * ``grad_compress`` — VARCO applied to data-parallel gradient all-reduce,
   transplanting the paper's variable-rate scheme to LM training.
 """
@@ -19,14 +25,20 @@ from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
                                      make_train_step, make_worker_mesh,
                                      shard_graph)
 from repro.dist.grad_compress import make_dp_mesh, make_varco_dp_train_step
+from repro.dist.halo import (HaloSpec, attach_p2p, build_halo_spec,
+                             build_reverse_ell, ell_arrays, halo_arrays)
 from repro.dist.sharding import (activation_sharding, batch_spec, cache_spec,
                                  data_axes, dispatch_groups, maybe_shard,
-                                 param_shardings, param_spec)
+                                 param_shardings, param_spec,
+                                 worker_graph_shardings)
 
 __all__ = [
     "DistMeta", "make_eval_step", "make_train_step", "make_worker_mesh",
     "shard_graph",
+    "HaloSpec", "attach_p2p", "build_halo_spec", "build_reverse_ell",
+    "ell_arrays", "halo_arrays",
     "make_dp_mesh", "make_varco_dp_train_step",
     "activation_sharding", "batch_spec", "cache_spec", "data_axes",
     "dispatch_groups", "maybe_shard", "param_shardings", "param_spec",
+    "worker_graph_shardings",
 ]

@@ -23,15 +23,23 @@ Both draw per-worker compression masks from ``fold_in(key, worker_index)``
 of a per-exchange key, so the emulated and shard_map runs are *bitwise
 identical* (tests/test_multidevice.py pins this).
 
-Wire formats (``DistMeta.wire``, DESIGN.md §3.3): ``"dense"`` all-gathers
-the masked ``[B, F]`` boundary block — compression shrinks the ledger, not
-the buffer; ``"packed"`` ships only the kept lane-blocks (``[B, K·128]``,
-via :func:`repro.core.collectives.packed_all_gather` / the varco_pack
-kernels), so the wire volume itself drops with the rate.  Both formats draw
-the same per-worker masks, so packed and dense-``blockmask`` runs agree
-bitwise; the packed wire's buffer shape is set by the static kept-block
-counts, which each step quantises from the schedule outside jit (bounded
-recompiles — see :func:`make_train_step`).
+Wire formats (``DistMeta.wire``, DESIGN.md §3.3/§3.5): ``"dense"``
+all-gathers the masked ``[B, F]`` boundary block — compression shrinks the
+ledger, not the buffer; ``"packed"`` ships only the kept lane-blocks
+(``[B, K·128]``, via :func:`repro.core.collectives.packed_all_gather` / the
+varco_pack kernels), so the wire volume itself drops with the rate;
+``"p2p"`` replaces the all-gather entirely with a neighbor-only
+``ppermute`` ring (:func:`repro.core.collectives.neighbor_exchange`) that
+ships each peer only the per-pair halo rows it references
+(``repro.dist.halo``), and runs the local-edge aggregation through the
+``ell_spmm`` kernel path (:func:`repro.kernels.ops.ell_aggregate`) while
+the hops are in flight — transport equals the analytic point-to-point
+charge at every rate.  All formats draw the same per-worker masks, so
+packed / p2p and dense-``blockmask`` runs deliver identical remote values;
+wire buffer shapes are set by the static kept-block counts, which each
+step quantises from the schedule outside jit (bounded recompiles — see
+:func:`make_train_step`).  The p2p wire needs the halo/ELL index arrays of
+:func:`repro.dist.halo.attach_p2p` merged into the graph pytree.
 
 Ledger accounting (paper Fig. 5 axis): every exchange charges two numbers,
 ``[analytic, transport]``.  Analytic is ``halo_demand × F × 32 / rate``
@@ -56,17 +64,23 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.collectives import compressed_all_gather, packed_all_gather
+from repro.core.collectives import (compressed_all_gather, neighbor_exchange,
+                                    packed_all_gather)
 from repro.core.compression import Compressor
 from repro.core.varco import FULL_COMM, CommPolicy
+from repro.dist.sharding import worker_graph_shardings
 from repro.graph.partition import PartitionedGraph
-from repro.kernels.ops import wire_pack, wire_unpack
-from repro.kernels.varco_pack import LANE, block_mask_indices_k
+from repro.kernels.ops import ell_aggregate, wire_pack, wire_unpack
+from repro.kernels.varco_pack import LANE, worker_block_maps
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
 from repro.train.optim import Optimizer, apply_updates
 
 AXIS = "workers"
-WIRES = ("dense", "packed")
+WIRES = ("dense", "packed", "p2p")
+
+# shard_map executables kept per kept-block map before LRU eviction (an
+# annealing schedule revisits maps; see make_train_step)
+COMPILED_CACHE_SIZE = 8
 
 
 # ---------------------------------------------------------------------------
@@ -83,14 +97,19 @@ class DistMeta:
     the wire each exchange.  Split sizes are *global* so per-worker losses
     normalise identically (``psum(local grads) == full gradient``).
 
-    ``wire`` selects the halo-exchange transport (DESIGN.md §3.3):
+    ``wire`` selects the halo-exchange transport (DESIGN.md §3.3/§3.5):
     ``"dense"`` ships the masked ``[B, F]`` block, ``"packed"`` ships only
-    the kept ``[B, K·128]`` lane-blocks via the varco_pack kernels.
+    the kept ``[B, K·128]`` lane-blocks via the varco_pack kernels, and
+    ``"p2p"`` ships each peer only its per-pair halo rows over the
+    ``neighbor_exchange`` ppermute ring (graph pytree must carry the
+    ``repro.dist.halo.attach_p2p`` arrays).  ``p2p_hop_width`` /
+    ``p2p_compact`` are the p2p wire's static buffer facts (``H`` rows per
+    ring hop, receiver-side compact-buffer height).
 
     Example::
 
         pg = partition_graph(g, q=8, scheme="random")
-        meta = DistMeta.build(pg, params, wire="packed")
+        meta = DistMeta.build(pg, params, wire="p2p")
         step = make_train_step(cfg, policy, opt, meta)
     """
 
@@ -107,6 +126,8 @@ class DistMeta:
     n_test: int
     layer_dims: tuple[int, ...]
     wire: str = "dense"
+    p2p_hop_width: int = 0
+    p2p_compact: int = 0
 
     def __post_init__(self):
         if self.wire not in WIRES:
@@ -132,6 +153,11 @@ class DistMeta:
                 dims.append(int(layer["self"]["w"].shape[0]))
             else:                                     # poly taps
                 dims.append(int(layer["taps"][0]["w"].shape[0]))
+        hop_w = compact = 0
+        if wire == "p2p":
+            from repro.dist.halo import build_halo_spec
+            spec = build_halo_spec(pg)
+            hop_w, compact = spec.hop_width, spec.compact_rows
         return DistMeta(
             q=pg.q, part_size=pg.part_size, halo_size=pg.halo_size,
             num_nodes=pg.num_nodes, feat_dim=pg.feat_dim,
@@ -140,7 +166,8 @@ class DistMeta:
             n_train=int(pg.train_mask.sum()),
             n_val=int(pg.val_mask.sum()),
             n_test=int(pg.test_mask.sum()),
-            layer_dims=tuple(dims), wire=wire)
+            layer_dims=tuple(dims), wire=wire,
+            p2p_hop_width=hop_w, p2p_compact=compact)
 
     def ledger_bits(self, feat: int, rate=1.0) -> jnp.ndarray:
         """Analytic wire bits of one halo exchange at feature width ``feat``."""
@@ -157,15 +184,40 @@ class DistMeta:
         n_blocks = feat // LANE
         return max(int(n_blocks / max(float(rate), 1.0)), 1) * LANE
 
+    def _wire_width(self, feat: int, rate: float) -> int:
+        """On-wire column count of the active format at ``rate``."""
+        if self.wire == "packed":
+            return self.packed_width(feat, rate)
+        if self.wire == "p2p":
+            # uncompressed hops ship dense rows (any width); compressing
+            # policies pack lane-blocks exactly like the packed wire
+            return feat if float(rate) <= 1.0 \
+                else self.packed_width(feat, rate)
+        return feat
+
     def transport_bits(self, feat: int, rate: float = 1.0) -> jnp.ndarray:
         """Bits the active wire format actually ships per halo exchange,
         charged per needed boundary row (same point-to-point ``halo_demand``
         unit as :meth:`ledger_bits`): the full ``feat`` columns on the dense
         wire — dropped entries travel as zeros — vs the ``K·128`` packed
-        columns.  Equals ``ledger_bits`` at rate 1 on the packed wire."""
-        width = self.packed_width(feat, rate) if self.wire == "packed" \
-            else feat
+        columns.  Equals ``ledger_bits`` at rate 1 on the packed and p2p
+        wires; on the p2p wire the charge *is* the physically shipped
+        volume (padding aside) — the analytic edge-cut rows — equal to
+        ``ledger_bits`` whenever the rate divides the lane-block count."""
+        width = self._wire_width(feat, rate)
         return jnp.asarray(self.halo_demand * width * 32.0, jnp.float32)
+
+    def collective_bits(self, feat: int, rate: float = 1.0) -> float:
+        """Bits the wire format physically moves per exchange, padding
+        included — the honest buffer-level volume the benchmarks compare.
+        All-gather wires ship every worker's padded ``[B, width]`` block to
+        ``Q - 1`` peers; the p2p ring ships ``Q - 1`` padded ``[H, width]``
+        hop buffers per worker, each crossing to exactly one peer."""
+        width = self._wire_width(feat, rate)
+        if self.wire == "p2p":
+            return float(self.q * max(self.q - 1, 0) *
+                         self.p2p_hop_width * width * 32.0)
+        return float(self.q * (self.q - 1) * self.halo_size * width * 32.0)
 
 
 # ---------------------------------------------------------------------------
@@ -193,12 +245,18 @@ def make_worker_mesh(q: int) -> Mesh:
 def shard_graph(graph: dict, mesh: Mesh) -> dict:
     """Place the ``[Q, ...]`` graph pytree over the ``workers`` axis.
 
+    Handles every leaf the runtime knows — including the p2p per-pair halo
+    specs and ELL lists merged in by ``repro.dist.halo.attach_p2p`` (all
+    stacked ``[Q, ...]``, specs from
+    :func:`repro.dist.sharding.worker_graph_shardings`).
+
     Example::
 
-        graph = shard_graph(pg.device_arrays(), make_worker_mesh(pg.q))
+        graph = shard_graph(attach_p2p(pg.device_arrays(), pg),
+                            make_worker_mesh(pg.q))
     """
-    sharding = NamedSharding(mesh, P(AXIS))
-    return {k: jax.device_put(v, sharding) for k, v in graph.items()}
+    shardings = worker_graph_shardings(graph, mesh, AXIS)
+    return {k: jax.device_put(v, shardings[k]) for k, v in graph.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +286,18 @@ def _local_w_for(graph: dict, policy: CommPolicy, rate):
         return lw
     mix = 1.0 - 1.0 / jnp.maximum(jnp.asarray(rate, jnp.float32), 1.0)
     return lw + mix * (graph["local_w_iso"] - lw)
+
+
+def _ell_w_for(graph: dict, policy: CommPolicy, rate):
+    """:func:`_local_w_for` in ELL layout (the p2p wire's local weights):
+    the same VARCO blend toward the isolated-subgraph renormalisation,
+    applied elementwise to the degree-padded ``[Q, P, K]`` weight lists
+    (pad entries are 0 in both operands, so they stay 0)."""
+    w = graph["ell_w"]
+    if policy.mode != "varco":
+        return w
+    mix = 1.0 - 1.0 / jnp.maximum(jnp.asarray(rate, jnp.float32), 1.0)
+    return w + mix * (graph["ell_w_iso"] - w)
 
 
 def _exchange_bits(meta: DistMeta, f: int, rate,
@@ -272,10 +342,14 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     ``compressed_all_gather`` does on device ``i``.  On the packed wire the
     same keys select the kept lane-blocks, and the wire payload is
     materialised through ``wire_pack``/``wire_unpack`` so the emulation
-    exercises the real pack→ship→unpack round trip.
+    exercises the real pack→ship→unpack round trip.  On the p2p wire each
+    ``ppermute`` ring offset becomes a roll of the per-pair send buffers
+    (same keys → same masks as ``neighbor_exchange``), and the local edges
+    run through :func:`repro.kernels.ops.ell_aggregate`.
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
     packed_wire = meta.wire == "packed"
+    p2p_wire = meta.wire == "p2p"
     calls = itertools.count()
 
     def aggregate(li, x):                              # x: [Q, P, F]
@@ -290,6 +364,45 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                 graph["local_w_iso"])
             return agg, jnp.zeros((2,), jnp.float32)
 
+        if p2p_wire:
+            # boundary block [Q, B, F]; a compressing policy packs it once
+            # per worker (the real sender's move), the hop buffers are
+            # sliced out of the (un)packed rows
+            publish = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
+                x, graph["send_idx"], graph["send_valid"])
+            wire_width = None
+            if policy.compresses:
+                n_keep = _keep_of(f, rate, packed_k)
+                wire_width = n_keep * LANE
+                k_call = jax.random.fold_in(key, call)
+                kept, inv = worker_block_maps(k_call, q, f // LANE, n_keep)
+                packed = jax.vmap(wire_pack)(publish, kept, inv)  # hop rows
+                publish = jax.vmap(wire_unpack)(packed, kept, inv)
+            # per-pair hop buffers [Q, D, H, F], then route: receiver i's
+            # hop-d rows come from worker (i - d) mod q
+            sent = jax.vmap(lambda pub, slots, v: pub[slots] * v[..., None])(
+                publish, graph["p2p_send_slot"], graph["p2p_send_valid"])
+            if q > 1:
+                src_w = (jnp.arange(q)[:, None] -
+                         jnp.arange(1, q)[None, :]) % q         # [Q, D]
+                compact = sent[src_w, jnp.arange(q - 1)[None, :]].reshape(
+                    q, meta.p2p_compact, f)
+            else:
+                compact = jnp.zeros((q, meta.p2p_compact, f), x.dtype)
+            ell_w = _ell_w_for(graph, policy, rate)
+
+            def part_p2p(xq, nbr, w, rnbr, rslot, rd, rs, rw, halo_c):
+                loc = ell_aggregate(xq, nbr, w, rnbr, rslot)
+                rem = jnp.zeros((p_sz + 1, f), x.dtype)
+                rem = rem.at[rd].add(rw[:, None] * halo_c[rs])
+                return loc + rem[:p_sz]
+
+            agg = jax.vmap(part_p2p)(
+                x, graph["ell_nbr"], ell_w, graph["ell_rnbr"],
+                graph["ell_rslot"], graph["remote_dst"],
+                graph["remote_src_p2p"], graph["remote_w"], compact)
+            return agg, _exchange_bits(meta, f, rate, wire_width)
+
         sent = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
             x, graph["send_idx"], graph["send_valid"])  # [Q, B, F]
         wire_width = None
@@ -297,11 +410,7 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE
             k_call = jax.random.fold_in(key, call)
-            keys = jax.vmap(jax.random.fold_in, (None, 0))(
-                k_call, jnp.arange(q))
-            kept, inv = jax.vmap(
-                lambda kk: block_mask_indices_k(kk, f // LANE, n_keep))(
-                keys)
+            kept, inv = worker_block_maps(k_call, q, f // LANE, n_keep)
             packed = jax.vmap(wire_pack)(sent, kept, inv)   # the wire buffer
             sent = jax.vmap(wire_unpack)(packed, kept, inv)
         elif compressor is not None:
@@ -334,12 +443,17 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
 
     Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
     communication).  Packed wire: :func:`packed_all_gather`, which ships the
-    ``[B, K·128]`` lane-block payload; the per-worker masks derive from the
+    ``[B, K·128]`` lane-block payload.  P2P wire:
+    :func:`repro.core.collectives.neighbor_exchange` — ``Q - 1`` ppermute
+    hops carrying only the per-pair halo rows, with the local edges on the
+    :func:`repro.kernels.ops.ell_aggregate` kernel path so XLA can overlap
+    the hops with the local compute.  The per-worker masks derive from the
     same ``fold_in`` streams as the emulated path, so both backends agree
     bitwise.
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
     packed_wire = meta.wire == "packed"
+    p2p_wire = meta.wire == "p2p"
     calls = itertools.count()
 
     def aggregate(li, x):                              # x: [1, P, F]
@@ -352,6 +466,27 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             out = out.at[graph["local_dst"][0]].add(
                 graph["local_w_iso"][0][:, None] * xq[graph["local_src"][0]])
             return out[:p_sz][None], jnp.zeros((2,), jnp.float32)
+
+        if p2p_wire:
+            n_keep = wire_width = k_call = None
+            if policy.compresses:
+                n_keep = _keep_of(f, rate, packed_k)
+                wire_width = n_keep * LANE
+                k_call = jax.random.fold_in(key, call)
+            publish = xq[graph["send_idx"][0]] * \
+                graph["send_valid"][0][:, None]
+            halo, _ = neighbor_exchange(
+                publish, graph["p2p_send_slot"][0],
+                graph["p2p_send_valid"][0], axis, key=k_call, n_keep=n_keep)
+            loc = ell_aggregate(xq, graph["ell_nbr"][0],
+                                _ell_w_for(graph, policy, rate)[0],
+                                graph["ell_rnbr"][0], graph["ell_rslot"][0])
+            rem = jnp.zeros((p_sz + 1, f), x.dtype)
+            rem = rem.at[graph["remote_dst"][0]].add(
+                graph["remote_w"][0][:, None] *
+                halo[graph["remote_src_p2p"][0]])
+            out = loc + rem[:p_sz]
+            return out[None], _exchange_bits(meta, f, rate, wire_width)
 
         sent = xq[graph["send_idx"][0]] * graph["send_valid"][0][:, None]
         wire_width = None
@@ -417,7 +552,8 @@ def _step_metrics(loss, rate, bits) -> dict:
 
 def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                     meta: DistMeta, mesh: Mesh | None = None,
-                    sync: str = "grad"):
+                    sync: str = "grad",
+                    compiled_cache_size: int = COMPILED_CACHE_SIZE):
     """One full-batch step of Algorithm 1.
 
     ``step(params, opt_state, graph, step_idx, key)`` ->
@@ -429,14 +565,21 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
     centralized step), ``'fedavg'`` applies local updates then averages
     parameters (Algorithm 1's server step).
 
-    ``meta.wire == "packed"`` runs the reduced-volume packed halo exchange.
-    The packed payload's shape depends only on the kept-block counts, so
-    each call quantises the schedule's rate to that static map outside jit
-    (:func:`_packed_k_for`) while the rate itself stays a traced operand —
-    a continuously-annealing VARCO schedule recompiles once per distinct
-    kept-block map (at most ``Π (width/128)`` times, a handful), not per
-    rate value.  A compressing policy must then use the ``blockmask``
-    compressor (the packed wire realises exactly that mechanism).
+    ``meta.wire == "packed"`` runs the reduced-volume packed halo exchange;
+    ``"p2p"`` the neighbor-only ppermute ring with ELL local aggregation
+    (DESIGN.md §3.5; the graph pytree must carry the
+    ``repro.dist.halo.attach_p2p`` arrays).  On both, a compressed payload's
+    shape depends only on the kept-block counts, so each call quantises the
+    schedule's rate to that static map outside jit (:func:`_packed_k_for`)
+    while the rate itself stays a traced operand — a continuously-annealing
+    VARCO schedule recompiles once per distinct kept-block map (at most
+    ``Π (width/128)`` times, a handful), not per rate value.  A compressing
+    policy must then use the ``blockmask`` compressor (these wires realise
+    exactly that mechanism).  On the shard_map path the compiled
+    executables live in an LRU cache of ``compiled_cache_size`` entries
+    (exposed as ``step.cache_info`` / ``step.cache_clear``), so annealing
+    across many maps evicts old executables instead of pinning every one
+    forever.
 
     Example::
 
@@ -448,12 +591,24 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
     if sync not in ("grad", "fedavg"):
         raise ValueError(f"sync must be 'grad' or 'fedavg', got {sync!r}")
     packed_wire = meta.wire == "packed"
-    if packed_wire and policy.compresses and \
+    p2p_wire = meta.wire == "p2p"
+    if (packed_wire or p2p_wire) and policy.compresses and \
             policy.compressor_name != "blockmask":
         raise ValueError(
-            f"the packed wire ships PRNG-selected lane-blocks; a compressing "
-            f"policy must use the 'blockmask' compressor, got "
+            f"the {meta.wire} wire ships PRNG-selected lane-blocks; a "
+            f"compressing policy must use the 'blockmask' compressor, got "
             f"{policy.compressor_name!r}")
+    if p2p_wire and policy.compresses:
+        for f_ in {meta.feat_dim, *meta.layer_dims}:
+            if f_ % LANE:
+                raise ValueError(
+                    f"the p2p wire packs lane-blocks under a compressing "
+                    f"policy, so every exchanged feature width must be "
+                    f"divisible by {LANE}; got {f_} (exchanged widths: "
+                    f"{sorted({meta.feat_dim, *meta.layer_dims})})")
+    # a static kept-block map is needed whenever the wire payload shape
+    # follows the rate: always on the packed wire, under compression on p2p
+    needs_kb = packed_wire or (p2p_wire and policy.compresses)
     compressor = policy.compressor() if policy.compresses else None
 
     if mesh is None:
@@ -474,7 +629,7 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
             new_params = apply_updates(params, updates)
             return new_params, new_state, _step_metrics(loss, rate, bits)
 
-        if not packed_wire:
+        if not needs_kb:
             return _jit_step
 
         def step(params, opt_state, graph, step_idx, key):
@@ -513,8 +668,11 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                                  in_specs=(P(), P(), P(AXIS), P(), P()),
                                  out_specs=(P(), P(), P()), check_rep=False))
 
-    if packed_wire:
-        @functools.lru_cache(maxsize=None)
+    if needs_kb:
+        # bounded: an annealing schedule walks many kept-block maps; keep
+        # the recent executables, evict the rest (regression-pinned by
+        # tests/test_p2p_wire.py::test_compiled_cache_bounded)
+        @functools.lru_cache(maxsize=compiled_cache_size)
         def _compiled_for(kblocks: tuple):
             return make_sm(dict(kblocks))
 
@@ -523,6 +681,8 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
             return _compiled_for(kb)(params, opt_state, graph,
                                      policy.rate(step_idx), key)
 
+        step.cache_info = _compiled_for.cache_info
+        step.cache_clear = _compiled_for.cache_clear
         return step
 
     sm = make_sm(None)

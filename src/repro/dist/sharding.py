@@ -233,6 +233,39 @@ def param_shardings(params, mesh):
 
 
 # ---------------------------------------------------------------------------
+# Partition-parallel graph rules
+# ---------------------------------------------------------------------------
+
+
+def worker_graph_shardings(graph: dict, mesh, axis: str = "workers") -> dict:
+    """NamedSharding per graph-pytree leaf for the GNN runtime.
+
+    Every array in the padded graph layout — node features/labels/masks,
+    edge lists, halo send lists, and the p2p per-pair index sets of
+    ``repro.dist.halo`` — is stacked ``[Q, ...]``, so each leaf splits its
+    leading partition dim over ``axis`` and is otherwise replicated.
+    Validates that contract: a leaf whose leading dim doesn't match the
+    mesh's ``axis`` size (e.g. an un-stacked host array slipped into the
+    pytree) is rejected here with its key named, instead of surfacing as
+    an opaque GSPMD shape error inside ``shard_map``.
+
+    Example::
+
+        shardings = worker_graph_shardings(graph, mesh)
+        graph = {k: jax.device_put(v, shardings[k]) for k, v in graph.items()}
+    """
+    q = int(mesh.shape[axis])
+    for k, v in graph.items():
+        shape = getattr(v, "shape", ())
+        if len(shape) == 0 or shape[0] != q:
+            raise ValueError(
+                f"graph leaf {k!r} has shape {tuple(shape)}; expected a "
+                f"stacked [Q, ...] array with Q == mesh {axis!r} size {q}")
+    sh = NamedSharding(mesh, P(axis))
+    return {k: sh for k in graph}
+
+
+# ---------------------------------------------------------------------------
 # KV / SSM cache rules
 # ---------------------------------------------------------------------------
 

@@ -201,6 +201,20 @@ class PartitionedGraph:
     send_idx: np.ndarray      # [Q, B] int32 (pad 0)
     send_valid: np.ndarray    # [Q, B] f32 (1 valid / 0 pad)
 
+    def remote_pair_table(self):
+        """Decode the flat ``remote_src`` halo indices per remote edge.
+
+        Returns ``(valid [Q, Er] bool, src_part [Q, Er] int32, slot
+        [Q, Er] int32)`` — which peer partition and boundary slot each
+        remote edge reads (padding rows have ``remote_w == 0`` and are
+        masked out of ``valid``).  This is the raw material for the
+        per-pair p2p halo specs (``repro.dist.halo``).
+        """
+        valid = self.remote_w > 0
+        src_part = (self.remote_src // self.halo_size).astype(np.int32)
+        slot = (self.remote_src % self.halo_size).astype(np.int32)
+        return valid, src_part, slot
+
     def device_arrays(self):
         """The pytree handed to the distributed train step."""
         import jax.numpy as jnp

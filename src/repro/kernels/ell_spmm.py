@@ -13,6 +13,13 @@ VMEM:
 Every neighbour gather is VMEM-local; HBM traffic is one pass over ``x``
 per node tile.  Validated against ``ref.ell_spmm_reference`` in interpret
 mode over shape sweeps incl. ragged/padded degrees.
+
+The kernel itself is forward-only; the runtime's differentiable entry
+point is :func:`repro.kernels.ops.ell_aggregate`, whose custom VJP runs
+the *transpose* — the same SpMM over the reversed neighbour lists
+(``repro.dist.halo.build_reverse_ell``) — so both directions of the p2p
+wire's local aggregation stay on this kernel on TPU and on the jnp oracle
+elsewhere.
 """
 
 from __future__ import annotations

@@ -136,3 +136,15 @@ def block_mask_indices_k(key: jax.Array, n_blocks: int, k: int
     inv = jnp.full((n_blocks,), -1, jnp.int32)
     inv = inv.at[kept].set(jnp.arange(k, dtype=jnp.int32))
     return kept.astype(jnp.int32), inv
+
+
+def worker_block_maps(key: jax.Array, q: int, n_blocks: int, k: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Every worker's ``(kept, inv)`` pair for one exchange: worker ``i``
+    draws from ``fold_in(key, i)``.  This is THE key-stream rule all wire
+    paths share — emulated and shard_map, packed and p2p — so the
+    bitwise-parity guarantees are structural, not four copies that must be
+    kept in sync.  Returns ``(kept_all [Q, k], inv_all [Q, n_blocks])``.
+    """
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
+    return jax.vmap(lambda kk: block_mask_indices_k(kk, n_blocks, k))(keys)

@@ -83,13 +83,19 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     Mirrors the paper's §V setup by default: 3-layer SAGE, 256 hidden,
     full-batch, 300 epochs.  ``wire="packed"`` runs the reduced-volume
     packed halo exchange (DESIGN.md §3.3; feature widths must be multiples
-    of 128, and compressing policies must use the ``blockmask`` compressor).
+    of 128, and compressing policies must use the ``blockmask`` compressor);
+    ``wire="p2p"`` the neighbor-only ppermute ring with ELL local
+    aggregation (DESIGN.md §3.5 — same constraints under compression, and
+    the per-pair halo/ELL arrays are attached here automatically).
     """
     cfg = GNNConfig(conv=conv, in_dim=g.feat_dim, hidden=hidden,
                     out_dim=g.num_classes, layers=layers)
     params = init_gnn(jax.random.key(seed), cfg)
     pg: PartitionedGraph = partition_graph(g, q, scheme=scheme, seed=seed)
     graph = pg.device_arrays()
+    if wire == "p2p":
+        from repro.dist.halo import attach_p2p
+        graph = attach_p2p(graph, pg)
     meta = DistMeta.build(pg, params, wire=wire)
     opt = optimizer or adamw(lr, weight_decay=weight_decay)
     opt_state = opt.init(params)

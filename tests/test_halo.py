@@ -1,0 +1,210 @@
+"""Per-pair halo spec + ELL construction correctness (repro.dist.halo).
+
+The p2p wire is only as good as its static indices: these tests pin the
+compacted ``remote_src`` remap round trip (every remote edge must find its
+exact source activation in the receiver's per-hop compact buffer) and the
+ELL lists (forward == scatter aggregation, reversed == exact transpose) on
+regular and adversarial partitionings — isolated partitions with an empty
+cut, fully-connected cuts, singleton partitions, and Q == 1.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dist.halo import (attach_p2p, build_halo_spec, build_reverse_ell,
+                             ell_arrays, halo_arrays)
+from repro.graph import partition_graph, tiny_graph
+from repro.graph.data import from_edge_list
+from repro.graph.partition import build_partitioned
+
+
+def _numpy_compact(pg, arrays, spec, x):
+    """Simulate the ring on the host: receiver ``i``'s compact buffer."""
+    q, hop_w = pg.q, spec.hop_width
+    xq = np.zeros((q, pg.part_size, x.shape[1]), np.float32)
+    xq[pg.owner, pg.local_index] = x
+    publish = np.stack([xq[p][pg.send_idx[p]] * pg.send_valid[p][:, None]
+                        for p in range(q)])
+    compact = np.zeros((q, spec.compact_rows, x.shape[1]), np.float32)
+    for i in range(q):
+        for d in range(1, q):
+            j = (i - d) % q
+            rows = publish[j][arrays["p2p_send_slot"][j, d - 1]] * \
+                arrays["p2p_send_valid"][j, d - 1][:, None]
+            compact[i, (d - 1) * hop_w:d * hop_w] = rows
+    return compact
+
+
+def _assert_remap_round_trips(g, pg):
+    """Every valid remote edge reads its exact source row from the compact
+    buffer — the remap must round-trip bitwise, not approximately."""
+    spec = build_halo_spec(pg)
+    arrays = halo_arrays(pg, spec)
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (g.num_nodes, 8)).astype(np.float32)
+    compact = _numpy_compact(pg, arrays, spec, x)
+    dst, src = g.edge_list()
+    cross = pg.owner[dst] != pg.owner[src]
+    for d_, s_ in zip(dst[cross], src[cross]):
+        i = pg.owner[d_]
+        # find this edge's row in partition i's remote arrays
+        flat = pg.owner[s_] * pg.halo_size + \
+            np.flatnonzero(pg.send_idx[pg.owner[s_]] ==
+                           pg.local_index[s_])[0]
+        e = np.flatnonzero((pg.remote_src[i] == flat) &
+                           (pg.remote_w[i] > 0))[0]
+        row = arrays["remote_src_p2p"][i][e]
+        np.testing.assert_array_equal(compact[i, row], x[s_])
+
+
+def _assert_spec_consistent(pg):
+    spec = build_halo_spec(pg)
+    table = spec.pair_table()
+    assert table.shape == (pg.q, pg.q)
+    assert (np.diag(table) == 0).all()
+    assert table.sum() == pg.halo_demand
+    assert spec.hop_width >= 1
+    assert spec.compact_rows == max((pg.q - 1) * spec.hop_width, 1)
+    arrays = halo_arrays(pg, spec)
+    # per-pair genuine row counts mirror the table
+    for j in range(pg.q):
+        for d in range(1, pg.q):
+            i = (j + d) % pg.q
+            assert arrays["p2p_send_valid"][j, d - 1].sum() == table[i, j]
+    return spec
+
+
+@pytest.mark.parametrize("scheme", ["random", "metis-like"])
+@pytest.mark.parametrize("q", [2, 4, 8])
+def test_remap_round_trips_exactly(scheme, q):
+    g = tiny_graph(n=200)
+    pg = partition_graph(g, q, scheme=scheme)
+    _assert_spec_consistent(pg)
+    _assert_remap_round_trips(g, pg)
+
+
+def test_isolated_partition_empty_cut():
+    """A partition with no cross edges ships and receives nothing."""
+    # two disjoint cliques; partition 0 = clique A, partitions 1/2 split B
+    n_a, n_b = 8, 16
+    edges = [(i, j) for i in range(n_a) for j in range(n_a) if i != j]
+    edges += [(n_a + i, n_a + j) for i in range(n_b) for j in range(n_b)
+              if i != j]
+    dst, src = np.array([e[0] for e in edges]), np.array(
+        [e[1] for e in edges])
+    n = n_a + n_b
+    rng = np.random.default_rng(0)
+    g = from_edge_list(n, dst, src, rng.normal(0, 1, (n, 8)),
+                       rng.integers(0, 3, n))
+    owner = np.zeros(n, np.int32)
+    owner[n_a:n_a + n_b // 2] = 1
+    owner[n_a + n_b // 2:] = 2
+    pg = build_partitioned(g, owner, 3)
+    spec = _assert_spec_consistent(pg)
+    table = spec.pair_table()
+    assert (table[0] == 0).all() and (table[:, 0] == 0).all()
+    arrays = halo_arrays(pg, spec)
+    assert arrays["p2p_send_valid"][0].sum() == 0        # ships nothing
+    _assert_remap_round_trips(g, pg)
+
+
+def test_fully_connected_cut():
+    """Complete graph: every ordered pair exchanges every boundary row."""
+    n, q = 12, 4
+    edges = [(i, j) for i in range(n) for j in range(n) if i != j]
+    dst, src = np.array([e[0] for e in edges]), np.array(
+        [e[1] for e in edges])
+    rng = np.random.default_rng(1)
+    g = from_edge_list(n, dst, src, rng.normal(0, 1, (n, 8)),
+                       rng.integers(0, 3, n))
+    pg = partition_graph(g, q, scheme="random")
+    spec = _assert_spec_consistent(pg)
+    table = spec.pair_table()
+    off_diag = table[~np.eye(q, dtype=bool)]
+    assert (off_diag == n // q).all()                    # all rows, all pairs
+    # the p2p win vanishes by construction: demand == Q-1 × all boundary rows
+    assert pg.halo_demand == q * (q - 1) * (n // q)
+    _assert_remap_round_trips(g, pg)
+
+
+def test_singleton_partition():
+    """A partition holding exactly one node round-trips fine."""
+    g = tiny_graph(n=65)
+    owner = partition_graph(g, 4, scheme="random").owner.copy()
+    owner[owner == 3] = 0
+    owner[0] = 3                                         # partition 3 = {0}
+    pg = build_partitioned(g, owner, 4)
+    _assert_spec_consistent(pg)
+    _assert_remap_round_trips(g, pg)
+
+
+def test_single_partition_degenerate():
+    """Q == 1: no pairs, no hops, arrays stay well-formed."""
+    g = tiny_graph(n=64)
+    pg = partition_graph(g, 1, scheme="random")
+    spec = _assert_spec_consistent(pg)
+    assert spec.hop_width == 1 and spec.compact_rows == 1
+    arrays = halo_arrays(pg, spec)
+    assert arrays["p2p_send_valid"].sum() == 0
+    graph = attach_p2p(pg.device_arrays(), pg)
+    assert graph["p2p_send_slot"].shape == (1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# ELL lists
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q", [1, 2, 4])
+def test_ell_equals_scatter_aggregation(q):
+    """Forward ELL lists reproduce the padded scatter aggregation exactly
+    (same edges, per-destination grouping)."""
+    g = tiny_graph(n=128)
+    pg = partition_graph(g, q, scheme="random")
+    arrays = ell_arrays(pg)
+    rng = np.random.default_rng(2)
+    x = rng.normal(0, 1, (q, pg.part_size, 8)).astype(np.float32)
+    for p in range(q):
+        expect = np.zeros((pg.part_size + 1, 8), np.float32)
+        np.add.at(expect, pg.local_dst[p],
+                  pg.local_w[p][:, None] * x[p][pg.local_src[p]])
+        got = np.einsum("tk,tkf->tf", arrays["ell_w"][p],
+                        x[p][arrays["ell_nbr"][p]])
+        np.testing.assert_allclose(got, expect[:-1], rtol=1e-5, atol=1e-6)
+
+
+def test_reverse_ell_is_exact_transpose():
+    """ell_spmm over the reversed lists with rslot-gathered weights equals
+    the matrix transpose of the forward ELL SpMM."""
+    rng = np.random.default_rng(3)
+    n_dst, n_src, k = 20, 15, 4
+    nbr = rng.integers(0, n_src, (n_dst, k)).astype(np.int32)
+    valid = rng.random((n_dst, k)) < 0.7
+    w = np.where(valid, rng.normal(0, 1, (n_dst, k)), 0.0).astype(np.float32)
+    rnbr, rslot = build_reverse_ell(nbr, valid, n_src)
+    # dense matrices of both operators
+    a_fwd = np.zeros((n_dst, n_src))
+    for i in range(n_dst):
+        for kk in range(k):
+            if valid[i, kk]:
+                a_fwd[i, nbr[i, kk]] += w[i, kk]
+    rw = np.where(rslot >= 0, w.reshape(-1)[np.maximum(rslot, 0)], 0.0)
+    a_rev = np.zeros((n_src, n_dst))
+    for s in range(n_src):
+        for kk in range(rnbr.shape[1]):
+            if rslot[s, kk] >= 0:
+                a_rev[s, rnbr[s, kk]] += rw[s, kk]
+    np.testing.assert_allclose(a_rev, a_fwd.T, rtol=0, atol=0)
+
+
+def test_attach_p2p_is_pure_and_complete():
+    g = tiny_graph(n=96)
+    pg = partition_graph(g, 3, scheme="random")
+    base = pg.device_arrays()
+    n_before = len(base)
+    graph = attach_p2p(base, pg)
+    assert len(base) == n_before                         # input not mutated
+    for k in ("p2p_send_slot", "p2p_send_valid", "remote_src_p2p",
+              "ell_nbr", "ell_w", "ell_w_iso", "ell_rnbr", "ell_rslot"):
+        assert k in graph, k
+        assert graph[k].shape[0] == pg.q

@@ -1,0 +1,351 @@
+"""P2P wire runtime: parity with the all-gather wires + p2p ledger.
+
+The p2p wire (DESIGN.md §3.5) must be a pure transport change relative to
+the dense ``blockmask`` semantics: same per-exchange keys → same kept
+sets → the same remote values delivered, with only the local-edge
+summation order differing (ELL vs scatter).  These tests pin that at
+every acceptance rate on the emulated backend, pin emulated ≡ shard_map
+on the real ``ppermute`` ring, and pin the headline ledger identity:
+``CommLedger.transport == analytic point-to-point charge`` whenever the
+rate divides the lane-block count — strictly below the all-gather
+collective volume.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FULL_COMM, fixed, varco
+from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                     _packed_k_for, make_eval_step,
+                                     make_train_step, make_worker_mesh)
+from repro.dist.halo import attach_p2p
+from repro.graph import partition_graph, tiny_graph
+from repro.nn import GNNConfig, init_gnn
+from repro.nn.gnn import gnn_forward
+from repro.train.optim import adamw, sgd
+
+RATES = [1.0, 2.0, 4.0, 16.0]
+F = 256
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = tiny_graph(n=256, feat_dim=F)
+    cfg = GNNConfig(conv="sage", in_dim=F, hidden=128,
+                    out_dim=g.num_classes, layers=3)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, 4, scheme="random")
+    graph = attach_p2p(pg.device_arrays(), pg)
+    return cfg, params, pg, graph
+
+
+def _metas(pg, params):
+    return (DistMeta.build(pg, params),
+            DistMeta.build(pg, params, wire="p2p"))
+
+
+def _policy(rate):
+    return FULL_COMM if rate == 1.0 else fixed(rate, compressor="blockmask")
+
+
+# ---------------------------------------------------------------------------
+# emulated runtime parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rate", RATES)
+def test_p2p_forward_matches_dense_blockmask(setup, rate):
+    """Same keys → same delivered remote values; only the local summation
+    order differs, so logits agree to float tolerance at every rate."""
+    cfg, params, pg, graph = setup
+    meta_d, meta_r = _metas(pg, params)
+    pol = _policy(rate)
+    comp = pol.compressor() if pol.compresses else None
+    agg_d = _make_aggregate_emulated(graph, meta_d, pol, comp,
+                                     jnp.asarray(rate), jax.random.key(2))
+    agg_r = _make_aggregate_emulated(graph, meta_r, pol, comp, rate,
+                                     jax.random.key(2))
+    ld, bd = gnn_forward(params, cfg, graph["features"], agg_d)
+    lr, br = gnn_forward(params, cfg, graph["features"], agg_r)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lr),
+                               rtol=0, atol=1e-5)
+    # identical analytic charge; p2p transport never above dense
+    np.testing.assert_allclose(float(bd[0]), float(br[0]), rtol=1e-6)
+    assert float(br[1]) <= float(bd[1]) + 1e-6
+
+
+@pytest.mark.parametrize("rate", RATES)
+def test_p2p_backward_matches_dense_blockmask(setup, rate):
+    cfg, params, pg, graph = setup
+    meta_d, meta_r = _metas(pg, params)
+    pol = _policy(rate)
+    comp = pol.compressor() if pol.compresses else None
+
+    def loss(p, meta, r):
+        agg = _make_aggregate_emulated(graph, meta, pol, comp, r,
+                                       jax.random.key(4))
+        logits, _ = gnn_forward(p, cfg, graph["features"], agg)
+        return jnp.sum(logits ** 2)
+
+    gd = jax.grad(loss)(params, meta_d, jnp.asarray(rate))
+    gr = jax.grad(loss)(params, meta_r, rate)
+    for a, b in zip(jax.tree_util.tree_leaves(gd),
+                    jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_p2p_rate1_training_matches_dense_full_comm(setup):
+    """Acceptance: p2p rate-1 training ≡ dense full comm.  Plain SGD keeps
+    the comparison proportional to the gradient diff (adaptive optimizers
+    amplify summation-order noise on near-zero gradients to ±lr)."""
+    cfg, params, pg, graph = setup
+    meta_d, meta_r = _metas(pg, params)
+    opt = sgd(1e-2)
+    outs = []
+    for meta in (meta_d, meta_r):
+        p, s = params, opt.init(params)
+        step = make_train_step(cfg, FULL_COMM, opt, meta)
+        for i in range(5):
+            p, s, m = step(p, s, graph, jnp.asarray(i), jax.random.key(i))
+        outs.append((p, float(m["loss"])))
+    (pd, lossd), (pr, lossr) = outs
+    assert abs(lossd - lossr) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(pd),
+                    jax.tree_util.tree_leaves(pr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   rtol=0)
+
+
+def test_p2p_varco_schedule_trains(setup):
+    """A VARCO blockmask policy runs on the p2p wire; the transport charge
+    tracks the packed hop width at every annealed rate."""
+    cfg, params, pg, graph = setup
+    _, meta_r = _metas(pg, params)
+    pol = varco(total_steps=8, slope=5, compressor="blockmask")
+    opt = adamw(5e-3)
+    step = make_train_step(cfg, pol, opt, meta_r)
+    p, s = params, opt.init(params)
+    losses = []
+    for i in range(6):
+        p, s, m = step(p, s, graph, jnp.asarray(i), jax.random.key(i))
+        losses.append(float(m["loss"]))
+        rate = float(m["rate"])
+        widths = [meta_r.packed_width(f, rate)
+                  for f in (cfg.in_dim, cfg.hidden, cfg.hidden)]
+        expect = 2 * meta_r.halo_demand * 32.0 * sum(widths)
+        np.testing.assert_allclose(float(m["transport_bits"]), expect,
+                                   rtol=1e-6)
+    assert losses[-1] < losses[0]
+    accs = make_eval_step(cfg, meta_r)(p, graph)
+    assert 0.0 <= float(accs["test"]) <= 1.0
+
+
+def test_p2p_nocomm_policy(setup):
+    """The No-Comm baseline ships nothing on the p2p wire too."""
+    from repro.core import NO_COMM
+    cfg, params, pg, graph = setup
+    _, meta_r = _metas(pg, params)
+    agg = _make_aggregate_emulated(graph, meta_r, NO_COMM, None,
+                                   jnp.ones(()), jax.random.key(0))
+    _, bits = agg(0, graph["features"])
+    assert float(jnp.sum(jnp.abs(bits))) == 0.0
+
+
+def test_train_gnn_p2p_wire_end_to_end():
+    """The high-level trainer attaches the halo/ELL arrays itself — the
+    public entry point must work without the caller knowing about
+    attach_p2p (regression: KeyError 'p2p_send_slot')."""
+    from repro.train.trainer import train_gnn
+    g = tiny_graph(n=128)
+    res = train_gnn(g, q=2, policy=FULL_COMM, epochs=3, hidden=32,
+                    layers=2, eval_every=2, wire="p2p")
+    assert res.meta.wire == "p2p"
+    assert 0.0 <= res.history.final_test_acc <= 1.0
+    assert res.history.total_transport_gfloats > 0.0
+
+
+# ---------------------------------------------------------------------------
+# ledger: transport == analytic point-to-point charge
+# ---------------------------------------------------------------------------
+
+
+def test_p2p_transport_equals_analytic_when_rate_divides():
+    """Acceptance headline: on the p2p wire ``transport == halo_demand ×
+    F/rate × 32`` — exactly — whenever the rate divides the lane-block
+    count, end-to-end through a train step's metrics."""
+    g = tiny_graph(n=200, feat_dim=512)
+    cfg = GNNConfig(conv="sage", in_dim=512, hidden=512,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, 4, scheme="random")
+    graph = attach_p2p(pg.device_arrays(), pg)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    opt = sgd(1e-2)
+    for rate in (1.0, 2.0, 4.0):                   # 512/128 = 4 blocks
+        np.testing.assert_allclose(float(meta.transport_bits(512, rate)),
+                                   float(meta.ledger_bits(512, rate)),
+                                   rtol=1e-7)
+        step = make_train_step(cfg, _policy(rate), opt, meta)
+        _, _, m = step(params, opt.init(params), graph, jnp.asarray(0),
+                       jax.random.key(0))
+        np.testing.assert_allclose(float(m["transport_bits"]),
+                                   float(m["halo_bits"]), rtol=1e-6)
+
+
+def test_p2p_transport_strictly_below_allgather(setup):
+    """The p2p ring beats the all-gather collective volume whenever the
+    partition graph isn't complete-with-full-overlap (random partitions
+    here): halo_demand rows vs Q·(Q-1)·B rows."""
+    cfg, params, pg, graph = setup
+    meta_p = DistMeta.build(pg, params, wire="packed")
+    _, meta_r = _metas(pg, params)
+    for f in (256, 512):
+        for rate in RATES:
+            p2p = float(meta_r.transport_bits(f, rate))
+            ag = meta_p.collective_bits(f, rate)
+            assert p2p < ag, (f, rate, p2p, ag)
+            # padded ring volume also never exceeds the all-gather's
+            assert meta_r.collective_bits(f, rate) <= ag
+
+
+def test_p2p_transport_quantises_like_packed(setup):
+    """At a non-dividing rate the hop width floors to whole lane-blocks —
+    the same quantisation the packed wire documents."""
+    cfg, params, pg, graph = setup
+    _, meta_r = _metas(pg, params)
+    # F=256 → 2 blocks; rate 16 floors to 1 kept block of 128 cols
+    assert float(meta_r.transport_bits(256, 16.0)) == \
+        meta_r.halo_demand * 128 * 32.0
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_p2p_requires_blockmask_compressor(setup):
+    cfg, params, pg, graph = setup
+    _, meta_r = _metas(pg, params)
+    with pytest.raises(ValueError, match="blockmask"):
+        make_train_step(cfg, fixed(4.0), adamw(1e-3), meta_r)
+
+
+def test_p2p_compressing_requires_lane_widths():
+    g = tiny_graph(n=64, feat_dim=96)                  # 96 % 128 != 0
+    cfg = GNNConfig(conv="sage", in_dim=96, hidden=128,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, 2, scheme="random")
+    meta = DistMeta.build(pg, params, wire="p2p")      # build itself is fine
+    with pytest.raises(ValueError, match="divisible"):
+        make_train_step(cfg, fixed(2.0, compressor="blockmask"),
+                        adamw(1e-3), meta)
+    # an uncompressed policy runs off-lane-grid widths (dense hop rows)
+    graph = attach_p2p(pg.device_arrays(), pg)
+    step = make_train_step(cfg, FULL_COMM, adamw(1e-3), meta)
+    opt = adamw(1e-3)
+    step(params, opt.init(params), graph, jnp.asarray(0), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# bounded shard_map executable cache (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_cache_bounded():
+    """Annealing across many kept-block maps must evict compiled
+    executables rather than pin every one forever."""
+    g = tiny_graph(n=64, feat_dim=1024)
+    cfg = GNNConfig(conv="sage", in_dim=1024, hidden=128,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, 1, scheme="random")
+    graph = pg.device_arrays()
+    meta = DistMeta.build(pg, params, wire="packed")
+    pol = varco(total_steps=12, slope=1, c_max=8.0, compressor="blockmask")
+    maps = [_packed_k_for(meta, float(pol.rate(i))) for i in range(12)]
+    distinct = list(dict.fromkeys(maps))
+    assert len(distinct) >= 3                      # schedule walks ≥3 maps
+    assert maps[0] not in distinct[-2:]            # first map gets evicted
+
+    mesh = make_worker_mesh(1)                     # single real CPU device
+    from repro.dist.gnn_parallel import shard_graph
+    gs = shard_graph(graph, mesh)
+    opt = sgd(1e-2)
+    step = make_train_step(cfg, pol, opt, meta, mesh=mesh,
+                           compiled_cache_size=2)
+    p, s = params, opt.init(params)
+    for i in (maps.index(m) for m in distinct):    # one step per map
+        p, s, _ = step(p, s, gs, jnp.asarray(i), jax.random.key(i))
+    info = step.cache_info()
+    assert info.currsize <= 2, info
+    assert info.misses == len(distinct), info
+    # revisiting the evicted first map recompiles (evict ≠ break)
+    p, s, _ = step(p, s, gs, jnp.asarray(0), jax.random.key(0))
+    assert step.cache_info().misses == len(distinct) + 1
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend (subprocess: needs 8 virtual devices)
+# ---------------------------------------------------------------------------
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+P2P_SHARD_EQUIV = """
+import jax, jax.numpy as jnp
+from repro.graph import tiny_graph, partition_graph
+from repro.nn import GNNConfig, init_gnn
+from repro.dist.gnn_parallel import (DistMeta, make_train_step,
+                                     make_worker_mesh, shard_graph)
+from repro.dist.halo import attach_p2p
+from repro.core import FULL_COMM, fixed
+from repro.train.optim import sgd
+
+g = tiny_graph(n=256, feat_dim=256)
+cfg = GNNConfig(conv='sage', in_dim=256, hidden=128,
+                out_dim=g.num_classes, layers=3)
+params = init_gnn(jax.random.key(0), cfg)
+pg = partition_graph(g, 8, scheme='random')
+graph = attach_p2p(pg.device_arrays(), pg)
+meta = DistMeta.build(pg, params, wire='p2p')
+opt = sgd(1e-2)
+mesh = make_worker_mesh(8)
+gs = shard_graph(graph, mesh)
+
+for rate in (1.0, 2.0, 4.0, 16.0):
+    pol = FULL_COMM if rate == 1.0 else fixed(rate, compressor='blockmask')
+    p_e, s_e = params, opt.init(params)
+    step_e = make_train_step(cfg, pol, opt, meta)
+    p_s, s_s = params, opt.init(params)
+    step_s = make_train_step(cfg, pol, opt, meta, mesh=mesh)
+    for i in range(4):
+        p_e, s_e, m_e = step_e(p_e, s_e, graph, jnp.asarray(i),
+                               jax.random.key(i))
+        p_s, s_s, m_s = step_s(p_s, s_s, gs, jnp.asarray(i),
+                               jax.random.key(i))
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)))
+    assert d < 1e-6, (rate, d)
+    assert abs(float(m_e['loss']) - float(m_s['loss'])) < 1e-5, rate
+    assert abs(float(m_e['transport_bits']) -
+               float(m_s['transport_bits'])) < 1.0, rate
+print('P2P_SHARD_OK')
+"""
+
+
+@pytest.mark.slow
+def test_p2p_shard_map_matches_emulated():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", P2P_SHARD_EQUIV], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "P2P_SHARD_OK" in out.stdout
