@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify fast smoke bench-smoke wire-smoke ring-smoke docs all
+.PHONY: test verify fast smoke bench-smoke wire-smoke ring-smoke \
+        ratectl-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -23,7 +24,10 @@ wire-smoke:                  # packed + p2p halo-exchange acceptance checks
 ring-smoke:                  # p2p ring: transport == analytic at rates {1,4}
 	$(PY) benchmarks/halo_exchange.py --smoke-ring
 
+ratectl-smoke:               # closed loop: budget within 5%, error >= uniform
+	$(PY) benchmarks/ratectl_budget.py --smoke
+
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
-all: verify smoke bench-smoke wire-smoke ring-smoke docs
+all: verify smoke bench-smoke wire-smoke ring-smoke ratectl-smoke docs

@@ -1,0 +1,163 @@
+"""Fig.-5 frontier, closed loop: accuracy vs wire budget per controller.
+
+The paper's headline (Fig. 5) plots accuracy against communicated floats
+for the *open-loop* eq.-(8) schedule.  This sweep reproduces that
+frontier for the closed-loop controllers of ``repro.dist.ratectl``: per
+budget fraction ``B = frac × full-comm transport`` it trains the same
+partitioned graph under
+
+* ``uniform`` — the fixed-rate baseline whose rate is chosen to land on
+  the budget (the paper's Fixed Comp Rate point),
+* ``budget``  — the PI controller told ``auto:budget:<B>``,
+* ``error``   — the per-pair water-filling controller ``auto:error:<B>``,
+
+plus one open-loop ``varco:linear:5`` run (its own measured transport is
+its x-coordinate), all on the p2p wire.  Per row it records the budget,
+the transport actually shipped (and its fraction of budget), and
+final/best test accuracy.
+
+``--smoke`` is the CI acceptance check (~2 min): the ``budget``
+controller's accumulated transport must land within 5% of the requested
+bits, and the ``error`` controller's accuracy at the uniform baseline's
+measured budget must be at least the baseline's.
+
+Output: ``experiments/bench/ratectl_budget.csv`` (schema in
+benchmarks/README.md).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+if __package__ in (None, ""):               # `python benchmarks/...py` direct
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import save_rows
+
+# the budget/error controllers need kept-block headroom: F=512 → nb=4
+F = 512
+LAYERS = 2
+Q = 4
+SCHEME = "metis-like"
+
+
+def _train(g, policy_spec: str, epochs: int, wire: str = "p2p",
+           compressor: str | None = None):
+    from repro.core import CommPolicy
+    from repro.train import train_gnn
+
+    policy = CommPolicy.parse(policy_spec, epochs, compressor=compressor)
+    res = train_gnn(g, q=Q, scheme=SCHEME, policy=policy, epochs=epochs,
+                    hidden=F, layers=LAYERS, eval_every=10, wire=wire)
+    transport_bits = res.history.total_transport_gfloats * 32e9
+    return res, transport_bits
+
+
+def _full_step_bits(g) -> float:
+    """Analytic full-communication transport of one train step (the same
+    model the controllers pace against: ``exchange_widths``)."""
+    import jax
+
+    from repro.dist.gnn_parallel import DistMeta
+    from repro.dist.ratectl import exchange_widths
+    from repro.graph import partition_graph
+    from repro.nn import GNNConfig, init_gnn
+
+    cfg = GNNConfig(conv="sage", in_dim=F, hidden=F,
+                    out_dim=g.num_classes, layers=LAYERS)
+    pg = partition_graph(g, Q, scheme=SCHEME)
+    meta = DistMeta.build(pg, init_gnn(jax.random.key(0), cfg), wire="p2p")
+    return 2.0 * 32.0 * meta.halo_demand * sum(exchange_widths(cfg))
+
+
+def main(quick: bool = True) -> dict:
+    from repro.graph.synthetic import citation_graph
+
+    n = 1200 if quick else 6000
+    epochs = 30 if quick else 120
+    fracs = [0.3, 0.5] if quick else [0.2, 0.35, 0.5, 0.75]
+    g = citation_graph(n=n, feat_dim=F, seed=0)
+    d_full = _full_step_bits(g)
+    rows = []
+    t0 = time.time()
+    worst_budget_err = 0.0
+    for frac in fracs:
+        budget = frac * d_full * epochs
+        # uniform fixed-rate baseline aimed at the budget
+        res_u, t_u = _train(g, f"fixed:{1.0 / frac:g}", epochs,
+                            compressor="blockmask")
+        rows.append({"policy": "uniform", "budget_bits": budget,
+                     "transport_bits": t_u, "of_budget": t_u / budget,
+                     "final_acc": res_u.history.final_test_acc,
+                     "best_acc": res_u.history.best_test_acc})
+        for ctl in ("budget", "error"):
+            res, t = _train(g, f"auto:{ctl}:{budget:g}", epochs)
+            if ctl == "budget":
+                worst_budget_err = max(worst_budget_err,
+                                       abs(t - budget) / budget)
+            rows.append({"policy": ctl, "budget_bits": budget,
+                         "transport_bits": t, "of_budget": t / budget,
+                         "final_acc": res.history.final_test_acc,
+                         "best_acc": res.history.best_test_acc})
+    res_o, t_o = _train(g, "varco:linear:5", epochs,
+                        compressor="blockmask")
+    rows.append({"policy": "open-loop", "budget_bits": t_o,
+                 "transport_bits": t_o, "of_budget": 1.0,
+                 "final_acc": res_o.history.final_test_acc,
+                 "best_acc": res_o.history.best_test_acc})
+    save_rows("ratectl_budget", rows)
+    return {"name": "ratectl_budget",
+            "us_per_call": 1e6 * (time.time() - t0) / max(len(rows), 1),
+            "derived": f"rows={len(rows)}|worst_budget_err="
+                       f"{worst_budget_err:.4f}"}
+
+
+def smoke() -> None:
+    """Acceptance: budget adherence within 5%, error >= uniform accuracy."""
+    from repro.graph.synthetic import citation_graph
+
+    epochs = 40
+    g = citation_graph(n=1200, feat_dim=F, seed=0)
+
+    # the uniform fixed-rate baseline's measured transport IS the budget,
+    # so the closed-loop runs compete at exactly equal wire spend
+    res_u, budget = _train(g, "fixed:2", epochs, compressor="blockmask")
+    acc_u = res_u.history.final_test_acc
+    print(f"uniform fixed:2  transport={budget:.4g} bits  acc={acc_u:.4f}")
+
+    res_b, t_b = _train(g, f"auto:budget:{budget:g}", epochs)
+    err = abs(t_b - budget) / budget
+    print(f"budget controller  spent/budget={t_b / budget:.4f}  "
+          f"acc={res_b.history.final_test_acc:.4f}")
+    assert err <= 0.05, (
+        f"budget controller missed the bit budget by {100 * err:.1f}% "
+        f"(> 5%): shipped {t_b:.4g} of {budget:.4g}")
+
+    res_e, t_e = _train(g, f"auto:error:{budget:g}", epochs)
+    acc_e = res_e.history.final_test_acc
+    print(f"error controller   spent/budget={t_e / budget:.4f}  "
+          f"acc={acc_e:.4f}")
+    assert t_e <= 1.05 * budget, (t_e, budget)
+    assert acc_e + 1e-6 >= acc_u, (
+        f"error controller accuracy {acc_e:.4f} fell below the uniform "
+        f"baseline {acc_u:.4f} at equal budget")
+    print("RATECTL_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--smoke", action="store_true",
+                     help="acceptance: budget within 5%, error >= uniform "
+                          "accuracy at equal budget (~2 min)")
+    grp.add_argument("--full", action="store_true",
+                     help="paper-scale frontier sweep")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print(main(quick=not args.full))

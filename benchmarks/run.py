@@ -22,17 +22,21 @@ MODULES = [
     "benchmarks.transformer_comm",
     "benchmarks.kernel_bench",
     "benchmarks.halo_exchange",              # dense/packed/p2p wire sweep
+    "benchmarks.ratectl_budget",             # closed-loop budget frontier
     "benchmarks.roofline",
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
+    """Run the registered benchmarks; returns the number of FAILED modules
+    (the process exit code — CI must never pass on a broken benchmark;
+    regression: tests/test_bench_run.py)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     failed = 0
@@ -49,9 +53,8 @@ def main() -> None:
             failed += 1
             print(f"{modname},NaN,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
-    if failed:
-        sys.exit(1)
+    return failed
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

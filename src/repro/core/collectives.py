@@ -67,7 +67,8 @@ def compressed_all_gather(x: Array, axis_name: str, *, compressor: Compressor,
 
 def packed_all_gather(x: Array, axis_name: str, *, key: Array,
                       rate: float | None = None,
-                      n_keep: int | None = None) -> tuple[Array, Array]:
+                      n_keep: int | None = None,
+                      pair_k: Array | None = None) -> tuple[Array, Array]:
     """All-gather of *packed* boundary activations (DESIGN.md §3.3).
 
     The real reduced-volume wire path: where :func:`compressed_all_gather`
@@ -87,6 +88,15 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     ``rate``, which quantises to ``K = max(floor((F/128)/rate), 1)``.
     ``x.shape[-1]`` must be a multiple of 128.
 
+    ``pair_k`` (traced ``[Q, Q]`` receiver × sender kept-block counts,
+    DESIGN.md §3.6) realises a per-pair rate map at this wire's native
+    granularity — per *sender*: one payload serves every receiver, so
+    sender ``j`` keeps ``max_i pair_k[i, j]`` blocks (the most demanding
+    receiver) by zeroing its packed columns whose block sits at permutation
+    position ``>=`` that count (kept sets are nested under one key, so the
+    zeroed round trip matches the dense ``blockmask`` at the realised rate
+    bitwise).  ``n_keep`` must then be the map's static maximum.
+
     Returns ``(gathered [Q, B, F], collective_bits)``.  ``collective_bits``
     counts the buffer the collective physically moves — every worker's
     packed payload, halo-padding rows included, crossing to ``Q - 1`` peers
@@ -96,7 +106,8 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     across wire formats (DESIGN.md §3.2–3.3).
     """
     from repro.kernels.ops import wire_pack, wire_unpack
-    from repro.kernels.varco_pack import LANE, worker_block_maps
+    from repro.kernels.varco_pack import (LANE, worker_block_maps,
+                                          worker_block_maps_pos)
 
     f = x.shape[-1]
     if f % LANE:
@@ -109,9 +120,19 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
         n_keep = max(int(n_blocks / max(float(rate), 1.0)), 1)
     # every worker's (kept, inv) pair from the shared key — receivers need
     # all of them to decode the gathered buffer
-    kept_all, inv_all = worker_block_maps(key, q, n_blocks, n_keep)
     idx = lax.axis_index(axis_name)
-    packed = wire_pack(x, kept_all[idx], inv_all[idx])     # [B, K*128]
+    if pair_k is None:
+        kept_all, inv_all = worker_block_maps(key, q, n_blocks, n_keep)
+        packed = wire_pack(x, kept_all[idx], inv_all[idx])   # [B, K*128]
+    else:
+        kept_all, inv_all, pos_all = worker_block_maps_pos(key, q, n_blocks,
+                                                           n_keep)
+        off = jnp.where(jnp.eye(q, dtype=bool), 0, pair_k)
+        k_send = jnp.maximum(jnp.max(off, axis=0), 1)        # [Q]
+        packed = wire_pack(x, kept_all[idx], inv_all[idx])
+        pos_kept = pos_all[idx][kept_all[idx]]               # [K]
+        cmask = (pos_kept < k_send[idx]).astype(x.dtype)
+        packed = packed * jnp.repeat(cmask, LANE)[None, :]
     gathered = lax.all_gather(packed, axis_name)           # [Q, B, K*128]
     halo = jax.vmap(wire_unpack)(gathered, kept_all, inv_all)
     payload = packed.size * jnp.finfo(packed.dtype).bits
@@ -121,7 +142,8 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
 
 def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
                       axis_name: str, *, key: Array | None = None,
-                      n_keep: int | None = None) -> tuple[Array, Array]:
+                      n_keep: int | None = None,
+                      pair_k: Array | None = None) -> tuple[Array, Array]:
     """Neighbor-only p2p halo exchange over a ``ppermute`` ring (§3.5).
 
     Where :func:`packed_all_gather` ships every worker's whole boundary
@@ -148,35 +170,60 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
     the sender's inverse map re-derived from the shared ``key`` (no index
     metadata on the wire).
 
+    ``pair_k`` (traced ``[Q, Q]`` receiver × sender kept-block counts,
+    DESIGN.md §3.6) realises a per-pair rate map *exactly* on this wire:
+    hop ``d``'s buffer from sender ``j`` is masked down to receiver
+    ``(j+d) mod Q``'s own kept count before the ``ppermute`` (the nested
+    column masks of ``block_mask_indices_pos``), so every ordered pair
+    travels at its own rate.  ``n_keep`` must then be the map's static
+    maximum, and ``wire_bits`` charges each pair its own kept columns.
+
     Returns ``(compact, wire_bits)``: ``compact [(Q-1)·H, F]`` stacks the
     received hops (offset ``d`` at rows ``[(d-1)·H, d·H)``; ``[1, F]``
     zeros when ``Q == 1``), and ``wire_bits`` counts the genuine rows
     shipped ring-wide × on-wire columns — which equals
     ``halo_demand × width × 32`` (identical on all workers).
     """
+    if pair_k is not None and n_keep is None:
+        raise ValueError("pair_k needs n_keep (the map's static maximum)")
     q = _axis_size(axis_name)
     f = publish.shape[-1]
     if q == 1:
         return jnp.zeros((1, f), publish.dtype), jnp.zeros((), jnp.float32)
     width = f
-    kept_all = inv_all = None
+    kept_all = inv_all = pos_kept_me = None
     if n_keep is not None:
         from repro.kernels.ops import wire_pack, wire_unpack
-        from repro.kernels.varco_pack import LANE, worker_block_maps
+        from repro.kernels.varco_pack import (LANE, worker_block_maps,
+                                              worker_block_maps_pos)
         if f % LANE:
             raise ValueError(f"packed p2p hops need F % {LANE} == 0, "
                              f"got F={f}")
         if key is None:
             raise ValueError("n_keep needs the shared exchange key")
         width = n_keep * LANE
-        kept_all, inv_all = worker_block_maps(key, q, f // LANE, n_keep)
+        if pair_k is None:
+            kept_all, inv_all = worker_block_maps(key, q, f // LANE, n_keep)
+        else:
+            kept_all, inv_all, pos_all = worker_block_maps_pos(
+                key, q, f // LANE, n_keep)
     me = lax.axis_index(axis_name)
     if n_keep is not None:
         publish = wire_pack(publish, kept_all[me], inv_all[me])
+        if pair_k is not None:
+            pos_kept_me = pos_all[me][kept_all[me]]          # [K]
 
     hops = []
+    bits = jnp.zeros((), jnp.float32)
     for d in range(1, q):
         rows = publish[send_slot[d - 1]] * send_valid[d - 1][:, None]
+        if pair_k is not None:
+            recv = (me + d) % q
+            k_pair = pair_k[recv, me]
+            cmask = (pos_kept_me < k_pair).astype(rows.dtype)
+            rows = rows * jnp.repeat(cmask, LANE)[None, :]
+            bits = bits + jnp.sum(send_valid[d - 1]) * \
+                k_pair.astype(jnp.float32) * LANE * 32.0
         rows = lax.ppermute(rows, axis_name,
                             [(j, (j + d) % q) for j in range(q)])
         if n_keep is not None:
@@ -184,7 +231,10 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
             rows = wire_unpack(rows, kept_all[src], inv_all[src])
         hops.append(rows)
     compact = jnp.concatenate(hops, axis=0)
-    wire_bits = lax.psum(jnp.sum(send_valid), axis_name) * width * 32.0
+    if pair_k is not None:
+        wire_bits = lax.psum(bits, axis_name)
+    else:
+        wire_bits = lax.psum(jnp.sum(send_valid), axis_name) * width * 32.0
     return compact, wire_bits
 
 

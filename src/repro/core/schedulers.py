@@ -35,8 +35,11 @@ class Scheduler:
     c_min: float
 
     def __call__(self, step):
-        return jnp.maximum(jnp.asarray(self.fn(jnp.asarray(step, jnp.float32)),
-                                       jnp.float32), self.c_min)
+        # clamp BOTH ends: a mis-specified fn can neither dip below the
+        # c_min floor nor request a rate above the configured c_max
+        # ceiling (regression: tests/test_schedulers.py)
+        c = jnp.asarray(self.fn(jnp.asarray(step, jnp.float32)), jnp.float32)
+        return jnp.clip(c, self.c_min, self.c_max)
 
 
 def constant(c: float) -> Scheduler:

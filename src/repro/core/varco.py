@@ -24,22 +24,48 @@ from . import schedulers
 from .compression import Compressor, get_compressor
 from .schedulers import Scheduler
 
-MODES = ("full", "none", "fixed", "varco")
+MODES = ("full", "none", "fixed", "varco", "auto")
+
+#: closed-loop controllers (``repro.dist.ratectl``) reachable via
+#: ``auto:<controller>:<budget-bits>`` — kept in sync with
+#: ``repro.dist.ratectl.base.CONTROLLERS`` (pinned by tests)
+AUTO_CONTROLLERS = ("budget", "error", "stale")
 
 
 @dataclasses.dataclass(frozen=True)
 class CommPolicy:
-    """Static description of the communication scheme for a training run."""
+    """Static description of the communication scheme for a training run.
+
+    ``auto`` mode names a closed-loop controller plus its total wire
+    budget in bits: the rates are planned per step (and per worker pair)
+    by ``repro.dist.ratectl`` from measured transport feedback, not by a
+    step → rate schedule, so ``rate(step)`` is undefined for it.
+    """
 
     mode: str = "full"
     scheduler: Scheduler | None = None
     compressor_name: str = "randmask"
+    controller: str | None = None
+    budget_bits: float = 0.0
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
         if self.mode in ("fixed", "varco") and self.scheduler is None:
             raise ValueError(f"mode {self.mode!r} requires a scheduler")
+        if self.mode == "auto":
+            if self.controller not in AUTO_CONTROLLERS:
+                raise ValueError(
+                    f"auto mode needs a controller in {AUTO_CONTROLLERS}, "
+                    f"got {self.controller!r}")
+            if not self.budget_bits > 0:
+                raise ValueError(f"auto mode needs a positive bit budget, "
+                                 f"got {self.budget_bits!r}")
+            if self.compressor_name != "blockmask":
+                raise ValueError(
+                    "auto mode rides the packed/p2p wires, which ship "
+                    "PRNG-selected lane-blocks; the compressor must be "
+                    f"'blockmask', got {self.compressor_name!r}")
 
     # -- construction --------------------------------------------------------
 
@@ -49,7 +75,9 @@ class CommPolicy:
         """Parse CLI specs.
 
         ``full`` | ``none`` | ``fixed:<r>`` | ``varco:linear:<a>`` |
-        ``varco:exp`` | ``varco:cosine`` | ``varco:step:<R>``
+        ``varco:exp`` | ``varco:cosine`` | ``varco:step:<R>`` |
+        ``auto:<controller>:<budget-bits>`` with controller in
+        ``budget`` / ``error`` / ``stale`` (e.g. ``auto:budget:2e9``).
         """
         spec = spec.strip().lower()
         if spec == "full":
@@ -64,6 +92,15 @@ class CommPolicy:
             return CommPolicy("varco",
                               schedulers.parse(rest or "linear:5", total_steps),
                               compressor or "randmask")
+        if kind == "auto":
+            ctl, _, budget = rest.partition(":")
+            if not ctl or not budget:
+                raise ValueError(
+                    f"auto spec is auto:<controller>:<budget-bits>, "
+                    f"got {spec!r}")
+            return CommPolicy("auto", compressor_name=compressor or
+                              "blockmask", controller=ctl,
+                              budget_bits=float(budget))
         raise ValueError(f"unknown comm spec {spec!r}")
 
     # -- queries -------------------------------------------------------------
@@ -74,13 +111,18 @@ class CommPolicy:
 
     @property
     def compresses(self) -> bool:
-        return self.mode in ("fixed", "varco")
+        return self.mode in ("fixed", "varco", "auto")
 
     def compressor(self) -> Compressor:
         return get_compressor(self.compressor_name)
 
     def rate(self, step) -> jnp.ndarray:
         """Compression ratio at ``step`` (1.0 for full communication)."""
+        if self.mode == "auto":
+            raise ValueError(
+                "auto policies plan rates closed-loop per step — drive the "
+                "run via repro.dist.ratectl (train_gnn does this) instead "
+                "of querying a schedule")
         if not self.compresses:
             return jnp.ones((), jnp.float32)
         return self.scheduler(step)
@@ -88,6 +130,9 @@ class CommPolicy:
     def describe(self) -> str:
         if self.mode in ("full", "none"):
             return self.mode
+        if self.mode == "auto":
+            return (f"auto({self.controller},{self.budget_bits:g}b,"
+                    f"{self.compressor_name})")
         return f"{self.mode}({self.scheduler.name},{self.compressor_name})"
 
 

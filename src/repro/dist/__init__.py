@@ -19,6 +19,10 @@ Three modules, one per distribution style (DESIGN.md §2):
   plus the worker-axis specs of the GNN graph pytree.
 * ``grad_compress`` — VARCO applied to data-parallel gradient all-reduce,
   transplanting the paper's variable-rate scheme to LM training.
+* ``ratectl``       — closed-loop rate control (DESIGN.md §3.6): the
+  ``RateController`` API plus the ``budget`` / ``error`` / ``stale``
+  controllers turning a byte budget into per-step, per-pair ``[Q, Q]``
+  rate maps, and the per-pair-rate train step they drive.
 """
 
 from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
@@ -27,6 +31,10 @@ from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
 from repro.dist.grad_compress import make_dp_mesh, make_varco_dp_train_step
 from repro.dist.halo import (HaloSpec, attach_p2p, build_halo_spec,
                              build_reverse_ell, ell_arrays, halo_arrays)
+from repro.dist.ratectl import (RateController, RatePlan, budget_controller,
+                                error_controller, init_halo_cache,
+                                make_auto_train_step, make_controller,
+                                make_pacing, stale_controller)
 from repro.dist.sharding import (activation_sharding, batch_spec, cache_spec,
                                  data_axes, dispatch_groups, maybe_shard,
                                  param_shardings, param_spec,
@@ -37,6 +45,9 @@ __all__ = [
     "shard_graph",
     "HaloSpec", "attach_p2p", "build_halo_spec", "build_reverse_ell",
     "ell_arrays", "halo_arrays",
+    "RateController", "RatePlan", "budget_controller", "error_controller",
+    "init_halo_cache", "make_auto_train_step", "make_controller",
+    "make_pacing", "stale_controller",
     "make_dp_mesh", "make_varco_dp_train_step",
     "activation_sharding", "batch_spec", "cache_spec", "data_axes",
     "dispatch_groups", "maybe_shard", "param_shardings", "param_spec",

@@ -41,6 +41,14 @@ step quantises from the schedule outside jit (bounded recompiles — see
 :func:`make_train_step`).  The p2p wire needs the halo/ELL index arrays of
 :func:`repro.dist.halo.attach_p2p` merged into the graph pytree.
 
+Both non-dense wires additionally accept a per-pair ``[Q, Q]`` **rate
+map** (DESIGN.md §3.6) in place of the scalar rate — the operand the
+closed-loop controllers of ``repro.dist.ratectl`` plan each step: one
+static kept-block count per width (the map's maximum) keeps recompiles
+bounded, nested permutation masks carve out each pair's own kept set, and
+the ledger grows per-pair transport / compression-error / staleness
+columns (see :func:`_make_aggregate_emulated`).
+
 Ledger accounting (paper Fig. 5 axis): every exchange charges two numbers,
 ``[analytic, transport]``.  Analytic is ``halo_demand × F × 32 / rate``
 bits — the activations a point-to-point implementation would ship.
@@ -71,7 +79,8 @@ from repro.core.varco import FULL_COMM, CommPolicy
 from repro.dist.sharding import worker_graph_shardings
 from repro.graph.partition import PartitionedGraph
 from repro.kernels.ops import ell_aggregate, wire_pack, wire_unpack
-from repro.kernels.varco_pack import LANE, worker_block_maps
+from repro.kernels.varco_pack import (LANE, worker_block_maps,
+                                      worker_block_maps_pos)
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
 from repro.train.optim import Optimizer, apply_updates
 
@@ -128,6 +137,10 @@ class DistMeta:
     wire: str = "dense"
     p2p_hop_width: int = 0
     p2p_compact: int = 0
+    # flattened [Q*Q] per-pair halo row counts (receiver-major; diagonal 0),
+    # summing to halo_demand — the unit of per-pair rate-map accounting and
+    # of the ratectl controllers' water-filling (DESIGN.md §3.6)
+    pair_rows: tuple = ()
 
     def __post_init__(self):
         if self.wire not in WIRES:
@@ -153,11 +166,16 @@ class DistMeta:
                 dims.append(int(layer["self"]["w"].shape[0]))
             else:                                     # poly taps
                 dims.append(int(layer["taps"][0]["w"].shape[0]))
+        # the per-pair facts cost an O(Q² + edges) host sweep — only the
+        # rate-map-capable wires consume them, the dense wire stays free
         hop_w = compact = 0
-        if wire == "p2p":
+        pair_rows: tuple = ()
+        if wire != "dense":
             from repro.dist.halo import build_halo_spec
             spec = build_halo_spec(pg)
-            hop_w, compact = spec.hop_width, spec.compact_rows
+            pair_rows = spec.pair_rows
+            if wire == "p2p":
+                hop_w, compact = spec.hop_width, spec.compact_rows
         return DistMeta(
             q=pg.q, part_size=pg.part_size, halo_size=pg.halo_size,
             num_nodes=pg.num_nodes, feat_dim=pg.feat_dim,
@@ -167,7 +185,22 @@ class DistMeta:
             n_val=int(pg.val_mask.sum()),
             n_test=int(pg.test_mask.sum()),
             layer_dims=tuple(dims), wire=wire,
-            p2p_hop_width=hop_w, p2p_compact=compact)
+            p2p_hop_width=hop_w, p2p_compact=compact,
+            pair_rows=pair_rows)
+
+    def pair_table(self) -> np.ndarray:
+        """``[Q, Q]`` per-pair halo row counts (receiver × sender, diagonal
+        0; entries sum to ``halo_demand``).  The unit of the per-pair
+        rate-map ledger and of ``repro.dist.ratectl``'s allocations.
+        Populated by :meth:`build` for the packed and p2p wires;
+        hand-constructed or dense-wire metas must fill ``pair_rows``
+        before using a ``[Q, Q]`` rate map."""
+        if not self.pair_rows:
+            raise ValueError(
+                "DistMeta.pair_rows is empty — per-pair rate maps need the "
+                "pair table; construct the meta via DistMeta.build(...) "
+                "with wire='packed' or 'p2p' (dense metas don't carry it)")
+        return np.asarray(self.pair_rows, np.int64).reshape(self.q, self.q)
 
     def ledger_bits(self, feat: int, rate=1.0) -> jnp.ndarray:
         """Analytic wire bits of one halo exchange at feature width ``feat``."""
@@ -331,9 +364,108 @@ def _packed_k_for(meta: DistMeta, rate_f: float) -> tuple:
     return tuple((nb, max(int(nb / max(rate_f, 1.0)), 1)) for nb in nbs)
 
 
+# ---------------------------------------------------------------------------
+# Per-pair rate maps (DESIGN.md §3.6) — shared plumbing of both backends
+# ---------------------------------------------------------------------------
+#
+# A closed-loop controller (``repro.dist.ratectl``) plans a ``[Q, Q]`` rate
+# map (receiver × sender) instead of one scalar.  The wire realises it with
+# ONE static kept-block count per exchanged width — the map's *maximum* —
+# so recompiles stay bounded exactly like `_packed_k_for`: every sender
+# packs once at that count, and each pair's smaller kept set is carved out
+# by zeroing packed columns whose block sits at permutation position
+# ``>= k_pair`` (kept sets at different counts are nested under one key —
+# `block_mask_indices_pos`).  The dense wire keeps the scalar path.
+
+
+def _pair_keep(nb: int, rate_map, k_max: int) -> jnp.ndarray:
+    """Traced per-pair kept-block counts ``[Q, Q]`` at width ``nb·128``:
+    the same ``max(floor(nb / r), 1)`` rule as the ``blockmask`` compressor
+    and `_keep_of`, clamped to the step's static maximum ``k_max``."""
+    r = jnp.maximum(jnp.asarray(rate_map, jnp.float32), 1.0)
+    k = jnp.maximum(jnp.floor(nb / r), 1.0)
+    return jnp.minimum(k, float(k_max)).astype(jnp.int32)
+
+
+def _packed_pair_k_for(meta: DistMeta, rate_map) -> tuple:
+    """Quantise a concrete ``[Q, Q]`` rate map to the static max kept-block
+    count of every exchanged width — `_packed_k_for`'s bounded-recompile
+    contract for rate maps (at most ``Π (width/128)`` distinct tuples)."""
+    rm = np.maximum(np.asarray(rate_map, np.float64), 1.0)
+    q = meta.q
+    off = ~np.eye(q, dtype=bool) if q > 1 else np.zeros((1, 1), bool)
+    nbs = sorted({d // LANE for d in (meta.feat_dim, *meta.layer_dims)})
+    out = []
+    for nb in nbs:
+        k = np.maximum(np.floor(nb / rm), 1.0)
+        kmax = int(k[off].max()) if q > 1 else 1
+        out.append((nb, min(max(kmax, 1), nb)))
+    return tuple(out)
+
+
+def _ring_targets(q: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(senders [Q, 1], receivers [Q, D])`` of the hop layout: sender
+    ``j``'s ring-offset-``d`` buffer goes to worker ``(j + d) mod Q``
+    (``D = max(Q-1, 1)``, degenerate but well-formed at ``Q == 1``)."""
+    jj = jnp.arange(q)[:, None]
+    rv = (jj + jnp.arange(1, max(q, 2))[None, :]) % q
+    return jj, rv
+
+
+def _scatter_pairs(vals_jd: jnp.ndarray, q: int) -> jnp.ndarray:
+    """Reshape sender-major per-hop values ``[Q, D]`` into the receiver ×
+    sender ``[Q, Q]`` pair matrix (diagonal 0)."""
+    if q == 1:
+        return jnp.zeros((1, 1), vals_jd.dtype)
+    jj, rv = _ring_targets(q)
+    return jnp.zeros((q, q), vals_jd.dtype).at[rv, jj].set(vals_jd)
+
+
+def _pair_hop_energy(publish: jnp.ndarray, slot: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-hop, per-lane-block energy of the published boundary rows.
+
+    ``publish [Q, B, F]`` (pre-compression), ``slot``/``valid [Q, D, H]``
+    (the p2p per-pair halo sets) → ``[Q, D, nb]`` summed squared values of
+    hop ``(j, d)``'s genuine rows per 128-lane block.  The blockmask
+    round-trip error of a pair is *exactly* its dropped blocks' energy, so
+    the ``error`` controller's observation is this tensor masked by the
+    pair's dropped set — identical arithmetic on both backends."""
+    q, _, f = publish.shape
+    nb = f // LANE
+    be = jnp.sum(publish.reshape(q, -1, nb, LANE).astype(jnp.float32) ** 2,
+                 axis=-1)                              # [Q, B, nb]
+
+    def per_worker(bej, slots, vals):                  # [B,nb],[D,H],[D,H]
+        return jnp.sum(bej[slots] * vals[..., None], axis=1)
+
+    return jax.vmap(per_worker)(be, slot, valid)       # [Q, D, nb]
+
+
+def _pair_ledger(meta: DistMeta, f: int, rate_map, width_pairs,
+                 pair_err, pair_delta, live=None) -> jnp.ndarray:
+    """Flat per-pair ledger vector of one exchange:
+    ``[analytic, transport, pair_transport (Q²), pair_err (Q²),
+    pair_delta (Q²)]`` (length ``2 + 3·Q²``).
+
+    ``width_pairs [Q, Q]`` is each pair's realised on-wire column count;
+    ``live`` (0/1, default all-1) zeroes skipped pairs (the ``stale``
+    controller's reused hops ship nothing, forward or backward)."""
+    rows = jnp.asarray(meta.pair_table(), jnp.float32)
+    live = jnp.ones_like(rows) if live is None else live
+    r = jnp.maximum(jnp.asarray(rate_map, jnp.float32), 1.0)
+    analytic = jnp.sum(rows * live * f * 32.0 / r)
+    pair_t = rows * live * width_pairs * 32.0
+    return jnp.concatenate([
+        jnp.stack([analytic, jnp.sum(pair_t)]),
+        pair_t.ravel(), pair_err.ravel(), pair_delta.ravel()])
+
+
 def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                              compressor: Compressor | None, rate, key,
-                             packed_k: dict | None = None):
+                             packed_k: dict | None = None, rate_map=None,
+                             skip=None, cache=None,
+                             cache_out: list | None = None):
     """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
 
     Numerically identical to the shard_map path: the all-gather becomes a
@@ -346,11 +478,36 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     ``ppermute`` ring offset becomes a roll of the per-pair send buffers
     (same keys → same masks as ``neighbor_exchange``), and the local edges
     run through :func:`repro.kernels.ops.ell_aggregate`.
+
+    ``rate_map`` (traced ``[Q, Q]``, receiver × sender) switches the packed
+    and p2p wires to per-pair rates (DESIGN.md §3.6): every sender packs
+    once at the static step maximum (``packed_k``), pairs below it are
+    carved out by the nested-permutation column masks, and the returned
+    ledger vector grows to ``2 + 3·Q²`` (per-pair transport, compression
+    error, staleness delta).  ``skip``/``cache``/``cache_out`` are the
+    ``stale`` controller's hop reuse on the p2p wire: pair ``(i, j)`` with
+    ``skip[i, j] == 1`` delivers ``cache[call]``'s rows instead of fresh
+    ones and charges zero wire bits; the fresh buffers land in
+    ``cache_out`` (one ``[Q, D, H, F]`` entry per exchange call).
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
     packed_wire = meta.wire == "packed"
     p2p_wire = meta.wire == "p2p"
+    if rate_map is not None and not (packed_wire or p2p_wire):
+        raise ValueError("per-pair rate maps need wire='packed' or 'p2p'; "
+                         "the dense wire keeps the scalar path")
     calls = itertools.count()
+
+    def pair_stats_p2p(publish, pos_all, k_used):
+        """Per-pair dropped-block energy: ``k_used [Q, D]`` is the kept
+        count governing hop ``(j, d)``, ``pos_all [Q, nb]`` each worker's
+        permutation positions."""
+        if "p2p_send_slot" not in graph:
+            return jnp.zeros((q, q), jnp.float32)
+        energy = _pair_hop_energy(publish, graph["p2p_send_slot"],
+                                  graph["p2p_send_valid"])   # [Q, D, nb]
+        dropped = pos_all[:, None, :] >= k_used[:, :, None]  # [Q, D, nb]
+        return _scatter_pairs(jnp.sum(energy * dropped, -1), q)
 
     def aggregate(li, x):                              # x: [Q, P, F]
         del li
@@ -370,18 +527,60 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             # sliced out of the (un)packed rows
             publish = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
                 x, graph["send_idx"], graph["send_valid"])
-            wire_width = None
-            if policy.compresses:
+            bits = None
+            if rate_map is not None:
+                nb = f // LANE
                 n_keep = _keep_of(f, rate, packed_k)
-                wire_width = n_keep * LANE
                 k_call = jax.random.fold_in(key, call)
-                kept, inv = worker_block_maps(k_call, q, f // LANE, n_keep)
-                packed = jax.vmap(wire_pack)(publish, kept, inv)  # hop rows
-                publish = jax.vmap(wire_unpack)(packed, kept, inv)
-            # per-pair hop buffers [Q, D, H, F], then route: receiver i's
-            # hop-d rows come from worker (i - d) mod q
-            sent = jax.vmap(lambda pub, slots, v: pub[slots] * v[..., None])(
-                publish, graph["p2p_send_slot"], graph["p2p_send_valid"])
+                kept, inv, pos_all = worker_block_maps_pos(k_call, q, nb,
+                                                           n_keep)
+                pos_kept = jax.vmap(lambda p, kk: p[kk])(pos_all, kept)
+                k_pairs = _pair_keep(nb, rate_map, n_keep)        # [Q, Q]
+                jj, rv = _ring_targets(q)
+                k_jd = k_pairs[rv, jj]                            # [Q, D]
+                packed = jax.vmap(wire_pack)(publish, kept, inv)
+                hops = jax.vmap(lambda pk, slots, v:
+                                pk[slots] * v[..., None])(
+                    packed, graph["p2p_send_slot"],
+                    graph["p2p_send_valid"])         # [Q, D, H, K·128]
+                cmask = (pos_kept[:, None, :] <
+                         k_jd[..., None]).astype(x.dtype)         # [Q, D, K]
+                hops = hops * jnp.repeat(cmask, LANE, axis=-1)[:, :, None, :]
+                sent = jax.vmap(lambda hp, kk, iv: jax.vmap(
+                    lambda h_: wire_unpack(h_, kk, iv))(hp))(
+                    hops, kept, inv)                  # [Q, D, H, F]
+                pair_err = pair_stats_p2p(publish, pos_all, k_jd)
+                pair_delta = jnp.zeros((q, q), jnp.float32)
+                live = None
+                if cache is not None:
+                    c = cache[call]
+                    num = jnp.sum((sent - c) ** 2, axis=(-1, -2))
+                    den = jnp.sum(sent ** 2, axis=(-1, -2)) + 1e-12
+                    pair_delta = _scatter_pairs(num / den, q)
+                    sk = skip[rv, jj]                             # [Q, D]
+                    sent = jnp.where(sk[..., None, None] > 0.0, c, sent)
+                    live = 1.0 - skip
+                if cache_out is not None:
+                    cache_out.append(sent)
+                bits = _pair_ledger(meta, f, rate_map, k_pairs * LANE,
+                                    pair_err, pair_delta, live=live)
+            else:
+                wire_width = None
+                if policy.compresses:
+                    n_keep = _keep_of(f, rate, packed_k)
+                    wire_width = n_keep * LANE
+                    k_call = jax.random.fold_in(key, call)
+                    kept, inv = worker_block_maps(k_call, q, f // LANE,
+                                                  n_keep)
+                    packed = jax.vmap(wire_pack)(publish, kept, inv)
+                    publish = jax.vmap(wire_unpack)(packed, kept, inv)
+                # per-pair hop buffers [Q, D, H, F]
+                sent = jax.vmap(lambda pub, slots, v:
+                                pub[slots] * v[..., None])(
+                    publish, graph["p2p_send_slot"],
+                    graph["p2p_send_valid"])
+                bits = _exchange_bits(meta, f, rate, wire_width)
+            # route: receiver i's hop-d rows come from worker (i - d) mod q
             if q > 1:
                 src_w = (jnp.arange(q)[:, None] -
                          jnp.arange(1, q)[None, :]) % q         # [Q, D]
@@ -401,12 +600,35 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                 x, graph["ell_nbr"], ell_w, graph["ell_rnbr"],
                 graph["ell_rslot"], graph["remote_dst"],
                 graph["remote_src_p2p"], graph["remote_w"], compact)
-            return agg, _exchange_bits(meta, f, rate, wire_width)
+            return agg, bits
 
         sent = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
             x, graph["send_idx"], graph["send_valid"])  # [Q, B, F]
         wire_width = None
-        if packed_wire:
+        bits = None
+        if packed_wire and rate_map is not None:
+            # all-gather wire: one payload serves every receiver, so the
+            # map degrades to per-SENDER rates — each sender keeps the max
+            # over its receivers' kept counts (serve the most demanding)
+            nb = f // LANE
+            n_keep = _keep_of(f, rate, packed_k)
+            k_call = jax.random.fold_in(key, call)
+            kept, inv, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
+            pos_kept = jax.vmap(lambda p, kk: p[kk])(pos_all, kept)
+            k_pairs = _pair_keep(nb, rate_map, n_keep)
+            off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
+            k_send = jnp.maximum(jnp.max(off, axis=0), 1)         # [Q]
+            pre = sent
+            packed = jax.vmap(wire_pack)(sent, kept, inv)
+            cmask = (pos_kept < k_send[:, None]).astype(x.dtype)  # [Q, K]
+            packed = packed * jnp.repeat(cmask, LANE, axis=-1)[:, None, :]
+            sent = jax.vmap(wire_unpack)(packed, kept, inv)
+            k_jd = jnp.broadcast_to(k_send[:, None], (q, max(q - 1, 1)))
+            pair_err = pair_stats_p2p(pre, pos_all, k_jd)
+            width_pairs = jnp.broadcast_to((k_send * LANE)[None, :], (q, q))
+            bits = _pair_ledger(meta, f, rate_map, width_pairs, pair_err,
+                                jnp.zeros((q, q), jnp.float32))
+        elif packed_wire:
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE
             k_call = jax.random.fold_in(key, call)
@@ -431,14 +653,17 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         agg = jax.vmap(part, (0, 0, 0, 0, 0, 0, 0))(
             x, graph["local_dst"], graph["local_src"], local_w,
             graph["remote_dst"], graph["remote_src"], graph["remote_w"])
-        return agg, _exchange_bits(meta, f, rate, wire_width)
+        if bits is None:
+            bits = _exchange_bits(meta, f, rate, wire_width)
+        return agg, bits
 
     return aggregate
 
 
 def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                           compressor: Compressor | None, rate, key,
-                          axis: str = AXIS, packed_k: dict | None = None):
+                          axis: str = AXIS, packed_k: dict | None = None,
+                          rate_map=None):
     """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``).
 
     Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
@@ -450,11 +675,36 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     the hops with the local compute.  The per-worker masks derive from the
     same ``fold_in`` streams as the emulated path, so both backends agree
     bitwise.
+
+    ``rate_map`` (traced ``[Q, Q]``, replicated to every worker) switches
+    the packed and p2p wires to per-pair rates exactly as in
+    :func:`_make_aggregate_emulated`: the collectives mask their packed
+    columns with the nested per-pair kept sets, the per-pair error stats
+    are all-gathered from each sender, and the returned ledger vector is
+    the same ``2 + 3·Q²`` layout (pair staleness deltas stay zero — hop
+    reuse is an emulated-backend feature).
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
     packed_wire = meta.wire == "packed"
     p2p_wire = meta.wire == "p2p"
+    if rate_map is not None and not (packed_wire or p2p_wire):
+        raise ValueError("per-pair rate maps need wire='packed' or 'p2p'; "
+                         "the dense wire keeps the scalar path")
     calls = itertools.count()
+
+    def pair_err_shard(publish_pre, pos_me, k_d):
+        """Sender-side dropped-block energy per hop, all-gathered into the
+        replicated ``[Q, Q]`` pair matrix (same arithmetic as the emulated
+        ``pair_stats_p2p``)."""
+        nb = publish_pre.shape[-1] // LANE
+        be = jnp.sum(publish_pre.reshape(-1, nb, LANE).astype(jnp.float32)
+                     ** 2, axis=-1)                        # [B, nb]
+        slot = graph["p2p_send_slot"][0]
+        val = graph["p2p_send_valid"][0]
+        energy = jnp.sum(be[slot] * val[..., None], axis=1)    # [D, nb]
+        dropped = pos_me[None, :] >= k_d[:, None]              # [D, nb]
+        err_d = jnp.sum(energy * dropped, -1)                  # [D]
+        return _scatter_pairs(lax.all_gather(err_d, axis), q)
 
     def aggregate(li, x):                              # x: [1, P, F]
         del li
@@ -468,16 +718,35 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             return out[:p_sz][None], jnp.zeros((2,), jnp.float32)
 
         if p2p_wire:
-            n_keep = wire_width = k_call = None
-            if policy.compresses:
-                n_keep = _keep_of(f, rate, packed_k)
-                wire_width = n_keep * LANE
-                k_call = jax.random.fold_in(key, call)
             publish = xq[graph["send_idx"][0]] * \
                 graph["send_valid"][0][:, None]
-            halo, _ = neighbor_exchange(
-                publish, graph["p2p_send_slot"][0],
-                graph["p2p_send_valid"][0], axis, key=k_call, n_keep=n_keep)
+            if rate_map is not None:
+                nb = f // LANE
+                n_keep = _keep_of(f, rate, packed_k)
+                k_call = jax.random.fold_in(key, call)
+                k_pairs = _pair_keep(nb, rate_map, n_keep)
+                halo, _ = neighbor_exchange(
+                    publish, graph["p2p_send_slot"][0],
+                    graph["p2p_send_valid"][0], axis, key=k_call,
+                    n_keep=n_keep, pair_k=k_pairs)
+                me = lax.axis_index(axis)
+                _, _, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
+                k_d = k_pairs[(me + jnp.arange(1, max(q, 2))) % q, me]
+                pair_err = pair_err_shard(publish, pos_all[me], k_d)
+                bits = _pair_ledger(meta, f, rate_map, k_pairs * LANE,
+                                    pair_err,
+                                    jnp.zeros((q, q), jnp.float32))
+            else:
+                n_keep = wire_width = k_call = None
+                if policy.compresses:
+                    n_keep = _keep_of(f, rate, packed_k)
+                    wire_width = n_keep * LANE
+                    k_call = jax.random.fold_in(key, call)
+                halo, _ = neighbor_exchange(
+                    publish, graph["p2p_send_slot"][0],
+                    graph["p2p_send_valid"][0], axis, key=k_call,
+                    n_keep=n_keep)
+                bits = _exchange_bits(meta, f, rate, wire_width)
             loc = ell_aggregate(xq, graph["ell_nbr"][0],
                                 _ell_w_for(graph, policy, rate)[0],
                                 graph["ell_rnbr"][0], graph["ell_rslot"][0])
@@ -486,11 +755,30 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                 graph["remote_w"][0][:, None] *
                 halo[graph["remote_src_p2p"][0]])
             out = loc + rem[:p_sz]
-            return out[None], _exchange_bits(meta, f, rate, wire_width)
+            return out[None], bits
 
         sent = xq[graph["send_idx"][0]] * graph["send_valid"][0][:, None]
         wire_width = None
-        if packed_wire:
+        bits = None
+        if packed_wire and rate_map is not None:
+            nb = f // LANE
+            n_keep = _keep_of(f, rate, packed_k)
+            k_call = jax.random.fold_in(key, call)
+            k_pairs = _pair_keep(nb, rate_map, n_keep)
+            halo, _ = packed_all_gather(sent, axis, n_keep=n_keep,
+                                        key=k_call, pair_k=k_pairs)
+            off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
+            k_send = jnp.maximum(jnp.max(off, axis=0), 1)
+            me = lax.axis_index(axis)
+            _, _, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
+            pair_err = jnp.zeros((q, q), jnp.float32)
+            if "p2p_send_slot" in graph:
+                k_d = jnp.broadcast_to(k_send[me], (max(q - 1, 1),))
+                pair_err = pair_err_shard(sent, pos_all[me], k_d)
+            width_pairs = jnp.broadcast_to((k_send * LANE)[None, :], (q, q))
+            bits = _pair_ledger(meta, f, rate_map, width_pairs, pair_err,
+                                jnp.zeros((q, q), jnp.float32))
+        elif packed_wire:
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE
             k_call = jax.random.fold_in(key, call)
@@ -510,7 +798,9 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             xq[graph["local_src"][0]])
         out = out.at[graph["remote_dst"][0]].add(
             graph["remote_w"][0][:, None] * halo[graph["remote_src"][0]])
-        return out[:p_sz][None], _exchange_bits(meta, f, rate, wire_width)
+        if bits is None:
+            bits = _exchange_bits(meta, f, rate, wire_width)
+        return out[:p_sz][None], bits
 
     return aggregate
 
@@ -590,6 +880,11 @@ def make_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
     """
     if sync not in ("grad", "fedavg"):
         raise ValueError(f"sync must be 'grad' or 'fedavg', got {sync!r}")
+    if policy.mode == "auto":
+        raise ValueError(
+            "auto policies plan per-pair rate maps closed-loop; build the "
+            "step with repro.dist.ratectl.make_auto_train_step (train_gnn "
+            "routes there automatically)")
     packed_wire = meta.wire == "packed"
     p2p_wire = meta.wire == "p2p"
     if (packed_wire or p2p_wire) and policy.compresses and \

@@ -1,0 +1,43 @@
+"""Closed-loop rate control for the distributed GNN wire (DESIGN.md §3.6).
+
+A control-plane layer over the per-pair data plane: turn a user-supplied
+byte budget into per-step, per-pair ``[Q, Q]`` compression rates from
+measured wire feedback, instead of the open-loop step → scalar schedules
+of ``repro.core.schedulers``.
+
+* ``base``    — the :class:`RateController` ``init/observe/plan`` API,
+  :class:`RatePlan`, and the shared eq.-(8)-referenced budget pacing
+  (:func:`make_pacing` / :func:`allowance`).
+* ``budget``  — PI controller tracking ``CommLedger.transport`` against
+  a total-bits budget (open-loop limit = the paper's eq. (8)).
+* ``error``   — AdaQP-style water-filling of each step's bit allowance
+  over the measured per-pair compression-error EMA, monotone
+  non-increasing per pair (Proposition 2 still applies).
+* ``stale``   — skip pairs whose boundary activations barely changed,
+  reusing the receiver's cached halo rows under a staleness cap.
+* ``driver``  — :func:`make_controller` from a ``CommPolicy``
+  ``auto:<controller>:<budget>`` spec and :func:`make_auto_train_step`,
+  the per-pair-rate Algorithm-1 step (emulated + shard_map backends).
+
+Example::
+
+    policy = CommPolicy.parse("auto:error:2e9", epochs)
+    res = train_gnn(g, q=8, policy=policy, wire="p2p", epochs=epochs)
+"""
+
+from repro.dist.ratectl.base import (CONTROLLERS, Pacing, RateController,
+                                     RatePlan, allowance, make_pacing,
+                                     rate_of_allowance, uniform_plan)
+from repro.dist.ratectl.budget import budget_controller
+from repro.dist.ratectl.driver import (exchange_widths, init_halo_cache,
+                                       make_auto_train_step, make_controller)
+from repro.dist.ratectl.error import error_controller, waterfill
+from repro.dist.ratectl.stale import stale_controller
+
+__all__ = [
+    "CONTROLLERS", "Pacing", "RateController", "RatePlan", "allowance",
+    "make_pacing", "rate_of_allowance", "uniform_plan",
+    "budget_controller", "error_controller", "stale_controller", "waterfill",
+    "exchange_widths", "init_halo_cache", "make_auto_train_step",
+    "make_controller",
+]

@@ -1,0 +1,193 @@
+"""Closed-loop rate control: the controller API + shared pacing machinery.
+
+The open-loop schedulers of ``repro.core.schedulers`` map a step to ONE
+global compression rate, blind to training dynamics and to the per-pair
+structure the p2p wire exposes.  A :class:`RateController` closes the
+loop: it turns a user-supplied **byte budget** into per-step, per-pair
+``[Q, Q]`` compression rates from *measured* wire feedback (DESIGN.md
+§3.6), following AdaQP's observation that per-boundary-set precision
+assignment beats any uniform one.
+
+The contract is three pure functions over a pytree ``state`` (every leaf
+a jnp array, so the whole loop is jit-compatible; the trainer happens to
+run it on host because the rate map also quantises the step's static
+kept-block counts):
+
+* ``init() -> state`` — the carried state at step 0;
+* ``plan(state, step) -> (RatePlan, state)`` — the ``[Q, Q]`` rate map
+  (receiver × sender, diagonal 1) and per-pair skip mask for this step;
+* ``observe(state, obs) -> state`` — fold in the step's measurements:
+  ``obs["transport_bits"]`` (scalar bits actually shipped),
+  ``obs["pair_err"]`` (``[Q, Q]`` compression squared error — the dropped
+  blocks' energy), ``obs["pair_delta"]`` (``[Q, Q]`` relative change of
+  each pair's hop buffer vs its cached copy).
+
+Controllers ship in sibling modules: ``budget`` (PI tracking of
+``CommLedger.transport`` against the total budget, reducing to the
+paper's eq. (8) open-loop schedule at zero gains), ``error`` (AdaQP-style
+water-filling of the step's bit allowance over the measured per-pair
+error EMA, monotone non-increasing per pair so Proposition 2's
+convergence argument still applies), ``stale`` (skip a pair's hop and
+reuse its cached halo rows while the boundary block barely changed,
+bounded by a staleness cap).
+
+Example::
+
+    ctl = budget_controller(meta, widths, total_steps=300,
+                            budget_bits=2e9)
+    state = ctl.init()
+    plan, state = ctl.plan(state, step)      # plan.rates: [Q, Q]
+    ...run the step at plan.rates...
+    state = ctl.observe(state, {"transport_bits": shipped, ...})
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: controller names accepted by ``CommPolicy.parse("auto:<name>:<bits>")``
+CONTROLLERS = ("budget", "error", "stale")
+
+
+class RatePlan(NamedTuple):
+    """One step's control decision: per-pair rates + per-pair hop skips.
+
+    ``rates [Q, Q]`` (receiver × sender, f32, diagonal 1) are compression
+    ratios ``>= 1``; ``skip [Q, Q]`` (0/1 f32) marks pairs whose hop is
+    served from the receiver's cached halo buffer instead of the wire
+    (``stale`` controller; all-zero for the others).
+    """
+
+    rates: jnp.ndarray
+    skip: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RateController:
+    """A closed-loop rate controller (module docs for the contract).
+
+    Example::
+
+        state = ctl.init()
+        for t in range(T):
+            plan, state = ctl.plan(state, t)
+            metrics = run_step(plan)
+            state = ctl.observe(state, metrics)
+    """
+
+    name: str
+    init_fn: Callable[[], dict]
+    observe_fn: Callable[[dict, dict], dict]
+    plan_fn: Callable[[dict, Any], tuple[RatePlan, dict]]
+
+    def init(self) -> dict:
+        """Carried state at step 0 (a pytree of jnp arrays)."""
+        return self.init_fn()
+
+    def observe(self, state: dict, obs: dict) -> dict:
+        """Fold one step's measurements into the carried state."""
+        return self.observe_fn(state, obs)
+
+    def plan(self, state: dict, step) -> tuple[RatePlan, dict]:
+        """The ``[Q, Q]`` rate map (+ skip mask) for ``step``."""
+        return self.plan_fn(state, step)
+
+
+def uniform_plan(q: int, rate) -> RatePlan:
+    """A scalar rate as a (diagonal-1) rate map with no skips."""
+    eye = jnp.eye(q, dtype=bool)
+    rates = jnp.where(eye, 1.0, jnp.asarray(rate, jnp.float32))
+    return RatePlan(rates, jnp.zeros((q, q), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pacing: open-loop reference trajectory + PI feedback on the spend
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Pacing:
+    """Budget pacing shared by every controller.
+
+    The *reference trajectory* is the paper's eq. (8) linear schedule
+    (slope ``a``, ``c_max → c_min`` over ``total_steps``): ``phi[t] =
+    1/c(t)`` is its keep fraction and ``cum`` its cumulative sum, so the
+    target cumulative spend before step ``t`` is ``budget_bits · cum[t] /
+    cum[T]``.  :func:`allowance` turns the measured spend into this
+    step's bit allowance with PI feedback on the pace error — at zero
+    gains the allowance is exactly the open-loop profile, i.e. the
+    controller *reduces to eq. (8)* when the budget equals that
+    schedule's own total transport.
+
+    ``d_full`` is the analytic full-communication transport of one train
+    step (forward + backward over every exchange width): the model that
+    converts a bit allowance into a uniform rate and back.
+    """
+
+    total_steps: int
+    budget_bits: float
+    d_full: float
+    c_max: float
+    c_min: float
+    kp: float
+    ki: float
+    phi: Any
+    cum: Any
+
+
+def make_pacing(meta, widths, total_steps: int, budget_bits: float,
+                c_max: float = 128.0, c_min: float = 1.0,
+                slope: float = 5.0, kp: float = 4.0,
+                ki: float = 0.25) -> Pacing:
+    """Build the shared pacing state for ``meta`` (needs ``halo_demand``)
+    and the per-step exchange ``widths`` (see ``driver.exchange_widths``)."""
+    from repro.core import schedulers
+
+    if budget_bits <= 0:
+        raise ValueError(f"budget_bits must be positive, got {budget_bits}")
+    total = max(total_steps, 1)
+    sched = schedulers.linear(total, slope=slope, c_max=c_max, c_min=c_min)
+    phi = 1.0 / np.asarray([float(sched(t)) for t in range(total)])
+    cum = np.concatenate([[0.0], np.cumsum(phi)])
+    d_full = 2.0 * 32.0 * float(meta.halo_demand) * float(sum(widths))
+    return Pacing(total_steps=int(max(total_steps, 1)),
+                  budget_bits=float(budget_bits), d_full=d_full,
+                  c_max=float(c_max), c_min=float(c_min), kp=float(kp),
+                  ki=float(ki), phi=jnp.asarray(phi, jnp.float32),
+                  cum=jnp.asarray(cum, jnp.float32))
+
+
+def allowance(p: Pacing, spent, integ, step):
+    """This step's bit allowance: receding-horizon replanning + PI.
+
+    The *remaining* budget is spent proportionally to the *remaining*
+    open-loop profile — ``(B − spent) · phi[t] / Σ_{s>=t} phi[s]`` — so a
+    deficit or surplus redistributes over the steps left instead of being
+    lost at the horizon.  When the measured spend tracks the profile
+    exactly this telescopes to the open-loop allowance ``B · phi[t] /
+    Σphi`` identically (the eq.-(8) reduction).  A PI term
+    ``exp(kp·e + ki·Σe)`` on the pace error ``e`` (underspent → ``e > 0``
+    → spend more) corrects the systematic bias of lane-block quantisation;
+    the integral is clamped (anti-windup: a rate pinned at ``c_max`` /
+    ``c_min`` must not accumulate unbounded correction).
+
+    Returns ``(bits, integ')``."""
+    ti = jnp.clip(jnp.asarray(step, jnp.int32), 0, p.total_steps - 1)
+    frac = p.cum[ti] / p.cum[-1]
+    e = frac - jnp.asarray(spent, jnp.float32) / p.budget_bits
+    integ = jnp.clip(integ + e, -10.0, 10.0)
+    gain = jnp.exp(p.kp * e + p.ki * integ)
+    share = p.phi[ti] / jnp.maximum(p.cum[-1] - p.cum[ti], 1e-12)
+    left = jnp.maximum(p.budget_bits - jnp.asarray(spent, jnp.float32), 0.0)
+    return left * share * gain, integ
+
+
+def rate_of_allowance(p: Pacing, bits) -> jnp.ndarray:
+    """Uniform rate realising a per-step bit allowance: ``d_full / bits``
+    clamped to ``[c_min_rate, c_max]`` (a rate is never below 1)."""
+    r = p.d_full / jnp.maximum(jnp.asarray(bits, jnp.float32), 1.0)
+    return jnp.clip(r, jnp.maximum(p.c_min, 1.0), p.c_max)

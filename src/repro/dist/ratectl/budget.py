@@ -1,0 +1,51 @@
+"""``budget`` controller: PI tracking of transport bits against a budget.
+
+The user names a total wire budget ``B`` (bits over the whole run); the
+controller plans, each step, ONE uniform rate whose predicted transport
+follows the paper's eq.-(8) reference trajectory scaled to ``B``, and
+closes the loop with PI feedback on the *measured* cumulative
+``CommLedger.transport`` — so lane-block quantisation error (the realised
+kept count is ``max(floor(nb/r), 1)``, a staircase in ``r``) dithers the
+planned rate between adjacent counts instead of accumulating drift.
+
+At zero gains (``kp = ki = 0``) and ``B`` equal to the eq.-(8) schedule's
+own total, the plan IS the open-loop schedule — the closed loop strictly
+generalises the paper's scheme (DESIGN.md §3.6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dist.ratectl.base import (Pacing, RateController, allowance,
+                                     rate_of_allowance, uniform_plan)
+
+
+def budget_controller(q: int, pacing: Pacing,
+                      name: str = "budget") -> RateController:
+    """Budget-tracking PI controller over a ``workers`` axis of size ``q``.
+
+    State: ``{"spent": bits shipped so far, "integ": PI integral}``.
+
+    Example::
+
+        pacing = make_pacing(meta, widths, total_steps=300,
+                             budget_bits=2e9)
+        ctl = budget_controller(meta.q, pacing)
+    """
+
+    def init():
+        return {"spent": jnp.zeros((), jnp.float32),
+                "integ": jnp.zeros((), jnp.float32)}
+
+    def plan(state, step):
+        bits, integ = allowance(pacing, state["spent"], state["integ"], step)
+        rate = rate_of_allowance(pacing, bits)
+        return uniform_plan(q, rate), {**state, "integ": integ}
+
+    def observe(state, obs):
+        return {**state,
+                "spent": state["spent"] +
+                jnp.asarray(obs["transport_bits"], jnp.float32)}
+
+    return RateController(name, init, observe, plan)

@@ -1,0 +1,259 @@
+"""Trainer integration: auto policies → controller + per-pair train step.
+
+``CommPolicy.parse("auto:<controller>:<budget-bits>")`` names a closed
+loop; this module turns it into running machinery:
+
+* :func:`make_controller` — instantiate the named controller with the
+  shared budget pacing built from the partition facts;
+* :func:`make_auto_train_step` — the per-pair-rate analogue of
+  ``repro.dist.gnn_parallel.make_train_step``: same Algorithm-1 step, but
+  the compression operand is a traced ``[Q, Q]`` rate map (+ skip mask
+  and halo cache for the ``stale`` controller) planned by the controller
+  each step.  The step quantises the concrete map to its static
+  kept-block maximum per width (`_packed_pair_k_for`) outside jit —
+  bounded recompiles, exactly the scalar wires' contract — and the
+  shard_map executables sit behind the same LRU cache.
+
+The loop a trainer runs (``repro.train.trainer.train_gnn`` does this):
+
+    ctl = make_controller(policy, meta, cfg, total_steps)
+    state, cache = ctl.init(), init_halo_cache(meta, cfg)
+    step = make_auto_train_step(cfg, policy, opt, meta, mesh=mesh)
+    for t in range(total_steps):
+        plan, state = ctl.plan(state, t)
+        params, opt_state, m, cache = step(params, opt_state, graph,
+                                           key_t, plan, cache)
+        state = ctl.observe(state, m)
+
+``observe`` reads the metrics directly: the step returns
+``pair_transport`` / ``pair_err`` / ``pair_delta`` ``[Q, Q]`` matrices
+next to the usual scalars (History's per-pair transport columns come from
+the same place).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.varco import CommPolicy
+from repro.dist.gnn_parallel import (AXIS, COMPILED_CACHE_SIZE, DistMeta,
+                                     _local_loss_fn, _make_aggregate_emulated,
+                                     _make_aggregate_shard, _packed_pair_k_for,
+                                     _pmean_inexact)
+from repro.dist.ratectl.base import RateController, RatePlan, make_pacing
+from repro.dist.ratectl.budget import budget_controller
+from repro.dist.ratectl.error import error_controller
+from repro.dist.ratectl.stale import stale_controller
+from repro.kernels.varco_pack import LANE
+from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
+from repro.train.optim import Optimizer, apply_updates
+
+
+def exchange_widths(cfg: GNNConfig) -> tuple[int, ...]:
+    """Feature width of every halo exchange in one forward pass: each
+    layer's input width, once per exchange call (sage: one per layer;
+    poly: ``k_taps - 1`` per layer) — the controllers' transport model and
+    the ``stale`` cache's buffer widths."""
+    dims = [cfg.in_dim] + [cfg.hidden] * (cfg.layers - 1)
+    reps = 1 if cfg.conv == "sage" else max(cfg.k_taps - 1, 1)
+    return tuple(d for d in dims for _ in range(reps))
+
+
+def make_controller(policy: CommPolicy, meta: DistMeta, cfg: GNNConfig,
+                    total_steps: int, **overrides) -> RateController:
+    """Instantiate ``policy.controller`` with pacing scaled to
+    ``policy.budget_bits`` over ``total_steps``.
+
+    ``overrides`` pass through to :func:`repro.dist.ratectl.base.
+    make_pacing` (``c_max``, ``slope``, ``kp``, ``ki``, ...) and to the
+    controller factory (``threshold``/``max_stale`` for ``stale``,
+    ``ema_decay`` for ``error``).
+
+    Example::
+
+        policy = CommPolicy.parse("auto:budget:2e9", epochs)
+        ctl = make_controller(policy, meta, cfg, epochs)
+    """
+    if policy.mode != "auto":
+        raise ValueError(f"policy mode must be 'auto', got {policy.mode!r}")
+    ctl_kw = {k: overrides.pop(k) for k in ("threshold", "max_stale",
+                                            "ema_decay")
+              if k in overrides}
+    pacing = make_pacing(meta, exchange_widths(cfg), total_steps,
+                         policy.budget_bits, **overrides)
+    if policy.controller == "budget":
+        return budget_controller(meta.q, pacing)
+    if policy.controller == "error":
+        return error_controller(meta.q, pacing, meta.pair_table(), **ctl_kw)
+    if policy.controller == "stale":
+        return stale_controller(meta.q, pacing, **ctl_kw)
+    raise ValueError(f"unknown controller {policy.controller!r}")
+
+
+def init_halo_cache(meta: DistMeta, cfg: GNNConfig) -> tuple:
+    """Zero-initialised per-exchange hop-buffer caches for the ``stale``
+    controller (``[Q, D, H, width]`` per exchange call; p2p wire only).
+    The controller never skips at step 0, so the zeros are never read."""
+    d = max(meta.q - 1, 1)
+    return tuple(jnp.zeros((meta.q, d, meta.p2p_hop_width, w), jnp.float32)
+                 for w in exchange_widths(cfg))
+
+
+def _auto_metrics(loss, rate_map, bits, q: int, n_exchanges: int) -> dict:
+    """Step metrics of the per-pair ledger vector (``2 + 3·Q²`` layout of
+    ``gnn_parallel._pair_ledger``); transports double for the backward
+    cotangents exactly like the scalar `_step_metrics`.  The staleness
+    delta accumulates one relative-change ratio per exchange call, so it
+    is averaged over ``n_exchanges`` here — the controller-facing
+    ``pair_delta`` is the mean per-buffer change, depth-independent (the
+    ``stale`` threshold must not shrink with network depth)."""
+    eye = jnp.eye(q, dtype=bool)
+    mean_rate = jnp.sum(jnp.where(eye, 0.0, rate_map)) / max(q * q - q, 1)
+    q2 = q * q
+    return {"loss": loss, "rate": mean_rate,
+            "halo_bits": 2.0 * bits[0], "transport_bits": 2.0 * bits[1],
+            "pair_transport": 2.0 * bits[2:2 + q2].reshape(q, q),
+            "pair_err": bits[2 + q2:2 + 2 * q2].reshape(q, q),
+            "pair_delta": bits[2 + 2 * q2:].reshape(q, q) /
+            max(n_exchanges, 1)}
+
+
+def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
+                         meta: DistMeta, mesh: Mesh | None = None,
+                         sync: str = "grad", stale: bool | None = None,
+                         compiled_cache_size: int = COMPILED_CACHE_SIZE):
+    """One Algorithm-1 step driven by a :class:`RatePlan`.
+
+    ``step(params, opt_state, graph, key, plan, cache=()) ->
+    (params, opt_state, metrics, cache')`` — ``plan.rates`` must be a
+    concrete ``[Q, Q]`` map (the step quantises it to the static
+    kept-block maximum per width; passing it traced would defeat the
+    bounded-recompile contract).  ``metrics`` adds ``pair_transport`` /
+    ``pair_err`` / ``pair_delta`` ``[Q, Q]`` matrices to the usual
+    scalars.  ``cache`` is the ``stale`` controller's halo-cache tuple
+    (:func:`init_halo_cache`); other controllers pass ``()`` and get
+    ``()`` back.
+
+    Requirements: ``policy.mode == "auto"``, ``meta.wire`` in
+    ``("packed", "p2p")``, every exchanged width on the 128-lane grid,
+    and the graph pytree carrying the ``attach_p2p`` arrays (the per-pair
+    ledger and error stats read the per-pair halo sets on every wire).
+    Hop reuse (``stale``) additionally needs ``wire == "p2p"`` and the
+    emulated backend.
+
+    Example::
+
+        step = make_auto_train_step(cfg, policy, adamw(5e-3), meta)
+        plan, state = ctl.plan(state, t)
+        params, opt_state, m, cache = step(params, opt_state, graph,
+                                           jax.random.key(t), plan, cache)
+    """
+    if policy.mode != "auto":
+        raise ValueError(f"make_auto_train_step needs an 'auto' policy, "
+                         f"got mode {policy.mode!r}")
+    if meta.wire not in ("packed", "p2p"):
+        raise ValueError(f"per-pair rate maps need wire='packed' or 'p2p', "
+                         f"got {meta.wire!r} (the dense wire is scalar-only)")
+    if sync not in ("grad", "fedavg"):
+        raise ValueError(f"sync must be 'grad' or 'fedavg', got {sync!r}")
+    for f_ in {meta.feat_dim, *meta.layer_dims}:
+        if f_ % LANE:
+            raise ValueError(
+                f"per-pair rate maps pack lane-blocks; every exchanged "
+                f"width must be divisible by {LANE}, got {f_}")
+    n_ex = len(exchange_widths(cfg))
+    stale = (policy.controller == "stale") if stale is None else stale
+    if stale and meta.wire != "p2p":
+        raise ValueError("the stale controller reuses per-pair hop buffers; "
+                         "it needs wire='p2p'")
+    if stale and mesh is not None:
+        raise ValueError(
+            "hop reuse is emulated-backend only: a shape-uniform SPMD "
+            "ppermute cannot drop individual pairs' buffers (DESIGN.md "
+            "§3.6); run the stale controller with mesh=None")
+
+    if mesh is None:
+        @functools.partial(jax.jit, static_argnames=("packed_k",))
+        def _jit_step(params, opt_state, graph, key, rate_map, skip, cache,
+                      packed_k):
+            def loss_fn(p):
+                cache_out: list = []
+                agg = _make_aggregate_emulated(
+                    graph, meta, policy, None, jnp.ones((), jnp.float32),
+                    key, packed_k=dict(packed_k), rate_map=rate_map,
+                    skip=skip if stale else None,
+                    cache=cache if stale else None,
+                    cache_out=cache_out if stale else None)
+                logits, bits = gnn_forward(p, cfg, graph["features"], agg)
+                loss_sum, _ = masked_loss_and_correct(
+                    logits, graph["labels"], graph["train_mask"])
+                return loss_sum / max(meta.n_train, 1), \
+                    (bits, tuple(cache_out))
+
+            (loss, (bits, cache_new)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            updates, new_state = opt.update(grads, opt_state, params)
+            new_params = apply_updates(params, updates)
+            return (new_params, new_state,
+                    _auto_metrics(loss, rate_map, bits, meta.q, n_ex),
+                    cache_new)
+
+        def step(params, opt_state, graph, key, plan: RatePlan, cache=()):
+            rm = np.asarray(plan.rates, np.float32)
+            kb = _packed_pair_k_for(meta, rm)
+            return _jit_step(params, opt_state, graph, key,
+                             jnp.asarray(rm),
+                             jnp.asarray(plan.skip, jnp.float32),
+                             tuple(cache), packed_k=kb)
+
+        return step
+
+    def make_worker(packed_k: tuple):
+        def worker(params, opt_state, gblk, rate_map, key):
+            def loss_fn(p):
+                agg = _make_aggregate_shard(
+                    gblk, meta, policy, None, jnp.ones((), jnp.float32),
+                    key, packed_k=dict(packed_k), rate_map=rate_map)
+                return _local_loss_fn(p, cfg, gblk, agg, meta)
+
+            (loss, bits), grads = jax.value_and_grad(loss_fn,
+                                                     has_aux=True)(params)
+            loss = lax.psum(loss, AXIS)
+            if sync == "grad":
+                grads = jax.tree_util.tree_map(lambda g: lax.psum(g, AXIS),
+                                               grads)
+                updates, new_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+            else:  # fedavg
+                updates, new_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+                params = _pmean_inexact(params, AXIS)
+                new_state = _pmean_inexact(new_state, AXIS)
+            return params, new_state, _auto_metrics(loss, rate_map, bits,
+                                                    meta.q, n_ex)
+
+        return worker
+
+    @functools.lru_cache(maxsize=compiled_cache_size)
+    def _compiled_for(kblocks: tuple):
+        return jax.jit(shard_map(make_worker(kblocks), mesh=mesh,
+                                 in_specs=(P(), P(), P(AXIS), P(), P()),
+                                 out_specs=(P(), P(), P()), check_rep=False))
+
+    def step(params, opt_state, graph, key, plan: RatePlan, cache=()):
+        rm = np.asarray(plan.rates, np.float32)
+        kb = _packed_pair_k_for(meta, rm)
+        params, opt_state, m = _compiled_for(kb)(
+            params, opt_state, graph, jnp.asarray(rm), key)
+        return params, opt_state, m, tuple(cache)
+
+    step.cache_info = _compiled_for.cache_info
+    step.cache_clear = _compiled_for.cache_clear
+    return step

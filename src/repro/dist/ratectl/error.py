@@ -1,0 +1,114 @@
+"""``error`` controller: per-pair rates water-filled from measured error.
+
+AdaQP's observation, transplanted to the VARCO wire: assigning message
+precision per boundary set from measured statistics beats any uniform
+assignment under the same bit budget.  Here the "precision" is each
+ordered pair's kept-lane-block fraction ``y = 1/rate``: every step the
+controller takes the budget pacing's bit allowance (same PI machinery as
+the ``budget`` controller) and **water-fills** it over the pairs by
+descending measured compression-error density — the EMA of each pair's
+dropped-block energy per boundary row — so pairs whose activations lose
+the most energy to compression communicate at the lowest rates.
+
+The per-pair rates are forced **monotone non-increasing** over steps
+(``y`` only ever grows), so the induced compression error still decreases
+step-to-step and Proposition 2's convergence argument applies unchanged
+(DESIGN.md §3.6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
+                                     allowance)
+
+
+def waterfill(density, rows, cap, y_floor, y_max: float = 1.0,
+              iters: int = 60) -> jnp.ndarray:
+    """Proportional (log-utility) water-filling of keep fractions.
+
+    Solve ``y = clip(λ · density, y_floor, y_max)`` for the water level
+    ``λ`` such that ``Σ rows · y == cap`` (bisection, ``iters`` fixed
+    halvings — pure jnp, runs under jit).  This is the exact maximiser of
+    ``Σ rows · density · log(y)`` under the bit constraint: pairs with
+    higher measured error density keep proportionally more blocks, equal
+    densities degrade gracefully to the uniform allocation (never starving
+    an arbitrary subset of tied pairs, which the LP-greedy fill would).
+    ``y_floor`` (scalar or ``[Q, Q]``) carries the monotone-rate
+    commitments: the fill only ever *adds* on top of it, so a floor
+    already exceeding ``cap`` returns the floor unchanged.
+    """
+    y_floor = jnp.broadcast_to(jnp.asarray(y_floor, jnp.float32), rows.shape)
+    d = jnp.where(rows > 0, jnp.maximum(density, 0.0), 0.0)
+    dn = d / jnp.maximum(jnp.max(d), 1e-30)      # normalised to [0, 1]
+    cap = jnp.maximum(cap, jnp.sum(rows * y_floor))
+
+    def fill(lam):
+        return jnp.clip(lam * dn, y_floor, y_max)
+
+    lo = jnp.zeros(())
+    hi = jnp.full((), 1e12)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        under = jnp.sum(rows * fill(mid)) <= cap
+        lo = jnp.where(under, mid, lo)
+        hi = jnp.where(under, hi, mid)
+    return fill(lo)
+
+
+def error_controller(q: int, pacing: Pacing, pair_rows,
+                     ema_decay: float = 0.8,
+                     name: str = "error") -> RateController:
+    """Error-weighted per-pair controller (module docs).
+
+    ``pair_rows`` is the static ``[Q, Q]`` halo row-count table
+    (``DistMeta.pair_table()``): the water-filling's cost unit, and the
+    error EMA's initial value (uniform density until measurements arrive).
+
+    State: ``{"spent", "integ", "ema" [Q, Q], "y" [Q, Q]}`` with ``y``
+    the monotone keep fractions.
+
+    Example::
+
+        ctl = error_controller(meta.q, pacing, meta.pair_table())
+    """
+    rows = jnp.asarray(pair_rows, jnp.float32)
+    eye = jnp.eye(q, dtype=bool)
+    live = (rows > 0) & ~eye
+    y_min = 1.0 / pacing.c_max
+    # bits of one train step per unit of Σ rows·y (fwd + bwd, all widths)
+    bits_per_rowkeep = pacing.d_full / max(float(jnp.sum(rows)), 1.0)
+
+    def init():
+        return {"spent": jnp.zeros((), jnp.float32),
+                "integ": jnp.zeros((), jnp.float32),
+                "ema": rows,
+                "y": jnp.full((q, q), y_min, jnp.float32)}
+
+    def plan(state, step):
+        bits, integ = allowance(pacing, state["spent"], state["integ"], step)
+        # the monotone y makes every allocation a COMMITMENT for the rest
+        # of the run, so cap this step by what the remaining budget can
+        # sustain for the steps left — a transient PI spike must not ratchet
+        # y to a level whose sustained cost exceeds the budget
+        remaining = jnp.maximum(pacing.budget_bits - state["spent"], 0.0)
+        steps_left = jnp.maximum(
+            pacing.total_steps - jnp.asarray(step, jnp.float32), 1.0)
+        cap = jnp.minimum(bits, remaining / steps_left) / bits_per_rowkeep
+        density = jnp.where(live, state["ema"] / jnp.maximum(rows, 1.0),
+                            -jnp.inf)
+        # prior commitments are the fill's floor → monotone by construction
+        y = waterfill(density, rows, cap, state["y"], 1.0)
+        rates = jnp.where(live, 1.0 / jnp.clip(y, y_min, 1.0), 1.0)
+        plan_ = RatePlan(rates, jnp.zeros((q, q), jnp.float32))
+        return plan_, {**state, "integ": integ, "y": y}
+
+    def observe(state, obs):
+        err = jnp.asarray(obs["pair_err"], jnp.float32)
+        return {**state,
+                "spent": state["spent"] +
+                jnp.asarray(obs["transport_bits"], jnp.float32),
+                "ema": ema_decay * state["ema"] + (1.0 - ema_decay) * err}
+
+    return RateController(name, init, observe, plan)

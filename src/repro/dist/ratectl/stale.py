@@ -1,0 +1,67 @@
+"""``stale`` controller: skip unchanged pairs' hops, reuse cached halos.
+
+DistGNN's delayed-aggregation result is the second lever on the wire
+budget: when a pair's boundary activations barely moved since its last
+exchange, *shipping nothing and reusing the receiver's cached halo rows*
+costs far less accuracy than compressing fresh rows ever could.  This
+controller runs the ``budget`` controller's PI-paced uniform rate for the
+pairs that do communicate, and additionally skips pair ``(i, j)``'s hop
+whenever its measured relative change — ``‖fresh − cached‖² / ‖fresh‖²``
+from the step metrics — stayed below ``threshold``, bounded by a
+**staleness cap**: after ``max_stale`` consecutive reuses the pair is
+forced to refresh regardless, so no halo row is ever older than
+``max_stale`` steps (the bounded-staleness condition delayed-aggregation
+convergence analyses rely on).
+
+Skipped pairs charge zero wire bits (forward and backward — the cached
+rows are constants, no cotangent travels), and the PI loop automatically
+re-spends the saved bits on lower rates for the refreshing pairs.  Hop
+reuse is an emulated-backend feature of the p2p wire (a shape-uniform
+SPMD ``ppermute`` cannot drop individual pairs' buffers; DESIGN.md §3.6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
+                                     allowance, rate_of_allowance)
+
+
+def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
+                     max_stale: int = 5,
+                     name: str = "stale") -> RateController:
+    """Staleness-reuse controller (module docs).
+
+    State: ``{"spent", "integ", "age" [Q, Q] consecutive reuses,
+    "skip" [Q, Q] next step's skip mask}``.
+
+    Example::
+
+        ctl = stale_controller(meta.q, pacing, threshold=0.05, max_stale=5)
+    """
+    eye = jnp.eye(q, dtype=bool)
+
+    def init():
+        return {"spent": jnp.zeros((), jnp.float32),
+                "integ": jnp.zeros((), jnp.float32),
+                "age": jnp.zeros((q, q), jnp.float32),
+                "skip": jnp.zeros((q, q), jnp.float32)}
+
+    def plan(state, step):
+        bits, integ = allowance(pacing, state["spent"], state["integ"], step)
+        rate = rate_of_allowance(pacing, bits)
+        rates = jnp.where(eye, 1.0, rate)
+        return RatePlan(rates, state["skip"]), {**state, "integ": integ}
+
+    def observe(state, obs):
+        delta = jnp.asarray(obs["pair_delta"], jnp.float32)
+        # pairs served stale this step aged by one; refreshed pairs reset
+        age = jnp.where(state["skip"] > 0.0, state["age"] + 1.0, 0.0)
+        skip = ((delta <= threshold) & (age < max_stale) &
+                ~eye).astype(jnp.float32)
+        return {**state, "age": age, "skip": skip,
+                "spent": state["spent"] +
+                jnp.asarray(obs["transport_bits"], jnp.float32)}
+
+    return RateController(name, init, observe, plan)

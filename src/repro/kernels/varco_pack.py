@@ -138,6 +138,28 @@ def block_mask_indices_k(key: jax.Array, n_blocks: int, k: int
     return kept.astype(jnp.int32), inv
 
 
+def block_mask_indices_pos(key: jax.Array, n_blocks: int, k: int
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """:func:`block_mask_indices_k` plus the permutation *positions*.
+
+    Returns ``(kept [k], inv [n_blocks], pos [n_blocks])`` where ``pos[b]``
+    is block ``b``'s slot in the shared permutation.  The kept sets at two
+    counts ``k' <= k`` are *nested* under one key (both are "permutation
+    slot < count"), so a buffer packed at ``k`` realises any smaller
+    per-pair count ``k'`` by zeroing the packed columns whose block has
+    ``pos >= k'`` — the per-pair rate-map mechanism of
+    ``repro.dist.ratectl`` (DESIGN.md §3.6).  ``pos`` matches the dense
+    ``blockmask`` compressor's keep rule bitwise.
+    """
+    perm = jax.random.permutation(key, n_blocks)
+    pos = jnp.zeros((n_blocks,), jnp.int32).at[perm].set(
+        jnp.arange(n_blocks, dtype=jnp.int32))
+    kept = jnp.sort(perm[:k])
+    inv = jnp.full((n_blocks,), -1, jnp.int32)
+    inv = inv.at[kept].set(jnp.arange(k, dtype=jnp.int32))
+    return kept.astype(jnp.int32), inv, pos
+
+
 def worker_block_maps(key: jax.Array, q: int, n_blocks: int, k: int
                       ) -> tuple[jax.Array, jax.Array]:
     """Every worker's ``(kept, inv)`` pair for one exchange: worker ``i``
@@ -148,3 +170,14 @@ def worker_block_maps(key: jax.Array, q: int, n_blocks: int, k: int
     """
     keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
     return jax.vmap(lambda kk: block_mask_indices_k(kk, n_blocks, k))(keys)
+
+
+def worker_block_maps_pos(key: jax.Array, q: int, n_blocks: int, k: int
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """:func:`worker_block_maps` plus every worker's permutation positions
+    (:func:`block_mask_indices_pos`): ``(kept_all [Q, k], inv_all
+    [Q, n_blocks], pos_all [Q, n_blocks])``.  Same ``fold_in(key, worker)``
+    streams, so the scalar-rate wires and the per-pair rate-map wires draw
+    identical kept sets for identical keys."""
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
+    return jax.vmap(lambda kk: block_mask_indices_pos(kk, n_blocks, k))(keys)

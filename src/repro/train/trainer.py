@@ -13,6 +13,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.varco import CommPolicy
 from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
@@ -26,7 +27,15 @@ from repro.train.optim import Optimizer, adamw
 
 @dataclasses.dataclass
 class History:
-    """Per-epoch training record."""
+    """Per-epoch training record.
+
+    ``pair_transport_gf`` is the cumulative per-pair transport split
+    (flattened receiver-major ``[Q*Q]`` tuple of Gfloats per logged
+    epoch) — populated by the closed-loop ``auto`` policies, whose
+    controllers allocate the wire budget per worker pair; empty lists of
+    tuples stay empty for scalar policies.  ``row()`` serialises it as a
+    ``|``-joined cell so the CSV stays one value per column.
+    """
     epoch: list = dataclasses.field(default_factory=list)
     loss: list = dataclasses.field(default_factory=list)
     rate: list = dataclasses.field(default_factory=list)
@@ -36,11 +45,16 @@ class History:
     halo_gfloats: list = dataclasses.field(default_factory=list)  # cumulative
     transport_gfloats: list = dataclasses.field(default_factory=list)
     wall_s: list = dataclasses.field(default_factory=list)
+    pair_transport_gf: list = dataclasses.field(default_factory=list)
 
     def row(self, i: int) -> dict:
-        return {k: getattr(self, k)[i] for k in
-                ("epoch", "loss", "rate", "train_acc", "val_acc", "test_acc",
-                 "halo_gfloats", "transport_gfloats", "wall_s")}
+        out = {k: getattr(self, k)[i] for k in
+               ("epoch", "loss", "rate", "train_acc", "val_acc", "test_acc",
+                "halo_gfloats", "transport_gfloats", "wall_s")}
+        if self.pair_transport_gf:
+            out["pair_transport_gf"] = "|".join(
+                f"{v:.6g}" for v in self.pair_transport_gf[i])
+        return out
 
     def rows(self):
         return [self.row(i) for i in range(len(self.epoch))]
@@ -87,15 +101,27 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     ``wire="p2p"`` the neighbor-only ppermute ring with ELL local
     aggregation (DESIGN.md §3.5 — same constraints under compression, and
     the per-pair halo/ELL arrays are attached here automatically).
+
+    An ``auto:<controller>:<budget-bits>`` policy (``CommPolicy.parse``)
+    closes the loop: the named ``repro.dist.ratectl`` controller plans a
+    per-pair ``[Q, Q]`` rate map each epoch from measured transport
+    feedback, and its state threads through the epoch scan alongside the
+    optimizer state (DESIGN.md §3.6).  Auto policies default the wire to
+    ``"p2p"`` when the caller left ``"dense"`` (per-pair rates need a
+    per-pair wire) and record the per-pair transport split in
+    ``History.pair_transport_gf``.
     """
+    auto = policy.mode == "auto"
+    if auto and wire == "dense":
+        wire = "p2p"                   # per-pair rates need a per-pair wire
     cfg = GNNConfig(conv=conv, in_dim=g.feat_dim, hidden=hidden,
                     out_dim=g.num_classes, layers=layers)
     params = init_gnn(jax.random.key(seed), cfg)
     pg: PartitionedGraph = partition_graph(g, q, scheme=scheme, seed=seed)
     graph = pg.device_arrays()
-    if wire == "p2p":
+    if wire == "p2p" or auto:
         from repro.dist.halo import attach_p2p
-        graph = attach_p2p(graph, pg)
+        graph = attach_p2p(graph, pg)  # auto's per-pair stats need the sets
     meta = DistMeta.build(pg, params, wire=wire)
     opt = optimizer or adamw(lr, weight_decay=weight_decay)
     opt_state = opt.init(params)
@@ -103,16 +129,38 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     mesh = make_worker_mesh(q) if use_shard_map else None
     if mesh is not None:
         graph = shard_graph(graph, mesh)
-    step = make_train_step(cfg, policy, opt, meta, mesh=mesh, sync=sync)
+    if auto:
+        from repro.dist.ratectl import (init_halo_cache, make_auto_train_step,
+                                        make_controller)
+        ctl = make_controller(policy, meta, cfg, total_steps=epochs)
+        ctl_state = ctl.init()
+        cache = init_halo_cache(meta, cfg) \
+            if policy.controller == "stale" else ()
+        step = make_auto_train_step(cfg, policy, opt, meta, mesh=mesh,
+                                    sync=sync)
     evaluate = make_eval_step(cfg, meta, mesh=mesh)
+    if not auto:
+        step = make_train_step(cfg, policy, opt, meta, mesh=mesh, sync=sync)
 
     hist = History()
     halo_bits_cum = 0.0
     transport_bits_cum = 0.0
+    pair_bits_cum = None
     t0 = time.time()
     for epoch in range(epochs):
-        params, opt_state, m = step(params, opt_state, graph,
-                                    jnp.asarray(epoch), jax.random.key(epoch))
+        if auto:
+            plan, ctl_state = ctl.plan(ctl_state, epoch)
+            params, opt_state, m, cache = step(params, opt_state, graph,
+                                               jax.random.key(epoch), plan,
+                                               cache)
+            ctl_state = ctl.observe(ctl_state, m)
+            pair_t = np.asarray(m["pair_transport"], np.float64)
+            pair_bits_cum = pair_t if pair_bits_cum is None \
+                else pair_bits_cum + pair_t
+        else:
+            params, opt_state, m = step(params, opt_state, graph,
+                                        jnp.asarray(epoch),
+                                        jax.random.key(epoch))
         halo_bits_cum += float(m["halo_bits"])
         transport_bits_cum += float(m["transport_bits"])
         if epoch % eval_every == 0 or epoch == epochs - 1:
@@ -126,6 +174,9 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
             hist.halo_gfloats.append(halo_bits_cum / 32.0 / 1e9)
             hist.transport_gfloats.append(transport_bits_cum / 32.0 / 1e9)
             hist.wall_s.append(time.time() - t0)
+            if pair_bits_cum is not None:
+                hist.pair_transport_gf.append(tuple(
+                    pair_bits_cum.ravel() / 32.0 / 1e9))
             if log_fn:
                 log_fn(hist.row(len(hist.epoch) - 1))
     return TrainResult(hist, params, meta, policy.describe())

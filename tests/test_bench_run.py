@@ -1,0 +1,51 @@
+"""Benchmark orchestrator exit code: a failed module must fail the run.
+
+Regression: ``benchmarks/run.py`` counts failures; `main()` must return
+that count (the process exit code) so CI can never silently pass a broken
+benchmark.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+@pytest.fixture
+def fake_modules(monkeypatch):
+    import types
+
+    good = types.ModuleType("benchmarks._fake_good")
+    good.main = lambda quick=True: {"name": "fake_good", "us_per_call": 1.0,
+                                    "derived": "ok"}
+    bad = types.ModuleType("benchmarks._fake_bad")
+
+    def boom(quick=True):
+        raise RuntimeError("intentional benchmark failure")
+
+    bad.main = boom
+    monkeypatch.setitem(sys.modules, "benchmarks._fake_good", good)
+    monkeypatch.setitem(sys.modules, "benchmarks._fake_bad", bad)
+    monkeypatch.setattr(bench_run, "MODULES",
+                        ["benchmarks._fake_good", "benchmarks._fake_bad"])
+
+
+def test_failed_module_propagates_nonzero(fake_modules, capsys):
+    rc = bench_run.main([])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "fake_good,1.0,ok" in out
+    assert "benchmarks._fake_bad,NaN,ERROR" in out
+
+
+def test_all_passing_returns_zero(fake_modules):
+    rc = bench_run.main(["--only", "good"])
+    assert rc == 0
+
+
+def test_ratectl_budget_registered():
+    assert "benchmarks.ratectl_budget" in bench_run.MODULES

@@ -1,0 +1,312 @@
+"""Closed-loop rate control (repro.dist.ratectl, DESIGN.md §3.6).
+
+Controller-level properties (budget adherence, open-loop eq.-(8) limit,
+water-fill invariants, monotone rates, staleness cap, jit-compatible
+state) plus the trainer integration: ``auto:*`` policies end-to-end
+through ``train_gnn`` with per-pair History columns, and the policy-level
+guards.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CommPolicy
+from repro.core.varco import AUTO_CONTROLLERS
+from repro.dist.gnn_parallel import DistMeta, make_train_step
+from repro.dist.ratectl import (CONTROLLERS, RatePlan, budget_controller,
+                                error_controller, exchange_widths,
+                                make_auto_train_step, make_controller,
+                                make_pacing, stale_controller, uniform_plan,
+                                waterfill)
+from repro.graph import partition_graph, tiny_graph
+from repro.nn import GNNConfig, init_gnn
+from repro.train.optim import adamw
+
+Q, F, T = 4, 512, 40
+
+
+@pytest.fixture(scope="module")
+def meta():
+    g = tiny_graph(n=256, feat_dim=F)
+    cfg = GNNConfig(conv="sage", in_dim=F, hidden=F,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, Q, scheme="random")
+    return DistMeta.build(pg, params, wire="p2p"), cfg
+
+
+def _simulate(ctl, meta_, widths, steps: int, floor_k: int = 1):
+    """Drive a controller against the true quantised transport model
+    (kept blocks floor at 1) and return the bits it ships."""
+    rows = meta_.pair_table().astype(np.float64)
+    nb = F // 128
+    spent = 0.0
+    state = ctl.init()
+    for t in range(steps):
+        plan, state = ctl.plan(state, t)
+        r = np.asarray(plan.rates, np.float64)
+        k = np.clip(np.floor(nb / np.maximum(r, 1.0)), floor_k, nb)
+        np.fill_diagonal(k, 0.0)
+        bits = 2.0 * 32.0 * len(widths) * float((rows * k * 128).sum())
+        spent += bits
+        state = ctl.observe(state, {
+            "transport_bits": jnp.asarray(bits, jnp.float32),
+            "pair_err": jnp.asarray(rows * (1.0 - k / nb), jnp.float32),
+            "pair_delta": jnp.ones((Q, Q), jnp.float32)})
+    return spent, state
+
+
+# ---------------------------------------------------------------------------
+# budget controller
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("frac", [0.3, 0.5, 0.8])
+def test_budget_controller_lands_within_5pct(meta, frac):
+    meta_, cfg = meta
+    widths = exchange_widths(cfg)
+    d_full = 2.0 * 32.0 * meta_.halo_demand * sum(widths)
+    budget = frac * d_full * T
+    ctl = budget_controller(Q, make_pacing(meta_, widths, T, budget))
+    spent, _ = _simulate(ctl, meta_, widths, T)
+    assert abs(spent - budget) / budget <= 0.05, (frac, spent / budget)
+
+
+def test_budget_controller_open_loop_limit(meta):
+    """Zero gains + the eq.-(8) schedule's own total as budget → the plan
+    IS eq. (8): same linear anneal, clamped to [c_min, c_max]."""
+    meta_, cfg = meta
+    from repro.core import schedulers
+    widths = exchange_widths(cfg)
+    sched = schedulers.linear(T, slope=5.0)
+    d_full = 2.0 * 32.0 * meta_.halo_demand * sum(widths)
+    budget = d_full * float(sum(1.0 / float(sched(t)) for t in range(T)))
+    ctl = budget_controller(
+        Q, make_pacing(meta_, widths, T, budget, kp=0.0, ki=0.0))
+    state = ctl.init()
+    for t in range(T):
+        plan, state = ctl.plan(state, t)
+        off = np.asarray(plan.rates)[~np.eye(Q, dtype=bool)]
+        np.testing.assert_allclose(off, float(sched(t)), rtol=1e-4)
+        # feed back the un-quantised transport the plan implies — the
+        # receding-horizon replanning then telescopes to eq. (8) exactly
+        state = ctl.observe(state, {
+            "transport_bits": jnp.asarray(d_full / off[0], jnp.float32),
+            "pair_err": jnp.zeros((Q, Q)),
+            "pair_delta": jnp.zeros((Q, Q))})
+
+
+def test_uniform_plan_shape():
+    p = uniform_plan(3, 7.0)
+    assert isinstance(p, RatePlan)
+    np.testing.assert_allclose(np.diag(np.asarray(p.rates)), 1.0)
+    assert np.all(np.asarray(p.skip) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# error controller
+# ---------------------------------------------------------------------------
+
+
+def test_waterfill_invariants():
+    rows = jnp.asarray([[0.0, 10.0], [5.0, 0.0]])
+    density = jnp.asarray([[0.0, 4.0], [1.0, 0.0]])
+    y = np.asarray(waterfill(density, rows, cap=jnp.asarray(7.5),
+                             y_floor=0.25))
+    # cap respected, floors respected, denser pair fills first
+    assert float((np.asarray(rows) * y).sum()) <= 7.5 + 1e-4
+    assert np.all(y >= 0.25 - 1e-6)
+    assert y[0, 1] >= y[1, 0]
+    # equal densities degrade to the uniform allocation
+    y_eq = np.asarray(waterfill(jnp.ones((2, 2)), jnp.ones((2, 2)),
+                                cap=jnp.asarray(2.0), y_floor=0.1))
+    np.testing.assert_allclose(y_eq, 0.5, rtol=1e-4)
+    # a floor already above cap is returned unchanged (commitments win)
+    y_fl = np.asarray(waterfill(density, rows, cap=jnp.asarray(1.0),
+                                y_floor=0.5))
+    np.testing.assert_allclose(y_fl, 0.5, rtol=1e-6)
+
+
+def test_error_controller_rates_monotone_and_budgeted(meta):
+    meta_, cfg = meta
+    widths = exchange_widths(cfg)
+    d_full = 2.0 * 32.0 * meta_.halo_demand * sum(widths)
+    budget = 0.5 * d_full * T
+    ctl = error_controller(Q, make_pacing(meta_, widths, T, budget),
+                           meta_.pair_table())
+    rows = meta_.pair_table().astype(np.float64)
+    nb = F // 128
+    state = ctl.init()
+    prev = None
+    spent = 0.0
+    off = (rows > 0)
+    for t in range(T):
+        plan, state = ctl.plan(state, t)
+        r = np.asarray(plan.rates, np.float64)
+        if prev is not None:   # per-pair rates never increase (Prop. 2)
+            assert np.all(r[off] <= prev[off] + 1e-5)
+        prev = r
+        k = np.clip(np.floor(nb / np.maximum(r, 1.0)), 1, nb)
+        np.fill_diagonal(k, 0.0)
+        bits = 2.0 * 32.0 * len(widths) * float((rows * k * 128).sum())
+        spent += bits
+        err = rows * (1.0 - k / nb) * (1.0 + (np.arange(Q * Q) % 3)
+                                       .reshape(Q, Q))
+        state = ctl.observe(state, {
+            "transport_bits": jnp.asarray(bits, jnp.float32),
+            "pair_err": jnp.asarray(err, jnp.float32),
+            "pair_delta": jnp.zeros((Q, Q), jnp.float32)})
+    assert spent <= 1.1 * budget, spent / budget
+
+
+# ---------------------------------------------------------------------------
+# stale controller
+# ---------------------------------------------------------------------------
+
+
+def test_stale_skip_threshold_and_cap(meta):
+    meta_, cfg = meta
+    widths = exchange_widths(cfg)
+    cap = 3
+    ctl = stale_controller(Q, make_pacing(meta_, widths, T, 1e9),
+                           threshold=0.1, max_stale=cap)
+    state = ctl.init()
+    plan, state = ctl.plan(state, 0)
+    assert np.all(np.asarray(plan.skip) == 0.0)       # never skip blind
+    # unchanged pairs get skipped... but only max_stale times in a row
+    consecutive = 0
+    for t in range(1, 10):
+        state = ctl.observe(state, {
+            "transport_bits": jnp.zeros(()),
+            "pair_err": jnp.zeros((Q, Q)),
+            "pair_delta": jnp.zeros((Q, Q))})          # nothing changed
+        plan, state = ctl.plan(state, t)
+        sk = np.asarray(plan.skip)
+        assert np.all(np.diag(sk) == 0.0)
+        if sk[0, 1] > 0:
+            consecutive += 1
+            assert consecutive <= cap
+        else:
+            assert consecutive == cap                  # forced refresh
+            consecutive = 0
+    # a large delta forces a refresh immediately
+    state = ctl.observe(state, {
+        "transport_bits": jnp.zeros(()),
+        "pair_err": jnp.zeros((Q, Q)),
+        "pair_delta": jnp.ones((Q, Q))})
+    plan, _ = ctl.plan(state, 10)
+    assert np.all(np.asarray(plan.skip) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# API: jit-compatibility, dispatch, guards
+# ---------------------------------------------------------------------------
+
+
+def test_controller_state_is_jit_compatible(meta):
+    meta_, cfg = meta
+    widths = exchange_widths(cfg)
+    for factory in (lambda: budget_controller(
+                        Q, make_pacing(meta_, widths, T, 1e9)),
+                    lambda: error_controller(
+                        Q, make_pacing(meta_, widths, T, 1e9),
+                        meta_.pair_table()),
+                    lambda: stale_controller(
+                        Q, make_pacing(meta_, widths, T, 1e9))):
+        ctl = factory()
+        state = ctl.init()
+        plan, state = jax.jit(ctl.plan)(state, jnp.asarray(3))
+        obs = {"transport_bits": jnp.ones(()),
+               "pair_err": jnp.ones((Q, Q)),
+               "pair_delta": jnp.zeros((Q, Q))}
+        state = jax.jit(ctl.observe)(state, obs)
+        assert plan.rates.shape == (Q, Q)
+
+
+def test_make_controller_dispatch_and_registry(meta):
+    meta_, cfg = meta
+    assert CONTROLLERS == AUTO_CONTROLLERS
+    for name in CONTROLLERS:
+        pol = CommPolicy.parse(f"auto:{name}:1e9", T)
+        ctl = make_controller(pol, meta_, cfg, T)
+        assert ctl.name == name
+    with pytest.raises(ValueError, match="auto"):
+        make_controller(CommPolicy("full"), meta_, cfg, T)
+
+
+def test_auto_policy_guards(meta):
+    meta_, cfg = meta
+    pol = CommPolicy.parse("auto:budget:1e9", T)
+    with pytest.raises(ValueError, match="ratectl"):
+        pol.rate(0)
+    with pytest.raises(ValueError, match="ratectl"):
+        make_train_step(cfg, pol, adamw(1e-3), meta_)
+    import dataclasses
+    dense = dataclasses.replace(meta_, wire="dense")
+    with pytest.raises(ValueError, match="packed|p2p"):
+        make_auto_train_step(cfg, pol, adamw(1e-3), dense)
+    stale_pol = CommPolicy.parse("auto:stale:1e9", T)
+    packed = dataclasses.replace(meta_, wire="packed")
+    with pytest.raises(ValueError, match="p2p"):
+        make_auto_train_step(cfg, stale_pol, adamw(1e-3), packed)
+
+
+# ---------------------------------------------------------------------------
+# trainer integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ctl", ["budget", "stale"])
+def test_train_gnn_auto_end_to_end(ctl):
+    from repro.train import train_gnn
+
+    g = tiny_graph(n=256, feat_dim=F)
+    epochs = 8
+    budget = 0.5 * 8e6 * epochs
+    pol = CommPolicy.parse(f"auto:{ctl}:{budget:g}", epochs)
+    res = train_gnn(g, q=Q, scheme="random", policy=pol, epochs=epochs,
+                    hidden=F, layers=2, eval_every=4)
+    h = res.history
+    assert len(h.pair_transport_gf) == len(h.epoch) > 0
+    # per-pair columns decompose the cumulative transport
+    np.testing.assert_allclose(sum(h.pair_transport_gf[-1]),
+                               h.transport_gfloats[-1], rtol=1e-5)
+    assert "pair_transport_gf" in h.row(0)
+    assert res.meta.wire == "p2p"        # auto defaults the wire to p2p
+    assert np.isfinite(h.final_test_acc)
+
+
+def test_stale_step_reuses_cache_and_charges_nothing(meta):
+    """A forced all-skip step delivers the cached hops and ships zero
+    bits; the forced all-refresh step matches a fresh run bitwise."""
+    meta_, cfg = meta
+    g = tiny_graph(n=256, feat_dim=F)
+    pg = partition_graph(g, Q, scheme="random")
+    from repro.dist.halo import attach_p2p
+    from repro.dist.ratectl import init_halo_cache
+    graph = attach_p2p(pg.device_arrays(), pg)
+    params = init_gnn(jax.random.key(0), cfg)
+    meta_p = DistMeta.build(pg, params, wire="p2p")
+    pol = CommPolicy.parse("auto:stale:1e9", T)
+    opt = adamw(5e-3)
+    step = make_auto_train_step(cfg, pol, opt, meta_p)
+    cache = init_halo_cache(meta_p, cfg)
+    eye = np.eye(Q, dtype=bool)
+    rm = jnp.where(jnp.asarray(eye), 1.0, 2.0)
+    no_skip = RatePlan(rm, jnp.zeros((Q, Q)))
+    all_skip = RatePlan(rm, jnp.asarray(~eye, jnp.float32))
+
+    p0, s0 = params, opt.init(params)
+    p1, s1, m1, cache1 = step(p0, s0, graph, jax.random.key(1), no_skip,
+                              cache)
+    assert float(m1["transport_bits"]) > 0.0
+    # skip everything: zero transport, and the delivered halos are the
+    # cached ones → same params as re-running with the cache as truth
+    p2, s2, m2, cache2 = step(p1, s1, graph, jax.random.key(2), all_skip,
+                              cache1)
+    assert float(m2["transport_bits"]) == 0.0
+    assert float(np.asarray(m2["pair_delta"]).max()) >= 0.0
+    for a, b in zip(cache1, cache2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

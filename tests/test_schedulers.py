@@ -37,6 +37,16 @@ def test_linear_matches_paper_eq8():
         assert abs(float(s(t)) - expect) < 1e-4
 
 
+def test_call_clamps_to_ceiling_and_floor():
+    """Regression: a mis-specified fn can never escape [c_min, c_max] —
+    the ceiling clamp used to be missing (only the floor was applied)."""
+    wild = schedulers.Scheduler(
+        "wild", lambda t: jnp.where(t < 1.0, 1e6, -1e6), c_max=128.0,
+        c_min=1.0)
+    assert float(wild(0)) == 128.0        # above ceiling → clamped down
+    assert float(wild(5)) == 1.0          # below floor → clamped up
+
+
 def test_parse_specs():
     assert schedulers.parse("fixed:4", 10).name == "fixed:4"
     assert schedulers.parse("linear:3", 10).name == "linear:a=3"
@@ -56,3 +66,52 @@ def test_policy_parse_and_rates():
     assert not none.communicates
     fixed = CommPolicy.parse("fixed:4", 300)
     assert float(fixed.rate(123)) == 4.0
+
+
+# ---------------------------------------------------------------------------
+# CommPolicy.parse round trips: every documented spec string
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,mode,desc_frag", [
+    ("full", "full", "full"),
+    ("none", "none", "none"),
+    ("fixed:4", "fixed", "fixed:4"),
+    ("varco:linear:5", "varco", "linear:a=5"),
+    ("varco:exp", "varco", "exp"),
+    ("varco:cosine", "varco", "cosine"),
+    ("varco:step:0.5", "varco", "step:R=0.5"),
+    ("auto:budget:2e9", "auto", "budget"),
+    ("auto:error:2e9", "auto", "error"),
+    ("auto:stale:2e9", "auto", "stale"),
+])
+def test_policy_parse_round_trip(spec, mode, desc_frag):
+    p = CommPolicy.parse(spec, 300)
+    assert p.mode == mode
+    assert desc_frag in p.describe()
+    if mode == "auto":
+        assert p.budget_bits == 2e9
+        assert p.compressor_name == "blockmask"   # auto forces the wire's
+        assert p.compresses and p.communicates    # lane-block compressor
+    if mode in ("fixed", "varco"):
+        assert p.scheduler is not None
+
+
+@pytest.mark.parametrize("bad", [
+    "bogus",                 # unknown mode
+    "auto",                  # missing controller + budget
+    "auto:budget",           # missing budget
+    "auto:budget:",          # empty budget
+    "auto:bogus:2e9",        # unknown controller
+    "auto:budget:xyz",       # non-numeric budget
+    "auto:budget:-5",        # non-positive budget
+    "fixed:abc",             # non-numeric rate
+])
+def test_policy_parse_malformed(bad):
+    with pytest.raises(ValueError):
+        CommPolicy.parse(bad, 300)
+
+
+def test_auto_policy_requires_blockmask():
+    with pytest.raises(ValueError, match="blockmask"):
+        CommPolicy.parse("auto:budget:1e9", 300, compressor="randmask")
