@@ -3,14 +3,20 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test verify fast smoke bench-smoke wire-smoke ring-smoke \
-        ratectl-smoke docs all
+.PHONY: test verify fast slow floor smoke bench-smoke wire-smoke \
+        ring-smoke ratectl-smoke ratectl-pl-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
 
 fast:                        # skip the multi-device subprocess tests
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m "not slow" --durations=10
+
+slow:                        # subprocess meshes + the parity matrix
+	$(PY) -m pytest -x -q -m slow --durations=10
+
+floor:                       # fail if collected tests drop below the floor
+	$(PY) scripts/check_collection_floor.py
 
 smoke:
 	$(PY) examples/quickstart.py
@@ -27,7 +33,11 @@ ring-smoke:                  # p2p ring: transport == analytic at rates {1,4}
 ratectl-smoke:               # closed loop: budget within 5%, error >= uniform
 	$(PY) benchmarks/ratectl_budget.py --smoke
 
+ratectl-pl-smoke:            # per-layer: err <= uniform, budget 5%, parity
+	$(PY) benchmarks/ratectl_budget.py --per-layer --smoke
+
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
-all: verify smoke bench-smoke wire-smoke ring-smoke ratectl-smoke docs
+all: floor verify smoke bench-smoke wire-smoke ring-smoke ratectl-smoke \
+     ratectl-pl-smoke docs

@@ -21,6 +21,15 @@ controller's accumulated transport must land within 5% of the requested
 bits, and the ``error`` controller's accuracy at the uniform baseline's
 measured budget must be at least the baseline's.
 
+``--per-layer`` (DESIGN.md §3.7) adds the per-layer frontier: the same
+controllers told ``auto:<controller>:<B>:per-layer`` plan ``[L, Q, Q]``
+rate tensors, water-filling each step's allowance across layers by
+measured dropped energy.  With ``--smoke`` it asserts the per-layer
+acceptance triple: (i) per-layer cumulative compression error ≤ the
+uniform-layer controller's at equal bit budget, (ii) budget adherence
+within 5%, (iii) emulated ≡ shard_map ≤ 1e-6 at mixed ``[L, Q, Q]``
+rates (subprocess, 4 virtual devices).
+
 Output: ``experiments/bench/ratectl_budget.csv`` (schema in
 benchmarks/README.md).
 """
@@ -72,7 +81,7 @@ def _full_step_bits(g) -> float:
     return 2.0 * 32.0 * meta.halo_demand * sum(exchange_widths(cfg))
 
 
-def main(quick: bool = True) -> dict:
+def main(quick: bool = True, per_layer: bool = False) -> dict:
     from repro.graph.synthetic import citation_graph
 
     n = 1200 if quick else 6000
@@ -83,6 +92,9 @@ def main(quick: bool = True) -> dict:
     rows = []
     t0 = time.time()
     worst_budget_err = 0.0
+    specs = ["budget", "error"]
+    if per_layer:
+        specs += ["budget:per-layer", "error:per-layer"]
     for frac in fracs:
         budget = frac * d_full * epochs
         # uniform fixed-rate baseline aimed at the budget
@@ -91,22 +103,29 @@ def main(quick: bool = True) -> dict:
         rows.append({"policy": "uniform", "budget_bits": budget,
                      "transport_bits": t_u, "of_budget": t_u / budget,
                      "final_acc": res_u.history.final_test_acc,
-                     "best_acc": res_u.history.best_test_acc})
-        for ctl in ("budget", "error"):
-            res, t = _train(g, f"auto:{ctl}:{budget:g}", epochs)
-            if ctl == "budget":
+                     "best_acc": res_u.history.best_test_acc,
+                     "comp_err": ""})
+        for spec in specs:
+            ctl, _, suffix = spec.partition(":")
+            res, t = _train(g, f"auto:{ctl}:{budget:g}"
+                            f"{':' + suffix if suffix else ''}", epochs)
+            if ctl == "budget" and not suffix:
                 worst_budget_err = max(worst_budget_err,
                                        abs(t - budget) / budget)
-            rows.append({"policy": ctl, "budget_bits": budget,
+            h = res.history
+            rows.append({"policy": spec.replace(":", "-"),
+                         "budget_bits": budget,
                          "transport_bits": t, "of_budget": t / budget,
-                         "final_acc": res.history.final_test_acc,
-                         "best_acc": res.history.best_test_acc})
+                         "final_acc": h.final_test_acc,
+                         "best_acc": h.best_test_acc,
+                         "comp_err": h.comp_err[-1] if h.comp_err else ""})
     res_o, t_o = _train(g, "varco:linear:5", epochs,
                         compressor="blockmask")
     rows.append({"policy": "open-loop", "budget_bits": t_o,
                  "transport_bits": t_o, "of_budget": 1.0,
                  "final_acc": res_o.history.final_test_acc,
-                 "best_acc": res_o.history.best_test_acc})
+                 "best_acc": res_o.history.best_test_acc,
+                 "comp_err": ""})
     save_rows("ratectl_budget", rows)
     return {"name": "ratectl_budget",
             "us_per_call": 1e6 * (time.time() - t0) / max(len(rows), 1),
@@ -146,6 +165,53 @@ def smoke() -> None:
     print("RATECTL_SMOKE_OK")
 
 
+def smoke_per_layer() -> None:
+    """Per-layer acceptance (DESIGN.md §3.7): per-layer controller drops
+    no more energy than the uniform-layer controller at equal budget,
+    lands the budget within 5%, and the backends agree at mixed
+    ``[L, Q, Q]`` rates (the shared conformance harness of
+    tests/parity.py, so the benchmark and the test matrix exercise one
+    parity protocol)."""
+    from repro.graph.synthetic import citation_graph
+
+    epochs = 40
+    g = citation_graph(n=1200, feat_dim=F, seed=0)
+
+    # anchor the budget on the uniform fixed-rate baseline's spend, like
+    # the scalar smoke — both closed-loop runs then compete at equal bits
+    _, budget = _train(g, "fixed:2", epochs, compressor="blockmask")
+    print(f"anchor budget = {budget:.4g} bits")
+
+    res_u, t_u = _train(g, f"auto:budget:{budget:g}", epochs)
+    err_u = res_u.history.comp_err[-1]
+    print(f"uniform-layer budget ctl  spent/budget={t_u / budget:.4f}  "
+          f"comp_err={err_u:.4g}  acc={res_u.history.final_test_acc:.4f}")
+
+    res_p, t_p = _train(g, f"auto:budget:{budget:g}:per-layer", epochs)
+    err_p = res_p.history.comp_err[-1]
+    adherence = abs(t_p - budget) / budget
+    split = [round(v, 5) for v in res_p.history.layer_split(Q)]
+    print(f"per-layer budget ctl      spent/budget={t_p / budget:.4f}  "
+          f"comp_err={err_p:.4g}  acc={res_p.history.final_test_acc:.4f}  "
+          f"layer split Gf={split}")
+
+    assert adherence <= 0.05, (
+        f"per-layer budget controller missed the bit budget by "
+        f"{100 * adherence:.1f}% (> 5%): shipped {t_p:.4g} of {budget:.4g}")
+    assert err_p <= err_u * (1.0 + 1e-6), (
+        f"per-layer allocation dropped MORE energy than uniform layers at "
+        f"equal budget: {err_p:.6g} > {err_u:.6g}")
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tests"))
+    from parity import run_forward_parity
+    out = run_forward_parity(Q, [
+        {"wire": wire, "policy": "fixed:4", "map": "layer", "seed": 0}
+        for wire in ("p2p", "packed")], layers=LAYERS)
+    print(out.strip())
+    print("RATECTL_PER_LAYER_SMOKE_OK")
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -153,11 +219,18 @@ if __name__ == "__main__":
     grp = ap.add_mutually_exclusive_group()
     grp.add_argument("--smoke", action="store_true",
                      help="acceptance: budget within 5%, error >= uniform "
-                          "accuracy at equal budget (~2 min)")
+                          "accuracy at equal budget (~2 min); with "
+                          "--per-layer, the per-layer acceptance triple "
+                          "instead")
     grp.add_argument("--full", action="store_true",
                      help="paper-scale frontier sweep")
+    ap.add_argument("--per-layer", action="store_true",
+                    help="per-layer [L, Q, Q] frontier / smoke "
+                         "(DESIGN.md §3.7)")
     args = ap.parse_args()
-    if args.smoke:
+    if args.smoke and args.per_layer:
+        smoke_per_layer()
+    elif args.smoke:
         smoke()
     else:
-        print(main(quick=not args.full))
+        print(main(quick=not args.full, per_layer=args.per_layer))

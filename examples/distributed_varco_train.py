@@ -17,6 +17,10 @@ Run:  PYTHONPATH=src python examples/distributed_varco_train.py \
 
 plans per-pair compression rates every epoch so the run's total transport
 lands on the named bit budget (the trailing report prints the adherence).
+A trailing ``:per-layer`` (e.g. ``auto:budget:2e9:per-layer``) lifts the
+plan to per-layer ``[L, Q, Q]`` rate tensors — each layer's exchanges get
+their own water-filled share of the step's bit allowance (DESIGN.md §3.7)
+— and the report adds the per-layer transport split.
 Auto policies need lane-grid widths (feature/hidden multiples of 128) and
 run on the p2p wire; widths of 512 give the controller 4 kept-block
 levels per pair to allocate — at width 128 every pair is already at the
@@ -42,8 +46,11 @@ def main():
     ap.add_argument("--comm", "--policy", dest="comm",
                     default="varco:linear:5",
                     help="comm spec: full | none | fixed:<r> | "
-                         "varco:<sched> | auto:<controller>:<budget-bits> "
-                         "(closed-loop; e.g. auto:budget:2e9)")
+                         "varco:<sched> | "
+                         "auto:<controller>:<budget-bits>[:per-layer] "
+                         "(closed-loop; e.g. auto:budget:2e9 or "
+                         "auto:budget:2e9:per-layer for [L, Q, Q] "
+                         "per-layer rate tensors)")
     ap.add_argument("--wire", default=None,
                     choices=["dense", "packed", "p2p"],
                     help="halo-exchange transport (auto policies default "
@@ -104,6 +111,10 @@ def main():
         print(f"budget adherence: shipped {spent:.4g} of "
               f"{policy.budget_bits:.4g} bits "
               f"({spent / policy.budget_bits:.1%})")
+        split = res.history.layer_split(args.workers)
+        if split:
+            print("per-layer transport split (Gfloat): " +
+                  ", ".join(f"L{i}={v:.3f}" for i, v in enumerate(split)))
 
 
 if __name__ == "__main__":

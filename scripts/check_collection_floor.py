@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Fail CI when the collected test count drops below the floor.
+
+A refactor that silently de-collects a module (import error swallowed by
+a skip, a renamed file pytest no longer matches, a conftest change that
+breaks parametrisation) shows up as "fewer tests, all green".  This
+guard runs ``pytest --collect-only -q`` and compares the collected count
+against the floor recorded here, which each PR bumps to its own count.
+
+Usage::
+
+    PYTHONPATH=src python scripts/check_collection_floor.py [--min N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import subprocess
+import sys
+
+#: tier-1 collected-test floor — raise (never lower) as suites grow.
+#: History: PR 1: 155, PR 2: 188, PR 3: 229, PR 4: 281, PR 5: 313.
+FLOOR = 313
+
+
+def collected_count(pytest_args: list[str] | None = None) -> int:
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         *(pytest_args or [])],
+        capture_output=True, text=True)
+    if out.returncode not in (0, 5):     # 5 = no tests collected
+        print(out.stdout[-4000:], file=sys.stderr)
+        print(out.stderr[-4000:], file=sys.stderr)
+        raise SystemExit(f"pytest --collect-only failed "
+                         f"(rc={out.returncode})")
+    m = re.search(r"(\d+) tests? collected", out.stdout)
+    if not m:
+        m = re.search(r"collected (\d+) items", out.stdout)
+    if not m:
+        print(out.stdout[-4000:], file=sys.stderr)
+        raise SystemExit("could not parse collected-test count")
+    return int(m.group(1))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min", type=int, default=FLOOR,
+                    help=f"minimum collected tests (default {FLOOR})")
+    args = ap.parse_args()
+    n = collected_count()
+    if n < args.min:
+        print(f"FAIL: collected {n} tests, floor is {args.min} — a suite "
+              f"stopped collecting (or lower the floor ONLY with a PR "
+              f"that explains the removal)")
+        return 1
+    print(f"OK: collected {n} tests (floor {args.min})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -184,16 +184,44 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
     shipped ring-wide × on-wire columns — which equals
     ``halo_demand × width × 32`` (identical on all workers).
     """
+    hops, wire_bits = neighbor_exchange_start(
+        publish, send_slot, send_valid, axis_name, key=key, n_keep=n_keep,
+        pair_k=pair_k)
+    compact = neighbor_exchange_finish(hops, axis_name, key=key,
+                                       n_keep=n_keep, f=publish.shape[-1])
+    return compact, wire_bits
+
+
+def neighbor_exchange_start(publish: Array, send_slot: Array,
+                            send_valid: Array, axis_name: str, *,
+                            key: Array | None = None,
+                            n_keep: int | None = None,
+                            pair_k: Array | None = None
+                            ) -> tuple[Array, Array]:
+    """Issue half of :func:`neighbor_exchange`: pack the boundary block
+    once, mask each hop to its pair's kept columns, and run all ``Q - 1``
+    ``ppermute`` hops — but do **not** unpack.  Returns ``(hops [D, H,
+    width], wire_bits)`` where the hop rows are still in the on-wire
+    (packed) format.
+
+    This is the prefetch entry point of the pipelined forward
+    (DESIGN.md §3.7): the caller issues the exchange, schedules its local
+    compute, and only then calls :func:`neighbor_exchange_finish` — the
+    sole consumer of the received buffers — so XLA's latency-hiding
+    scheduler can keep the hops in flight behind the local work, and the
+    explicit data dependence on the wire is confined to the unpack.
+    """
     if pair_k is not None and n_keep is None:
         raise ValueError("pair_k needs n_keep (the map's static maximum)")
     q = _axis_size(axis_name)
     f = publish.shape[-1]
     if q == 1:
-        return jnp.zeros((1, f), publish.dtype), jnp.zeros((), jnp.float32)
+        return (jnp.zeros((1, 1, f), publish.dtype),
+                jnp.zeros((), jnp.float32))
     width = f
     kept_all = inv_all = pos_kept_me = None
     if n_keep is not None:
-        from repro.kernels.ops import wire_pack, wire_unpack
+        from repro.kernels.ops import wire_pack
         from repro.kernels.varco_pack import (LANE, worker_block_maps,
                                               worker_block_maps_pos)
         if f % LANE:
@@ -226,16 +254,39 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
                 k_pair.astype(jnp.float32) * LANE * 32.0
         rows = lax.ppermute(rows, axis_name,
                             [(j, (j + d) % q) for j in range(q)])
-        if n_keep is not None:
-            src = (me - d) % q      # hop d's rows came from worker me - d
-            rows = wire_unpack(rows, kept_all[src], inv_all[src])
         hops.append(rows)
-    compact = jnp.concatenate(hops, axis=0)
     if pair_k is not None:
         wire_bits = lax.psum(bits, axis_name)
     else:
         wire_bits = lax.psum(jnp.sum(send_valid), axis_name) * width * 32.0
-    return compact, wire_bits
+    return jnp.stack(hops), wire_bits
+
+
+def neighbor_exchange_finish(hops: Array, axis_name: str, *,
+                             key: Array | None = None,
+                             n_keep: int | None = None,
+                             f: int | None = None) -> Array:
+    """Completion half of :func:`neighbor_exchange`: unpack each received
+    hop with its sender's inverse map (re-derived from the shared ``key``
+    — hop ``d``'s rows came from worker ``me - d``) and stack the hops
+    into the compact ``[(Q-1)·H, F]`` halo buffer.  ``f`` is the original
+    feature width (required when ``n_keep`` packed the hops)."""
+    q = _axis_size(axis_name)
+    if q == 1:
+        return jnp.zeros((1, hops.shape[-1]), hops.dtype)
+    if n_keep is None:
+        return hops.reshape(-1, hops.shape[-1])
+    from repro.kernels.ops import wire_unpack
+    from repro.kernels.varco_pack import LANE, worker_block_maps
+    if f is None:
+        raise ValueError("packed hops need f (the unpacked feature width)")
+    me = lax.axis_index(axis_name)
+    kept_all, inv_all = worker_block_maps(key, q, f // LANE, n_keep)
+    out = []
+    for d in range(1, q):
+        src = (me - d) % q          # hop d's rows came from worker me - d
+        out.append(wire_unpack(hops[d - 1], kept_all[src], inv_all[src]))
+    return jnp.concatenate(out, axis=0)
 
 
 def compressed_psum(x, axis_name: str, *, compressor: Compressor,

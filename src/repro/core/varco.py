@@ -47,8 +47,16 @@ class CommPolicy:
     compressor_name: str = "randmask"
     controller: str | None = None
     budget_bits: float = 0.0
+    #: auto mode only: plan per-layer ``[L, Q, Q]`` rate tensors instead
+    #: of one ``[Q, Q]`` map shared by every layer (DESIGN.md §3.7);
+    #: spelled ``auto:<controller>:<bits>:per-layer``
+    per_layer: bool = False
 
     def __post_init__(self):
+        if self.per_layer and self.mode != "auto":
+            raise ValueError(
+                f"per_layer rate planning is a closed-loop (auto) feature; "
+                f"mode {self.mode!r} plans one scalar rate per step")
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
         if self.mode in ("fixed", "varco") and self.scheduler is None:
@@ -76,8 +84,10 @@ class CommPolicy:
 
         ``full`` | ``none`` | ``fixed:<r>`` | ``varco:linear:<a>`` |
         ``varco:exp`` | ``varco:cosine`` | ``varco:step:<R>`` |
-        ``auto:<controller>:<budget-bits>`` with controller in
-        ``budget`` / ``error`` / ``stale`` (e.g. ``auto:budget:2e9``).
+        ``auto:<controller>:<budget-bits>[:per-layer]`` with controller
+        in ``budget`` / ``error`` / ``stale`` (e.g. ``auto:budget:2e9``;
+        the ``per-layer`` suffix plans ``[L, Q, Q]`` per-layer rate
+        tensors, DESIGN.md §3.7).
         """
         spec = spec.strip().lower()
         if spec == "full":
@@ -94,13 +104,19 @@ class CommPolicy:
                               compressor or "randmask")
         if kind == "auto":
             ctl, _, budget = rest.partition(":")
+            budget, sep, suffix = budget.partition(":")
             if not ctl or not budget:
                 raise ValueError(
-                    f"auto spec is auto:<controller>:<budget-bits>, "
-                    f"got {spec!r}")
+                    f"auto spec is auto:<controller>:<budget-bits>"
+                    f"[:per-layer], got {spec!r}")
+            if sep and suffix != "per-layer":
+                raise ValueError(
+                    f"unknown auto suffix {suffix!r} in {spec!r} "
+                    f"(only 'per-layer' is defined)")
             return CommPolicy("auto", compressor_name=compressor or
                               "blockmask", controller=ctl,
-                              budget_bits=float(budget))
+                              budget_bits=float(budget),
+                              per_layer=bool(suffix))
         raise ValueError(f"unknown comm spec {spec!r}")
 
     # -- queries -------------------------------------------------------------
@@ -131,8 +147,9 @@ class CommPolicy:
         if self.mode in ("full", "none"):
             return self.mode
         if self.mode == "auto":
+            pl = ",per-layer" if self.per_layer else ""
             return (f"auto({self.controller},{self.budget_bits:g}b,"
-                    f"{self.compressor_name})")
+                    f"{self.compressor_name}{pl})")
         return f"{self.mode}({self.scheduler.name},{self.compressor_name})"
 
 

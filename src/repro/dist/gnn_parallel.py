@@ -72,7 +72,9 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.collectives import (compressed_all_gather, neighbor_exchange,
+from repro.core.collectives import (compressed_all_gather,
+                                    neighbor_exchange_finish,
+                                    neighbor_exchange_start,
                                     packed_all_gather)
 from repro.core.compression import Compressor
 from repro.core.varco import FULL_COMM, CommPolicy
@@ -388,19 +390,45 @@ def _pair_keep(nb: int, rate_map, k_max: int) -> jnp.ndarray:
 
 
 def _packed_pair_k_for(meta: DistMeta, rate_map) -> tuple:
-    """Quantise a concrete ``[Q, Q]`` rate map to the static max kept-block
-    count of every exchanged width — `_packed_k_for`'s bounded-recompile
-    contract for rate maps (at most ``Π (width/128)`` distinct tuples)."""
+    """Quantise a concrete rate map to the static max kept-block count of
+    every exchanged width — `_packed_k_for`'s bounded-recompile contract
+    for rate maps (at most ``Π (width/128)`` distinct tuples).
+
+    Accepts the per-pair ``[Q, Q]`` map or the per-layer ``[L, Q, Q]``
+    tensor (DESIGN.md §3.7): the static count is the maximum over every
+    layer's off-diagonal entries, so one packed buffer per width serves
+    all layers and each layer's smaller kept set is carved out by the
+    nested column masks."""
     rm = np.maximum(np.asarray(rate_map, np.float64), 1.0)
     q = meta.q
+    rm = rm.reshape(-1, q, q)          # [L, Q, Q] (L == 1 for pair maps)
     off = ~np.eye(q, dtype=bool) if q > 1 else np.zeros((1, 1), bool)
     nbs = sorted({d // LANE for d in (meta.feat_dim, *meta.layer_dims)})
     out = []
     for nb in nbs:
         k = np.maximum(np.floor(nb / rm), 1.0)
-        kmax = int(k[off].max()) if q > 1 else 1
+        kmax = int(k[:, off].max()) if q > 1 else 1
         out.append((nb, min(max(kmax, 1), nb)))
     return tuple(out)
+
+
+def _rate_tensor_layers(meta: DistMeta, rate_map) -> int:
+    """Static layer count of a rate operand: 1 for ``None`` / ``[Q, Q]``
+    pair maps, ``L`` for a per-layer ``[L, Q, Q]`` tensor — which must
+    match the model's layer count (``len(meta.layer_dims)``), since layer
+    ``li``'s exchanges index row ``li``."""
+    if rate_map is None or jnp.ndim(rate_map) == 2:
+        return 1
+    if jnp.ndim(rate_map) != 3:
+        raise ValueError(f"rate map must be [Q, Q] or [L, Q, Q], got "
+                         f"ndim {jnp.ndim(rate_map)}")
+    n_layers = int(jnp.shape(rate_map)[0])
+    if n_layers != len(meta.layer_dims):
+        raise ValueError(
+            f"per-layer rate tensor has {n_layers} layer rows but the "
+            f"model exchanges at {len(meta.layer_dims)} layers "
+            f"(DistMeta.layer_dims {meta.layer_dims})")
+    return n_layers
 
 
 def _ring_targets(q: int) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -443,22 +471,37 @@ def _pair_hop_energy(publish: jnp.ndarray, slot: jnp.ndarray,
 
 
 def _pair_ledger(meta: DistMeta, f: int, rate_map, width_pairs,
-                 pair_err, pair_delta, live=None) -> jnp.ndarray:
+                 pair_err, pair_delta, live=None, li: int = 0,
+                 n_layers: int = 1) -> jnp.ndarray:
     """Flat per-pair ledger vector of one exchange:
-    ``[analytic, transport, pair_transport (Q²), pair_err (Q²),
-    pair_delta (Q²)]`` (length ``2 + 3·Q²``).
+    ``[analytic, transport, layer_transport (L·Q²), layer_err (L·Q²),
+    layer_delta (L·Q²)]`` (length ``2 + 3·L·Q²``).
 
     ``width_pairs [Q, Q]`` is each pair's realised on-wire column count;
     ``live`` (0/1, default all-1) zeroes skipped pairs (the ``stale``
-    controller's reused hops ship nothing, forward or backward)."""
+    controller's reused hops ship nothing, forward or backward).
+
+    ``li``/``n_layers`` place this exchange's pair blocks on the per-layer
+    ledger axis (DESIGN.md §3.7): each block lands in layer ``li``'s
+    ``Q²`` slice, zeros elsewhere, so summing the per-call vectors across
+    a forward pass composes the ``[L, Q, Q]`` tensors exchange-by-
+    exchange.  ``n_layers == 1`` is the legacy per-pair layout (all
+    exchanges accumulate into the single slice)."""
     rows = jnp.asarray(meta.pair_table(), jnp.float32)
     live = jnp.ones_like(rows) if live is None else live
     r = jnp.maximum(jnp.asarray(rate_map, jnp.float32), 1.0)
     analytic = jnp.sum(rows * live * f * 32.0 / r)
     pair_t = rows * live * width_pairs * 32.0
+
+    def embed(block):
+        if n_layers == 1:
+            return block.ravel()
+        out = jnp.zeros((n_layers, block.size), block.dtype)
+        return out.at[li].set(block.ravel()).ravel()
+
     return jnp.concatenate([
         jnp.stack([analytic, jnp.sum(pair_t)]),
-        pair_t.ravel(), pair_err.ravel(), pair_delta.ravel()])
+        embed(pair_t), embed(pair_err), embed(pair_delta)])
 
 
 def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
@@ -484,11 +527,23 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     once at the static step maximum (``packed_k``), pairs below it are
     carved out by the nested-permutation column masks, and the returned
     ledger vector grows to ``2 + 3·Q²`` (per-pair transport, compression
-    error, staleness delta).  ``skip``/``cache``/``cache_out`` are the
-    ``stale`` controller's hop reuse on the p2p wire: pair ``(i, j)`` with
+    error, staleness delta).  A per-layer ``[L, Q, Q]`` tensor
+    (DESIGN.md §3.7; ``L == len(meta.layer_dims)``) makes layer ``li``'s
+    exchange draw its own ``[Q, Q]`` row, and the ledger vector grows a
+    layer axis (``2 + 3·L·Q²``, exchange ``li``'s charges in slice
+    ``li``).  ``skip``/``cache``/``cache_out`` are the ``stale``
+    controller's hop reuse on the p2p wire: pair ``(i, j)`` with
     ``skip[i, j] == 1`` delivers ``cache[call]``'s rows instead of fresh
     ones and charges zero wire bits; the fresh buffers land in
     ``cache_out`` (one ``[Q, D, H, F]`` entry per exchange call).
+
+    The returned oracle carries the split-phase API of the pipelined
+    forward (DESIGN.md §3.7): ``aggregate.start(li, x)`` issues the
+    pack + exchange and returns ``(token, bits)``;
+    ``aggregate.complete(li, x, token)`` runs the local aggregation and
+    folds in the delivered halo.  ``aggregate(li, x)`` is exactly
+    ``complete`` after ``start`` — one code path, so the fused and
+    pipelined schedules are bitwise identical.
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
     packed_wire = meta.wire == "packed"
@@ -496,6 +551,7 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     if rate_map is not None and not (packed_wire or p2p_wire):
         raise ValueError("per-pair rate maps need wire='packed' or 'p2p'; "
                          "the dense wire keeps the scalar path")
+    n_layers = _rate_tensor_layers(meta, rate_map)
     calls = itertools.count()
 
     def pair_stats_p2p(publish, pos_all, k_used):
@@ -509,17 +565,21 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         dropped = pos_all[:, None, :] >= k_used[:, :, None]  # [Q, D, nb]
         return _scatter_pairs(jnp.sum(energy * dropped, -1), q)
 
-    def aggregate(li, x):                              # x: [Q, P, F]
-        del li
+    def start(li, x):                                  # x: [Q, P, F]
+        """Issue layer ``li``'s exchange: pack, mask, ship.  Returns
+        ``(halo token, bits)`` — the token is consumed by :func:`complete`
+        (the only data dependence on the wire)."""
         call = next(calls)
         f = x.shape[-1]
+        rm = None
+        lix = 0
+        if rate_map is not None:
+            # select by RANK, not by n_layers: a [1, Q, Q] tensor (1-layer
+            # model under a per-layer controller) must still unsqueeze
+            rm = rate_map if jnp.ndim(rate_map) == 2 else rate_map[li]
+            lix = 0 if n_layers == 1 else li
         if not policy.communicates:                    # No-Comm baseline
-            agg = jax.vmap(lambda xq, ld, ls, w:
-                           jnp.zeros((p_sz + 1, f), x.dtype)
-                           .at[ld].add(w[:, None] * xq[ls])[:p_sz])(
-                x, graph["local_dst"], graph["local_src"],
-                graph["local_w_iso"])
-            return agg, jnp.zeros((2,), jnp.float32)
+            return None, jnp.zeros((2,), jnp.float32)
 
         if p2p_wire:
             # boundary block [Q, B, F]; a compressing policy packs it once
@@ -528,14 +588,14 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             publish = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
                 x, graph["send_idx"], graph["send_valid"])
             bits = None
-            if rate_map is not None:
+            if rm is not None:
                 nb = f // LANE
                 n_keep = _keep_of(f, rate, packed_k)
                 k_call = jax.random.fold_in(key, call)
                 kept, inv, pos_all = worker_block_maps_pos(k_call, q, nb,
                                                            n_keep)
                 pos_kept = jax.vmap(lambda p, kk: p[kk])(pos_all, kept)
-                k_pairs = _pair_keep(nb, rate_map, n_keep)        # [Q, Q]
+                k_pairs = _pair_keep(nb, rm, n_keep)              # [Q, Q]
                 jj, rv = _ring_targets(q)
                 k_jd = k_pairs[rv, jj]                            # [Q, D]
                 packed = jax.vmap(wire_pack)(publish, kept, inv)
@@ -562,8 +622,9 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                     live = 1.0 - skip
                 if cache_out is not None:
                     cache_out.append(sent)
-                bits = _pair_ledger(meta, f, rate_map, k_pairs * LANE,
-                                    pair_err, pair_delta, live=live)
+                bits = _pair_ledger(meta, f, rm, k_pairs * LANE,
+                                    pair_err, pair_delta, live=live,
+                                    li=lix, n_layers=n_layers)
             else:
                 wire_width = None
                 if policy.compresses:
@@ -588,25 +649,13 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                     q, meta.p2p_compact, f)
             else:
                 compact = jnp.zeros((q, meta.p2p_compact, f), x.dtype)
-            ell_w = _ell_w_for(graph, policy, rate)
-
-            def part_p2p(xq, nbr, w, rnbr, rslot, rd, rs, rw, halo_c):
-                loc = ell_aggregate(xq, nbr, w, rnbr, rslot)
-                rem = jnp.zeros((p_sz + 1, f), x.dtype)
-                rem = rem.at[rd].add(rw[:, None] * halo_c[rs])
-                return loc + rem[:p_sz]
-
-            agg = jax.vmap(part_p2p)(
-                x, graph["ell_nbr"], ell_w, graph["ell_rnbr"],
-                graph["ell_rslot"], graph["remote_dst"],
-                graph["remote_src_p2p"], graph["remote_w"], compact)
-            return agg, bits
+            return compact, bits
 
         sent = jax.vmap(lambda xq, idx, v: xq[idx] * v[:, None])(
             x, graph["send_idx"], graph["send_valid"])  # [Q, B, F]
         wire_width = None
         bits = None
-        if packed_wire and rate_map is not None:
+        if packed_wire and rm is not None:
             # all-gather wire: one payload serves every receiver, so the
             # map degrades to per-SENDER rates — each sender keeps the max
             # over its receivers' kept counts (serve the most demanding)
@@ -615,7 +664,7 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             k_call = jax.random.fold_in(key, call)
             kept, inv, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
             pos_kept = jax.vmap(lambda p, kk: p[kk])(pos_all, kept)
-            k_pairs = _pair_keep(nb, rate_map, n_keep)
+            k_pairs = _pair_keep(nb, rm, n_keep)
             off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
             k_send = jnp.maximum(jnp.max(off, axis=0), 1)         # [Q]
             pre = sent
@@ -626,8 +675,9 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             k_jd = jnp.broadcast_to(k_send[:, None], (q, max(q - 1, 1)))
             pair_err = pair_stats_p2p(pre, pos_all, k_jd)
             width_pairs = jnp.broadcast_to((k_send * LANE)[None, :], (q, q))
-            bits = _pair_ledger(meta, f, rate_map, width_pairs, pair_err,
-                                jnp.zeros((q, q), jnp.float32))
+            bits = _pair_ledger(meta, f, rm, width_pairs, pair_err,
+                                jnp.zeros((q, q), jnp.float32),
+                                li=lix, n_layers=n_layers)
         elif packed_wire:
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE
@@ -641,7 +691,38 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                 k_call, jnp.arange(q))
             sent = jax.vmap(lambda k, blk: compressor(k, blk, rate)[0])(
                 keys, sent)
-        halo = sent.reshape(q * b_sz, f)
+        if bits is None:
+            bits = _exchange_bits(meta, f, rate, wire_width)
+        return sent.reshape(q * b_sz, f), bits
+
+    def complete(li, x, token):
+        """Consume layer ``li``'s delivered halo: local aggregation (ELL
+        on the p2p wire — scheduled while the exchange is in flight) plus
+        the remote scatter out of the token."""
+        del li
+        f = x.shape[-1]
+        if not policy.communicates:                    # No-Comm baseline
+            return jax.vmap(lambda xq, ld, ls, w:
+                            jnp.zeros((p_sz + 1, f), x.dtype)
+                            .at[ld].add(w[:, None] * xq[ls])[:p_sz])(
+                x, graph["local_dst"], graph["local_src"],
+                graph["local_w_iso"])
+
+        if p2p_wire:
+            ell_w = _ell_w_for(graph, policy, rate)
+
+            def part_p2p(xq, nbr, w, rnbr, rslot, rd, rs, rw, halo_c):
+                loc = ell_aggregate(xq, nbr, w, rnbr, rslot)
+                rem = jnp.zeros((p_sz + 1, f), x.dtype)
+                rem = rem.at[rd].add(rw[:, None] * halo_c[rs])
+                return loc + rem[:p_sz]
+
+            return jax.vmap(part_p2p)(
+                x, graph["ell_nbr"], ell_w, graph["ell_rnbr"],
+                graph["ell_rslot"], graph["remote_dst"],
+                graph["remote_src_p2p"], graph["remote_w"], token)
+
+        halo = token
         local_w = _local_w_for(graph, policy, rate)
 
         def part(xq, ld, ls, lw, rd, rs, rw):
@@ -650,13 +731,16 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             out = out.at[rd].add(rw[:, None] * halo[rs])
             return out[:p_sz]
 
-        agg = jax.vmap(part, (0, 0, 0, 0, 0, 0, 0))(
+        return jax.vmap(part, (0, 0, 0, 0, 0, 0, 0))(
             x, graph["local_dst"], graph["local_src"], local_w,
             graph["remote_dst"], graph["remote_src"], graph["remote_w"])
-        if bits is None:
-            bits = _exchange_bits(meta, f, rate, wire_width)
-        return agg, bits
 
+    def aggregate(li, x):
+        token, bits = start(li, x)
+        return complete(li, x, token), bits
+
+    aggregate.start = start
+    aggregate.complete = complete
     return aggregate
 
 
@@ -682,7 +766,16 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     columns with the nested per-pair kept sets, the per-pair error stats
     are all-gathered from each sender, and the returned ledger vector is
     the same ``2 + 3·Q²`` layout (pair staleness deltas stay zero — hop
-    reuse is an emulated-backend feature).
+    reuse is an emulated-backend feature).  A per-layer ``[L, Q, Q]``
+    tensor selects row ``li`` per exchange and grows the ledger to
+    ``2 + 3·L·Q²``, mirroring the emulated backend bit for bit
+    (DESIGN.md §3.7).
+
+    Carries the same ``start``/``complete`` split-phase attributes as the
+    emulated oracle; on this backend ``start`` ends at the ``ppermute``
+    (``neighbor_exchange_start``) and ``complete`` begins at the unpack
+    (``neighbor_exchange_finish``), so the hops genuinely overlap the ELL
+    local aggregation under XLA's async collective scheduling.
     """
     p_sz, b_sz, q = meta.part_size, meta.halo_size, meta.q
     packed_wire = meta.wire == "packed"
@@ -690,6 +783,7 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     if rate_map is not None and not (packed_wire or p2p_wire):
         raise ValueError("per-pair rate maps need wire='packed' or 'p2p'; "
                          "the dense wire keeps the scalar path")
+    n_layers = _rate_tensor_layers(meta, rate_map)
     calls = itertools.count()
 
     def pair_err_shard(publish_pre, pos_me, k_d):
@@ -706,26 +800,31 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
         err_d = jnp.sum(energy * dropped, -1)                  # [D]
         return _scatter_pairs(lax.all_gather(err_d, axis), q)
 
-    def aggregate(li, x):                              # x: [1, P, F]
-        del li
+    def start(li, x):                                  # x: [1, P, F]
+        """Issue layer ``li``'s exchange on this worker.  P2P tokens stop
+        at the ``ppermute`` (packed hop rows, no unpack); all-gather
+        tokens carry the decoded halo buffer."""
         call = next(calls)
         f = x.shape[-1]
-        xq = x[0]
+        rm = None
+        lix = 0
+        if rate_map is not None:
+            # select by RANK, not by n_layers (see the emulated backend)
+            rm = rate_map if jnp.ndim(rate_map) == 2 else rate_map[li]
+            lix = 0 if n_layers == 1 else li
         if not policy.communicates:
-            out = jnp.zeros((p_sz + 1, f), x.dtype)
-            out = out.at[graph["local_dst"][0]].add(
-                graph["local_w_iso"][0][:, None] * xq[graph["local_src"][0]])
-            return out[:p_sz][None], jnp.zeros((2,), jnp.float32)
+            return None, jnp.zeros((2,), jnp.float32)
+        xq = x[0]
 
         if p2p_wire:
             publish = xq[graph["send_idx"][0]] * \
                 graph["send_valid"][0][:, None]
-            if rate_map is not None:
+            if rm is not None:
                 nb = f // LANE
                 n_keep = _keep_of(f, rate, packed_k)
                 k_call = jax.random.fold_in(key, call)
-                k_pairs = _pair_keep(nb, rate_map, n_keep)
-                halo, _ = neighbor_exchange(
+                k_pairs = _pair_keep(nb, rm, n_keep)
+                hops, _ = neighbor_exchange_start(
                     publish, graph["p2p_send_slot"][0],
                     graph["p2p_send_valid"][0], axis, key=k_call,
                     n_keep=n_keep, pair_k=k_pairs)
@@ -733,38 +832,31 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                 _, _, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
                 k_d = k_pairs[(me + jnp.arange(1, max(q, 2))) % q, me]
                 pair_err = pair_err_shard(publish, pos_all[me], k_d)
-                bits = _pair_ledger(meta, f, rate_map, k_pairs * LANE,
+                bits = _pair_ledger(meta, f, rm, k_pairs * LANE,
                                     pair_err,
-                                    jnp.zeros((q, q), jnp.float32))
+                                    jnp.zeros((q, q), jnp.float32),
+                                    li=lix, n_layers=n_layers)
             else:
                 n_keep = wire_width = k_call = None
                 if policy.compresses:
                     n_keep = _keep_of(f, rate, packed_k)
                     wire_width = n_keep * LANE
                     k_call = jax.random.fold_in(key, call)
-                halo, _ = neighbor_exchange(
+                hops, _ = neighbor_exchange_start(
                     publish, graph["p2p_send_slot"][0],
                     graph["p2p_send_valid"][0], axis, key=k_call,
                     n_keep=n_keep)
                 bits = _exchange_bits(meta, f, rate, wire_width)
-            loc = ell_aggregate(xq, graph["ell_nbr"][0],
-                                _ell_w_for(graph, policy, rate)[0],
-                                graph["ell_rnbr"][0], graph["ell_rslot"][0])
-            rem = jnp.zeros((p_sz + 1, f), x.dtype)
-            rem = rem.at[graph["remote_dst"][0]].add(
-                graph["remote_w"][0][:, None] *
-                halo[graph["remote_src_p2p"][0]])
-            out = loc + rem[:p_sz]
-            return out[None], bits
+            return (hops, k_call, n_keep), bits
 
         sent = xq[graph["send_idx"][0]] * graph["send_valid"][0][:, None]
         wire_width = None
         bits = None
-        if packed_wire and rate_map is not None:
+        if packed_wire and rm is not None:
             nb = f // LANE
             n_keep = _keep_of(f, rate, packed_k)
             k_call = jax.random.fold_in(key, call)
-            k_pairs = _pair_keep(nb, rate_map, n_keep)
+            k_pairs = _pair_keep(nb, rm, n_keep)
             halo, _ = packed_all_gather(sent, axis, n_keep=n_keep,
                                         key=k_call, pair_k=k_pairs)
             off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
@@ -776,8 +868,9 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                 k_d = jnp.broadcast_to(k_send[me], (max(q - 1, 1),))
                 pair_err = pair_err_shard(sent, pos_all[me], k_d)
             width_pairs = jnp.broadcast_to((k_send * LANE)[None, :], (q, q))
-            bits = _pair_ledger(meta, f, rate_map, width_pairs, pair_err,
-                                jnp.zeros((q, q), jnp.float32))
+            bits = _pair_ledger(meta, f, rm, width_pairs, pair_err,
+                                jnp.zeros((q, q), jnp.float32),
+                                li=lix, n_layers=n_layers)
         elif packed_wire:
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE
@@ -790,18 +883,48 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                                             rate=rate, key=k_call)
         else:
             halo = lax.all_gather(sent, axis)          # [Q, B, F]
-        halo = halo.reshape(q * b_sz, f)
+        if bits is None:
+            bits = _exchange_bits(meta, f, rate, wire_width)
+        return halo.reshape(q * b_sz, f), bits
 
+    def complete(li, x, token):
+        del li
+        f = x.shape[-1]
+        xq = x[0]
+        if not policy.communicates:
+            out = jnp.zeros((p_sz + 1, f), x.dtype)
+            out = out.at[graph["local_dst"][0]].add(
+                graph["local_w_iso"][0][:, None] * xq[graph["local_src"][0]])
+            return out[:p_sz][None]
+
+        if p2p_wire:
+            hops, k_call, n_keep = token
+            loc = ell_aggregate(xq, graph["ell_nbr"][0],
+                                _ell_w_for(graph, policy, rate)[0],
+                                graph["ell_rnbr"][0], graph["ell_rslot"][0])
+            halo = neighbor_exchange_finish(hops, axis, key=k_call,
+                                            n_keep=n_keep, f=f)
+            rem = jnp.zeros((p_sz + 1, f), x.dtype)
+            rem = rem.at[graph["remote_dst"][0]].add(
+                graph["remote_w"][0][:, None] *
+                halo[graph["remote_src_p2p"][0]])
+            return (loc + rem[:p_sz])[None]
+
+        halo = token
         out = jnp.zeros((p_sz + 1, f), x.dtype)
         out = out.at[graph["local_dst"][0]].add(
             _local_w_for(graph, policy, rate)[0][:, None] *
             xq[graph["local_src"][0]])
         out = out.at[graph["remote_dst"][0]].add(
             graph["remote_w"][0][:, None] * halo[graph["remote_src"][0]])
-        if bits is None:
-            bits = _exchange_bits(meta, f, rate, wire_width)
-        return out[:p_sz][None], bits
+        return out[:p_sz][None]
 
+    def aggregate(li, x):
+        token, bits = start(li, x)
+        return complete(li, x, token), bits
+
+    aggregate.start = start
+    aggregate.complete = complete
     return aggregate
 
 

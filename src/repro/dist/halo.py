@@ -25,6 +25,15 @@ arrays into the graph pytree consumed by ``repro.dist.gnn_parallel`` (all
 leaves keep the stacked ``[Q, ...]`` layout, so ``shard_graph`` places
 them over the ``workers`` axis unchanged).
 
+The per-pair slot sets serve every consumer of the p2p wire the same
+way: the fused aggregation oracles, the split-phase pipelined prefetch
+(``neighbor_exchange_start`` slices each hop's rows out of the packed
+boundary block while the previous layer's unpack is still pending —
+DESIGN.md §3.7), the per-pair/per-layer rate-map ledgers
+(``pair_rows``), and the ``stale`` controller's hop caches (hop ``d``'s
+``[H, F]`` slot layout is what makes a cached buffer reusable in
+place).
+
 Example::
 
     pg = partition_graph(g, q=8, scheme="metis-like")

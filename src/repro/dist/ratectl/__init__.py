@@ -19,6 +19,12 @@ of ``repro.core.schedulers``.
   ``auto:<controller>:<budget>`` spec and :func:`make_auto_train_step`,
   the per-pair-rate Algorithm-1 step (emulated + shard_map backends).
 
+Every controller additionally supports **per-layer** planning
+(``auto:<controller>:<budget>:per-layer``, DESIGN.md §3.7): the plan
+becomes an ``[L, Q, Q]`` tensor whose layer rows are water-filled from
+the measured per-layer dropped energy, monotone per layer so Prop. 2
+applies layer by layer.
+
 Example::
 
     policy = CommPolicy.parse("auto:error:2e9", epochs)
@@ -27,17 +33,21 @@ Example::
 
 from repro.dist.ratectl.base import (CONTROLLERS, Pacing, RateController,
                                      RatePlan, allowance, make_pacing,
-                                     rate_of_allowance, uniform_plan)
+                                     rate_of_allowance, sustainable_cap,
+                                     uniform_layer_plan, uniform_plan,
+                                     waterfill)
 from repro.dist.ratectl.budget import budget_controller
 from repro.dist.ratectl.driver import (exchange_widths, init_halo_cache,
+                                       layer_exchange_widths,
                                        make_auto_train_step, make_controller)
-from repro.dist.ratectl.error import error_controller, waterfill
+from repro.dist.ratectl.error import error_controller
 from repro.dist.ratectl.stale import stale_controller
 
 __all__ = [
     "CONTROLLERS", "Pacing", "RateController", "RatePlan", "allowance",
-    "make_pacing", "rate_of_allowance", "uniform_plan",
+    "make_pacing", "rate_of_allowance", "sustainable_cap",
+    "uniform_layer_plan", "uniform_plan",
     "budget_controller", "error_controller", "stale_controller", "waterfill",
-    "exchange_widths", "init_halo_cache", "make_auto_train_step",
-    "make_controller",
+    "exchange_widths", "init_halo_cache", "layer_exchange_widths",
+    "make_auto_train_step", "make_controller",
 ]

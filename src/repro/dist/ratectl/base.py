@@ -104,6 +104,54 @@ def uniform_plan(q: int, rate) -> RatePlan:
     return RatePlan(rates, jnp.zeros((q, q), jnp.float32))
 
 
+def uniform_layer_plan(q: int, rates_l) -> RatePlan:
+    """Per-layer uniform rates ``rates_l [L]`` as a ``[L, Q, Q]`` tensor
+    (diagonal 1 per layer) with no skips — the per-layer controllers'
+    plan shape (DESIGN.md §3.7)."""
+    r = jnp.asarray(rates_l, jnp.float32)
+    n_layers = r.shape[0]
+    eye = jnp.broadcast_to(jnp.eye(q, dtype=bool)[None],
+                           (n_layers, q, q))
+    rates = jnp.where(eye, 1.0,
+                      jnp.broadcast_to(r[:, None, None], (n_layers, q, q)))
+    return RatePlan(rates, jnp.zeros((q, q), jnp.float32))
+
+
+def waterfill(density, rows, cap, y_floor, y_max: float = 1.0,
+              iters: int = 60) -> jnp.ndarray:
+    """Proportional (log-utility) water-filling of keep fractions.
+
+    Solve ``y = clip(λ · density, y_floor, y_max)`` for the water level
+    ``λ`` such that ``Σ rows · y == cap`` (bisection, ``iters`` fixed
+    halvings — pure jnp, runs under jit).  This is the exact maximiser of
+    ``Σ rows · density · log(y)`` under the bit constraint: entries with
+    higher measured error density keep proportionally more blocks, equal
+    densities degrade gracefully to the uniform allocation (never starving
+    an arbitrary subset of tied entries, which the LP-greedy fill would).
+    ``y_floor`` (scalar or ``rows``-shaped) carries the monotone-rate
+    commitments: the fill only ever *adds* on top of it, so a floor
+    already exceeding ``cap`` returns the floor unchanged.  Works over
+    any index set — per-pair ``[Q, Q]`` maps, per-layer ``[L]`` vectors,
+    or the joint ``[L, Q, Q]`` tensor (DESIGN.md §3.6–3.7).
+    """
+    y_floor = jnp.broadcast_to(jnp.asarray(y_floor, jnp.float32), rows.shape)
+    d = jnp.where(rows > 0, jnp.maximum(density, 0.0), 0.0)
+    dn = d / jnp.maximum(jnp.max(d), 1e-30)      # normalised to [0, 1]
+    cap = jnp.maximum(cap, jnp.sum(rows * y_floor))
+
+    def fill(lam):
+        return jnp.clip(lam * dn, y_floor, y_max)
+
+    lo = jnp.zeros(())
+    hi = jnp.full((), 1e12)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        under = jnp.sum(rows * fill(mid)) <= cap
+        lo = jnp.where(under, mid, lo)
+        hi = jnp.where(under, hi, mid)
+    return fill(lo)
+
+
 # ---------------------------------------------------------------------------
 # Pacing: open-loop reference trajectory + PI feedback on the spend
 # ---------------------------------------------------------------------------
@@ -126,6 +174,12 @@ class Pacing:
     ``d_full`` is the analytic full-communication transport of one train
     step (forward + backward over every exchange width): the model that
     converts a bit allowance into a uniform rate and back.
+
+    ``layer_bits`` (``[L]`` jnp array, or ``None`` for pair-level pacing)
+    splits ``d_full`` per model layer — ``layer_bits[l] = 2 · 32 ·
+    halo_demand · Σ(widths of layer l's exchanges)`` — the cost model the
+    per-layer controllers water-fill against (DESIGN.md §3.7).  Always
+    sums to ``d_full``.
     """
 
     total_steps: int
@@ -137,14 +191,20 @@ class Pacing:
     ki: float
     phi: Any
     cum: Any
+    layer_bits: Any = None
 
 
 def make_pacing(meta, widths, total_steps: int, budget_bits: float,
                 c_max: float = 128.0, c_min: float = 1.0,
                 slope: float = 5.0, kp: float = 4.0,
-                ki: float = 0.25) -> Pacing:
+                ki: float = 0.25, layer_widths=None) -> Pacing:
     """Build the shared pacing state for ``meta`` (needs ``halo_demand``)
-    and the per-step exchange ``widths`` (see ``driver.exchange_widths``)."""
+    and the per-step exchange ``widths`` (see ``driver.exchange_widths``).
+
+    ``layer_widths`` (optional ``[L]`` tuple — each layer's summed
+    exchange width, see ``driver.layer_exchange_widths``) additionally
+    populates :attr:`Pacing.layer_bits` for the per-layer controllers;
+    its sum must equal ``sum(widths)``."""
     from repro.core import schedulers
 
     if budget_bits <= 0:
@@ -154,11 +214,20 @@ def make_pacing(meta, widths, total_steps: int, budget_bits: float,
     phi = 1.0 / np.asarray([float(sched(t)) for t in range(total)])
     cum = np.concatenate([[0.0], np.cumsum(phi)])
     d_full = 2.0 * 32.0 * float(meta.halo_demand) * float(sum(widths))
+    layer_bits = None
+    if layer_widths is not None:
+        if sum(layer_widths) != sum(widths):
+            raise ValueError(
+                f"layer_widths {tuple(layer_widths)} must sum to the "
+                f"exchange widths' total {sum(widths)}")
+        layer_bits = jnp.asarray(
+            [2.0 * 32.0 * float(meta.halo_demand) * float(w)
+             for w in layer_widths], jnp.float32)
     return Pacing(total_steps=int(max(total_steps, 1)),
                   budget_bits=float(budget_bits), d_full=d_full,
                   c_max=float(c_max), c_min=float(c_min), kp=float(kp),
                   ki=float(ki), phi=jnp.asarray(phi, jnp.float32),
-                  cum=jnp.asarray(cum, jnp.float32))
+                  cum=jnp.asarray(cum, jnp.float32), layer_bits=layer_bits)
 
 
 def allowance(p: Pacing, spent, integ, step):
@@ -191,3 +260,55 @@ def rate_of_allowance(p: Pacing, bits) -> jnp.ndarray:
     clamped to ``[c_min_rate, c_max]`` (a rate is never below 1)."""
     r = p.d_full / jnp.maximum(jnp.asarray(bits, jnp.float32), 1.0)
     return jnp.clip(r, jnp.maximum(p.c_min, 1.0), p.c_max)
+
+
+def init_layer_fill(p: Pacing) -> dict:
+    """Per-layer fill state shared by the ``budget`` and ``stale``
+    controllers: the dropped-energy EMA (initialised to ``layer_bits`` —
+    uniform density, so the first fills reproduce the uniform-layer
+    allocation) and the monotone keep-fraction floors."""
+    return {"ema": jnp.asarray(p.layer_bits, jnp.float32),
+            "y": jnp.full(p.layer_bits.shape, 1.0 / p.c_max, jnp.float32)}
+
+
+def plan_layer_fill(p: Pacing, state: dict, step):
+    """One per-layer planning step (DESIGN.md §3.7): PI allowance →
+    sustainable cap → water-fill over ``Pacing.layer_bits`` weighted by
+    the dropped-energy EMA, floored at the prior commitments.  Returns
+    ``(rates_l [L], integ', y')``."""
+    bits, integ = allowance(p, state["spent"], state["integ"], step)
+    cap = sustainable_cap(p, state["spent"], step, bits)
+    density = state["ema"] / jnp.maximum(p.layer_bits, 1e-30)
+    y = waterfill(density, p.layer_bits, cap, state["y"], 1.0)
+    # same rate clamp as the scalar rate_of_allowance — a configured
+    # c_min > 1 floors the per-layer rates too (the L=1 telescoping
+    # equivalence holds for every pacing, not just the default c_min=1)
+    rates_l = jnp.clip(1.0 / jnp.clip(y, 1.0 / p.c_max, 1.0),
+                       jnp.maximum(p.c_min, 1.0), p.c_max)
+    return rates_l, integ, y
+
+
+def fold_layer_err(state: dict, obs: dict, ema_decay: float) -> dict:
+    """The per-layer observe update: fold ``obs["layer_err"]`` (summed
+    over pairs) into the dropped-energy EMA.  The key is required — a
+    per-layer controller observing metrics without its layer feedback is
+    a plumbing bug that must fail loudly, not freeze the EMA silently
+    (every per-layer plan makes ``_auto_metrics`` emit it)."""
+    err_l = jnp.sum(jnp.asarray(obs["layer_err"], jnp.float32),
+                    axis=(1, 2))
+    return {"ema": ema_decay * state["ema"] + (1.0 - ema_decay) * err_l}
+
+
+def sustainable_cap(p: Pacing, spent, step, bits) -> jnp.ndarray:
+    """Clamp one step's allowance to what the remaining budget can
+    sustain for the steps left.  Monotone (committed) allocations — the
+    ``error`` controller's per-pair keep fractions, every per-layer
+    controller's layer fractions — hold for the rest of the run, so a
+    transient PI spike must not ratchet them to a level whose sustained
+    cost exceeds the budget."""
+    remaining = jnp.maximum(p.budget_bits - jnp.asarray(spent, jnp.float32),
+                            0.0)
+    steps_left = jnp.maximum(
+        p.total_steps - jnp.asarray(step, jnp.float32), 1.0)
+    return jnp.minimum(jnp.asarray(bits, jnp.float32),
+                       remaining / steps_left)

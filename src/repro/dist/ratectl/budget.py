@@ -11,6 +11,18 @@ planned rate between adjacent counts instead of accumulating drift.
 At zero gains (``kp = ki = 0``) and ``B`` equal to the eq.-(8) schedule's
 own total, the plan IS the open-loop schedule — the closed loop strictly
 generalises the paper's scheme (DESIGN.md §3.6).
+
+``per_layer=True`` (DESIGN.md §3.7) splits each step's bit allowance
+across the model's ``L`` layers by **water-filling over the measured
+per-layer dropped-energy EMA** (AdaQP's bit-allocation observation,
+lifted from pairs to layers): layers whose exchanges lose the most
+activation energy to compression keep proportionally more lane-blocks,
+uniform within the layer's ``[Q, Q]`` pairs.  Each layer's keep fraction
+is **monotone non-decreasing** (its rate never rises again), so every
+layer's compression-error sequence is non-increasing and Proposition 2's
+convergence argument applies per layer.  With ``L = 1`` the fill
+degenerates to ``y = allowance / d_full`` — exactly the scalar plan, so
+the per-layer controller still telescopes to eq. (8) at zero gains.
 """
 
 from __future__ import annotations
@@ -18,14 +30,20 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.dist.ratectl.base import (Pacing, RateController, allowance,
-                                     rate_of_allowance, uniform_plan)
+                                     fold_layer_err, init_layer_fill,
+                                     plan_layer_fill, rate_of_allowance,
+                                     uniform_layer_plan, uniform_plan)
 
 
-def budget_controller(q: int, pacing: Pacing,
-                      name: str = "budget") -> RateController:
+def budget_controller(q: int, pacing: Pacing, name: str = "budget",
+                      per_layer: bool = False,
+                      ema_decay: float = 0.8) -> RateController:
     """Budget-tracking PI controller over a ``workers`` axis of size ``q``.
 
-    State: ``{"spent": bits shipped so far, "integ": PI integral}``.
+    State: ``{"spent": bits shipped so far, "integ": PI integral}``; the
+    per-layer mode adds ``{"ema": [L] dropped-energy EMA, "y": [L]
+    monotone keep fractions}`` and needs ``pacing.layer_bits``
+    (``make_pacing(..., layer_widths=...)``).
 
     Example::
 
@@ -33,19 +51,34 @@ def budget_controller(q: int, pacing: Pacing,
                              budget_bits=2e9)
         ctl = budget_controller(meta.q, pacing)
     """
+    if per_layer and pacing.layer_bits is None:
+        raise ValueError(
+            "per_layer needs pacing.layer_bits — build the pacing with "
+            "make_pacing(..., layer_widths=layer_exchange_widths(cfg))")
 
     def init():
-        return {"spent": jnp.zeros((), jnp.float32),
-                "integ": jnp.zeros((), jnp.float32)}
+        state = {"spent": jnp.zeros((), jnp.float32),
+                 "integ": jnp.zeros((), jnp.float32)}
+        if per_layer:
+            state.update(init_layer_fill(pacing))
+        return state
 
     def plan(state, step):
-        bits, integ = allowance(pacing, state["spent"], state["integ"], step)
-        rate = rate_of_allowance(pacing, bits)
-        return uniform_plan(q, rate), {**state, "integ": integ}
+        if not per_layer:
+            bits, integ = allowance(pacing, state["spent"], state["integ"],
+                                    step)
+            rate = rate_of_allowance(pacing, bits)
+            return uniform_plan(q, rate), {**state, "integ": integ}
+        rates_l, integ, y = plan_layer_fill(pacing, state, step)
+        return uniform_layer_plan(q, rates_l), \
+            {**state, "integ": integ, "y": y}
 
     def observe(state, obs):
-        return {**state,
-                "spent": state["spent"] +
-                jnp.asarray(obs["transport_bits"], jnp.float32)}
+        out = {**state,
+               "spent": state["spent"] +
+               jnp.asarray(obs["transport_bits"], jnp.float32)}
+        if per_layer:
+            out.update(fold_layer_err(state, obs, ema_decay))
+        return out
 
     return RateController(name, init, observe, plan)

@@ -66,6 +66,17 @@ def exchange_widths(cfg: GNNConfig) -> tuple[int, ...]:
     return tuple(d for d in dims for _ in range(reps))
 
 
+def layer_exchange_widths(cfg: GNNConfig) -> tuple[int, ...]:
+    """Summed exchange width of each model *layer* (``[L]``): layer
+    ``l``'s input width times its exchange count (sage 1, poly
+    ``k_taps - 1``).  Sums to ``sum(exchange_widths(cfg))`` — the
+    per-layer split of the controllers' transport model
+    (``Pacing.layer_bits``, DESIGN.md §3.7)."""
+    dims = [cfg.in_dim] + [cfg.hidden] * (cfg.layers - 1)
+    reps = 1 if cfg.conv == "sage" else max(cfg.k_taps - 1, 1)
+    return tuple(d * reps for d in dims)
+
+
 def make_controller(policy: CommPolicy, meta: DistMeta, cfg: GNNConfig,
                     total_steps: int, **overrides) -> RateController:
     """Instantiate ``policy.controller`` with pacing scaled to
@@ -86,14 +97,33 @@ def make_controller(policy: CommPolicy, meta: DistMeta, cfg: GNNConfig,
     ctl_kw = {k: overrides.pop(k) for k in ("threshold", "max_stale",
                                             "ema_decay")
               if k in overrides}
+    per_layer = policy.per_layer
     pacing = make_pacing(meta, exchange_widths(cfg), total_steps,
-                         policy.budget_bits, **overrides)
+                         policy.budget_bits,
+                         layer_widths=layer_exchange_widths(cfg)
+                         if per_layer else None,
+                         **overrides)
+    if policy.controller != "stale":
+        bad = sorted(k for k in ("threshold", "max_stale") if k in ctl_kw)
+        if bad:
+            raise ValueError(
+                f"{'/'.join(bad)} are stale-controller knobs; the "
+                f"{policy.controller!r} controller does not accept them")
+    if "ema_decay" in ctl_kw and policy.controller != "error" \
+            and not per_layer:
+        raise ValueError(
+            f"ema_decay drives the error EMA; the scalar "
+            f"{policy.controller!r} controller keeps none — use the "
+            f"error controller or a :per-layer policy")
     if policy.controller == "budget":
-        return budget_controller(meta.q, pacing)
+        return budget_controller(meta.q, pacing, per_layer=per_layer,
+                                 **ctl_kw)
     if policy.controller == "error":
-        return error_controller(meta.q, pacing, meta.pair_table(), **ctl_kw)
+        return error_controller(meta.q, pacing, meta.pair_table(),
+                                per_layer=per_layer, **ctl_kw)
     if policy.controller == "stale":
-        return stale_controller(meta.q, pacing, **ctl_kw)
+        return stale_controller(meta.q, pacing, per_layer=per_layer,
+                                **ctl_kw)
     raise ValueError(f"unknown controller {policy.controller!r}")
 
 
@@ -107,22 +137,41 @@ def init_halo_cache(meta: DistMeta, cfg: GNNConfig) -> tuple:
 
 
 def _auto_metrics(loss, rate_map, bits, q: int, n_exchanges: int) -> dict:
-    """Step metrics of the per-pair ledger vector (``2 + 3·Q²`` layout of
-    ``gnn_parallel._pair_ledger``); transports double for the backward
-    cotangents exactly like the scalar `_step_metrics`.  The staleness
-    delta accumulates one relative-change ratio per exchange call, so it
-    is averaged over ``n_exchanges`` here — the controller-facing
-    ``pair_delta`` is the mean per-buffer change, depth-independent (the
-    ``stale`` threshold must not shrink with network depth)."""
+    """Step metrics of the per-pair ledger vector (``2 + 3·L·Q²`` layout
+    of ``gnn_parallel._pair_ledger``; ``L == 1`` for ``[Q, Q]`` pair
+    maps); transports double for the backward cotangents exactly like the
+    scalar `_step_metrics`.  The staleness delta accumulates one
+    relative-change ratio per exchange call, so it is averaged over
+    ``n_exchanges`` here — the controller-facing ``pair_delta`` is the
+    mean per-buffer change, depth-independent (the ``stale`` threshold
+    must not shrink with network depth).
+
+    A per-layer ``[L, Q, Q]`` rate tensor additionally yields
+    ``layer_transport`` / ``layer_err`` ``[L, Q, Q]`` tensors (the
+    ``pair_*`` matrices are their sums over ``L``, so downstream
+    consumers are layout-independent)."""
+    n_layers = 1 if rate_map.ndim == 2 else rate_map.shape[0]
     eye = jnp.eye(q, dtype=bool)
-    mean_rate = jnp.sum(jnp.where(eye, 0.0, rate_map)) / max(q * q - q, 1)
+    off = ~eye if rate_map.ndim == 2 else ~eye[None]
+    mean_rate = jnp.sum(jnp.where(off, rate_map, 0.0)) / \
+        max((q * q - q) * n_layers, 1)
     q2 = q * q
-    return {"loss": loss, "rate": mean_rate,
-            "halo_bits": 2.0 * bits[0], "transport_bits": 2.0 * bits[1],
-            "pair_transport": 2.0 * bits[2:2 + q2].reshape(q, q),
-            "pair_err": bits[2 + q2:2 + 2 * q2].reshape(q, q),
-            "pair_delta": bits[2 + 2 * q2:].reshape(q, q) /
-            max(n_exchanges, 1)}
+    lq2 = n_layers * q2
+    layer_t = bits[2:2 + lq2].reshape(n_layers, q, q)
+    layer_e = bits[2 + lq2:2 + 2 * lq2].reshape(n_layers, q, q)
+    layer_d = bits[2 + 2 * lq2:2 + 3 * lq2].reshape(n_layers, q, q)
+    out = {"loss": loss, "rate": mean_rate,
+           "halo_bits": 2.0 * bits[0], "transport_bits": 2.0 * bits[1],
+           "pair_transport": 2.0 * jnp.sum(layer_t, axis=0),
+           "pair_err": jnp.sum(layer_e, axis=0),
+           "pair_delta": jnp.sum(layer_d, axis=0) / max(n_exchanges, 1)}
+    if rate_map.ndim == 3:
+        # keyed on the PLAN's rank, not on L > 1: a per-layer controller
+        # on a 1-layer model still needs its layer_err feedback (and its
+        # History columns), even though the ledger kept the legacy layout
+        out["layer_transport"] = 2.0 * layer_t
+        out["layer_err"] = layer_e
+    return out
 
 
 def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
@@ -133,13 +182,15 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
 
     ``step(params, opt_state, graph, key, plan, cache=()) ->
     (params, opt_state, metrics, cache')`` — ``plan.rates`` must be a
-    concrete ``[Q, Q]`` map (the step quantises it to the static
-    kept-block maximum per width; passing it traced would defeat the
+    concrete ``[Q, Q]`` map or per-layer ``[L, Q, Q]`` tensor with
+    ``L == cfg.layers`` (the step quantises it to the static kept-block
+    maximum per width; passing it traced would defeat the
     bounded-recompile contract).  ``metrics`` adds ``pair_transport`` /
     ``pair_err`` / ``pair_delta`` ``[Q, Q]`` matrices to the usual
-    scalars.  ``cache`` is the ``stale`` controller's halo-cache tuple
-    (:func:`init_halo_cache`); other controllers pass ``()`` and get
-    ``()`` back.
+    scalars — plus ``layer_transport`` / ``layer_err`` ``[L, Q, Q]``
+    tensors for per-layer plans (DESIGN.md §3.7).  ``cache`` is the
+    ``stale`` controller's halo-cache tuple (:func:`init_halo_cache`);
+    other controllers pass ``()`` and get ``()`` back.
 
     Requirements: ``policy.mode == "auto"``, ``meta.wire`` in
     ``("packed", "p2p")``, every exchanged width on the 128-lane grid,

@@ -14,6 +14,15 @@ The per-pair rates are forced **monotone non-increasing** over steps
 (``y`` only ever grows), so the induced compression error still decreases
 step-to-step and Proposition 2's convergence argument applies unchanged
 (DESIGN.md §3.6).
+
+``per_layer=True`` (DESIGN.md §3.7) lifts the fill to the joint
+``[L, Q, Q]`` index set: the cost of keep fraction ``y[l, i, j]`` is
+``rows[i, j] · layer_width[l]`` wire bits, the density is layer ``l``'s
+measured per-pair dropped energy per unit cost, and one water level
+clears the whole tensor — so bits flow to whichever (layer, pair)
+coordinates lose the most energy, at every granularity at once.
+Monotonicity is enforced per coordinate, so each pair's per-layer rate
+sequence is non-increasing and Proposition 2 applies layer by layer.
 """
 
 from __future__ import annotations
@@ -21,53 +30,24 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
-                                     allowance)
+                                     allowance, sustainable_cap, waterfill)
 
-
-def waterfill(density, rows, cap, y_floor, y_max: float = 1.0,
-              iters: int = 60) -> jnp.ndarray:
-    """Proportional (log-utility) water-filling of keep fractions.
-
-    Solve ``y = clip(λ · density, y_floor, y_max)`` for the water level
-    ``λ`` such that ``Σ rows · y == cap`` (bisection, ``iters`` fixed
-    halvings — pure jnp, runs under jit).  This is the exact maximiser of
-    ``Σ rows · density · log(y)`` under the bit constraint: pairs with
-    higher measured error density keep proportionally more blocks, equal
-    densities degrade gracefully to the uniform allocation (never starving
-    an arbitrary subset of tied pairs, which the LP-greedy fill would).
-    ``y_floor`` (scalar or ``[Q, Q]``) carries the monotone-rate
-    commitments: the fill only ever *adds* on top of it, so a floor
-    already exceeding ``cap`` returns the floor unchanged.
-    """
-    y_floor = jnp.broadcast_to(jnp.asarray(y_floor, jnp.float32), rows.shape)
-    d = jnp.where(rows > 0, jnp.maximum(density, 0.0), 0.0)
-    dn = d / jnp.maximum(jnp.max(d), 1e-30)      # normalised to [0, 1]
-    cap = jnp.maximum(cap, jnp.sum(rows * y_floor))
-
-    def fill(lam):
-        return jnp.clip(lam * dn, y_floor, y_max)
-
-    lo = jnp.zeros(())
-    hi = jnp.full((), 1e12)
-    for _ in range(iters):
-        mid = 0.5 * (lo + hi)
-        under = jnp.sum(rows * fill(mid)) <= cap
-        lo = jnp.where(under, mid, lo)
-        hi = jnp.where(under, hi, mid)
-    return fill(lo)
+__all__ = ["error_controller", "waterfill"]
 
 
 def error_controller(q: int, pacing: Pacing, pair_rows,
                      ema_decay: float = 0.8,
-                     name: str = "error") -> RateController:
+                     name: str = "error",
+                     per_layer: bool = False) -> RateController:
     """Error-weighted per-pair controller (module docs).
 
     ``pair_rows`` is the static ``[Q, Q]`` halo row-count table
     (``DistMeta.pair_table()``): the water-filling's cost unit, and the
     error EMA's initial value (uniform density until measurements arrive).
 
-    State: ``{"spent", "integ", "ema" [Q, Q], "y" [Q, Q]}`` with ``y``
-    the monotone keep fractions.
+    State: ``{"spent", "integ", "ema", "y"}`` with ``y`` the monotone
+    keep fractions — ``[Q, Q]`` matrices, or ``[L, Q, Q]`` tensors in
+    ``per_layer`` mode (which needs ``pacing.layer_bits``).
 
     Example::
 
@@ -77,14 +57,28 @@ def error_controller(q: int, pacing: Pacing, pair_rows,
     eye = jnp.eye(q, dtype=bool)
     live = (rows > 0) & ~eye
     y_min = 1.0 / pacing.c_max
-    # bits of one train step per unit of Σ rows·y (fwd + bwd, all widths)
-    bits_per_rowkeep = pacing.d_full / max(float(jnp.sum(rows)), 1.0)
+    if per_layer:
+        if pacing.layer_bits is None:
+            raise ValueError(
+                "per_layer needs pacing.layer_bits — build the pacing "
+                "with make_pacing(..., layer_widths=...)")
+        # cost[l, i, j] in bits per unit keep fraction: layer l's total
+        # bits split over its pairs by halo rows (Σ cost == d_full)
+        total_rows = jnp.maximum(jnp.sum(rows), 1.0)
+        cost = pacing.layer_bits[:, None, None] * rows[None] / total_rows
+        live = jnp.broadcast_to(live[None], cost.shape)
+        rows_fill, shape = cost, cost.shape
+    else:
+        # bits of one train step per unit of Σ rows·y (fwd + bwd, widths)
+        bits_per_rowkeep = pacing.d_full / \
+            max(float(jnp.sum(rows)), 1.0)
+        rows_fill, shape = rows, (q, q)
 
     def init():
         return {"spent": jnp.zeros((), jnp.float32),
                 "integ": jnp.zeros((), jnp.float32),
-                "ema": rows,
-                "y": jnp.full((q, q), y_min, jnp.float32)}
+                "ema": rows_fill,
+                "y": jnp.full(shape, y_min, jnp.float32)}
 
     def plan(state, step):
         bits, integ = allowance(pacing, state["spent"], state["integ"], step)
@@ -92,20 +86,25 @@ def error_controller(q: int, pacing: Pacing, pair_rows,
         # of the run, so cap this step by what the remaining budget can
         # sustain for the steps left — a transient PI spike must not ratchet
         # y to a level whose sustained cost exceeds the budget
-        remaining = jnp.maximum(pacing.budget_bits - state["spent"], 0.0)
-        steps_left = jnp.maximum(
-            pacing.total_steps - jnp.asarray(step, jnp.float32), 1.0)
-        cap = jnp.minimum(bits, remaining / steps_left) / bits_per_rowkeep
-        density = jnp.where(live, state["ema"] / jnp.maximum(rows, 1.0),
+        cap_bits = sustainable_cap(pacing, state["spent"], step, bits)
+        cap = cap_bits if per_layer else cap_bits / bits_per_rowkeep
+        density = jnp.where(live,
+                            state["ema"] / jnp.maximum(rows_fill, 1e-30)
+                            if per_layer else
+                            state["ema"] / jnp.maximum(rows_fill, 1.0),
                             -jnp.inf)
         # prior commitments are the fill's floor → monotone by construction
-        y = waterfill(density, rows, cap, state["y"], 1.0)
+        y = waterfill(density, rows_fill, cap, state["y"], 1.0)
         rates = jnp.where(live, 1.0 / jnp.clip(y, y_min, 1.0), 1.0)
-        plan_ = RatePlan(rates, jnp.zeros((q, q), jnp.float32))
+        skip = jnp.zeros((q, q), jnp.float32)
+        plan_ = RatePlan(rates, skip)
         return plan_, {**state, "integ": integ, "y": y}
 
     def observe(state, obs):
-        err = jnp.asarray(obs["pair_err"], jnp.float32)
+        # the measurement is this controller's whole reason to exist —
+        # a missing key must fail loudly, not freeze the EMA silently
+        key = "layer_err" if per_layer else "pair_err"
+        err = jnp.asarray(obs[key], jnp.float32)
         return {**state,
                 "spent": state["spent"] +
                 jnp.asarray(obs["transport_bits"], jnp.float32),

@@ -18,6 +18,11 @@ rows are constants, no cotangent travels), and the PI loop automatically
 re-spends the saved bits on lower rates for the refreshing pairs.  Hop
 reuse is an emulated-backend feature of the p2p wire (a shape-uniform
 SPMD ``ppermute`` cannot drop individual pairs' buffers; DESIGN.md §3.6).
+
+``per_layer=True`` (DESIGN.md §3.7) runs the communicating pairs at
+per-layer rates — the ``budget`` controller's dropped-energy water-fill
+over layers, monotone per layer — while the skip logic stays per pair: a
+skipped pair's hop is served from cache at *every* layer's exchange.
 """
 
 from __future__ import annotations
@@ -25,34 +30,52 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
-                                     allowance, rate_of_allowance)
+                                     allowance, fold_layer_err,
+                                     init_layer_fill, plan_layer_fill,
+                                     rate_of_allowance, uniform_layer_plan)
 
 
 def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
-                     max_stale: int = 5,
-                     name: str = "stale") -> RateController:
+                     max_stale: int = 5, name: str = "stale",
+                     per_layer: bool = False,
+                     ema_decay: float = 0.8) -> RateController:
     """Staleness-reuse controller (module docs).
 
     State: ``{"spent", "integ", "age" [Q, Q] consecutive reuses,
-    "skip" [Q, Q] next step's skip mask}``.
+    "skip" [Q, Q] next step's skip mask}``; ``per_layer=True`` adds the
+    ``budget`` controller's per-layer machinery (``{"ema", "y"}`` over
+    ``[L]``; needs ``pacing.layer_bits``).
 
     Example::
 
         ctl = stale_controller(meta.q, pacing, threshold=0.05, max_stale=5)
     """
+    if per_layer and pacing.layer_bits is None:
+        raise ValueError(
+            "per_layer needs pacing.layer_bits — build the pacing with "
+            "make_pacing(..., layer_widths=layer_exchange_widths(cfg))")
     eye = jnp.eye(q, dtype=bool)
 
     def init():
-        return {"spent": jnp.zeros((), jnp.float32),
-                "integ": jnp.zeros((), jnp.float32),
-                "age": jnp.zeros((q, q), jnp.float32),
-                "skip": jnp.zeros((q, q), jnp.float32)}
+        state = {"spent": jnp.zeros((), jnp.float32),
+                 "integ": jnp.zeros((), jnp.float32),
+                 "age": jnp.zeros((q, q), jnp.float32),
+                 "skip": jnp.zeros((q, q), jnp.float32)}
+        if per_layer:
+            state.update(init_layer_fill(pacing))
+        return state
 
     def plan(state, step):
-        bits, integ = allowance(pacing, state["spent"], state["integ"], step)
-        rate = rate_of_allowance(pacing, bits)
-        rates = jnp.where(eye, 1.0, rate)
-        return RatePlan(rates, state["skip"]), {**state, "integ": integ}
+        if not per_layer:
+            bits, integ = allowance(pacing, state["spent"], state["integ"],
+                                    step)
+            rate = rate_of_allowance(pacing, bits)
+            rates = jnp.where(eye, 1.0, rate)
+            return RatePlan(rates, state["skip"]), {**state, "integ": integ}
+        rates_l, integ, y = plan_layer_fill(pacing, state, step)
+        plan_ = uniform_layer_plan(q, rates_l)
+        return RatePlan(plan_.rates, state["skip"]), \
+            {**state, "integ": integ, "y": y}
 
     def observe(state, obs):
         delta = jnp.asarray(obs["pair_delta"], jnp.float32)
@@ -60,8 +83,11 @@ def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
         age = jnp.where(state["skip"] > 0.0, state["age"] + 1.0, 0.0)
         skip = ((delta <= threshold) & (age < max_stale) &
                 ~eye).astype(jnp.float32)
-        return {**state, "age": age, "skip": skip,
-                "spent": state["spent"] +
-                jnp.asarray(obs["transport_bits"], jnp.float32)}
+        out = {**state, "age": age, "skip": skip,
+               "spent": state["spent"] +
+               jnp.asarray(obs["transport_bits"], jnp.float32)}
+        if per_layer:
+            out.update(fold_layer_err(state, obs, ema_decay))
+        return out
 
     return RateController(name, init, observe, plan)

@@ -73,16 +73,42 @@ def gnn_forward(params: dict, cfg: GNNConfig, x: Array,
     ``aggregate`` is called once per (layer, tap>0): every call corresponds
     to one halo exchange in the distributed runtime (Fig. 2's
     compute → compress → communicate → decompress round).
+
+    When the oracle carries the split-phase attributes ``start(li, x) ->
+    (token, bits)`` / ``complete(li, x, token) -> agg`` (the distributed
+    p2p/packed oracles of ``repro.dist.gnn_parallel`` do), the forward
+    runs the **pipelined halo prefetch** schedule (DESIGN.md §3.7): each
+    layer's pack + exchange is issued *first*, the exchange-independent
+    local work (the self-term matmul here, the ELL local aggregation
+    inside ``complete``) is scheduled while the hops are in flight, and
+    the wire is consumed only at the unpack inside ``complete``.  The two
+    phases are the fused oracle's own halves, so the pipelined and fused
+    schedules are bitwise identical (pinned by tests/test_layer_rates.py)
+    — at most two exchanges' hop buffers are ever live (double-buffered
+    hop slots).
     """
     bits = jnp.zeros((), jnp.float32)
     h = x
     n_layers = len(params["layers"])
+    start = getattr(aggregate, "start", None)
+    complete = getattr(aggregate, "complete", None)
+    pipelined = start is not None and complete is not None
+
     for li, layer in enumerate(params["layers"]):
         if cfg.conv == "sage":
-            agg, b = aggregate(li, h)
-            bits = bits + b
-            h_new = dense(layer["self"], h) + dense(layer["neigh"], agg)
-        else:  # poly, eq. (2)
+            if pipelined:
+                token, b = start(li, h)                # issue the exchange
+                self_term = dense(layer["self"], h)    # overlaps the wire
+                agg = complete(li, h, token)           # unpack + aggregate
+                bits = bits + b
+                h_new = self_term + dense(layer["neigh"], agg)
+            else:
+                agg, b = aggregate(li, h)
+                bits = bits + b
+                h_new = dense(layer["self"], h) + dense(layer["neigh"], agg)
+        else:  # poly, eq. (2) — taps chain (tap t+1 consumes tap t), so
+            # there is no exchange-independent work to interleave and the
+            # fused call is the pipelined schedule already
             sk = h
             h_new = dense(layer["taps"][0], h)
             for t in range(1, cfg.k_taps):

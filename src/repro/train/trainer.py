@@ -33,8 +33,12 @@ class History:
     (flattened receiver-major ``[Q*Q]`` tuple of Gfloats per logged
     epoch) — populated by the closed-loop ``auto`` policies, whose
     controllers allocate the wire budget per worker pair; empty lists of
-    tuples stay empty for scalar policies.  ``row()`` serialises it as a
-    ``|``-joined cell so the CSV stays one value per column.
+    tuples stay empty for scalar policies.  ``layer_transport_gf`` is the
+    per-layer refinement (flattened layer-major ``[L*Q*Q]`` tuples,
+    per-layer ``auto`` policies only — DESIGN.md §3.7) and ``comp_err``
+    the cumulative measured compression error (dropped-block energy, auto
+    policies).  ``row()`` serialises the tuples as ``|``-joined cells so
+    the CSV stays one value per column.
     """
     epoch: list = dataclasses.field(default_factory=list)
     loss: list = dataclasses.field(default_factory=list)
@@ -46,6 +50,8 @@ class History:
     transport_gfloats: list = dataclasses.field(default_factory=list)
     wall_s: list = dataclasses.field(default_factory=list)
     pair_transport_gf: list = dataclasses.field(default_factory=list)
+    layer_transport_gf: list = dataclasses.field(default_factory=list)
+    comp_err: list = dataclasses.field(default_factory=list)  # cumulative
 
     def row(self, i: int) -> dict:
         out = {k: getattr(self, k)[i] for k in
@@ -54,10 +60,28 @@ class History:
         if self.pair_transport_gf:
             out["pair_transport_gf"] = "|".join(
                 f"{v:.6g}" for v in self.pair_transport_gf[i])
+        if self.layer_transport_gf:
+            out["layer_transport_gf"] = "|".join(
+                f"{v:.6g}" for v in self.layer_transport_gf[i])
+        if self.comp_err:
+            out["comp_err"] = self.comp_err[i]
         return out
 
     def rows(self):
         return [self.row(i) for i in range(len(self.epoch))]
+
+    def layer_split(self, q: int) -> list:
+        """Cumulative per-layer transport (Gfloats, ``[L]``) of the last
+        logged epoch — the layer-major ``[L·Q²]`` flattening of
+        ``layer_transport_gf`` summed per layer.  Empty for runs without
+        per-layer plans.  The one place the flattening convention is
+        decoded (example driver and benchmark both call this)."""
+        if not self.layer_transport_gf:
+            return []
+        lt = self.layer_transport_gf[-1]
+        n_pairs = q * q
+        return [float(sum(lt[i * n_pairs:(i + 1) * n_pairs]))
+                for i in range(len(lt) // n_pairs)]
 
     @property
     def final_test_acc(self) -> float:
@@ -109,7 +133,12 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     optimizer state (DESIGN.md §3.6).  Auto policies default the wire to
     ``"p2p"`` when the caller left ``"dense"`` (per-pair rates need a
     per-pair wire) and record the per-pair transport split in
-    ``History.pair_transport_gf``.
+    ``History.pair_transport_gf`` plus the cumulative measured
+    compression error in ``History.comp_err``.  A trailing ``:per-layer``
+    lifts the plan to per-layer ``[L, Q, Q]`` tensors — every layer's
+    exchanges get their own water-filled share of each step's bit
+    allowance — and fills ``History.layer_transport_gf`` (DESIGN.md
+    §3.7).
     """
     auto = policy.mode == "auto"
     if auto and wire == "dense":
@@ -146,6 +175,8 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     halo_bits_cum = 0.0
     transport_bits_cum = 0.0
     pair_bits_cum = None
+    layer_bits_cum = None
+    err_cum = 0.0
     t0 = time.time()
     for epoch in range(epochs):
         if auto:
@@ -157,6 +188,11 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
             pair_t = np.asarray(m["pair_transport"], np.float64)
             pair_bits_cum = pair_t if pair_bits_cum is None \
                 else pair_bits_cum + pair_t
+            err_cum += float(np.asarray(m["pair_err"], np.float64).sum())
+            if "layer_transport" in m:
+                layer_t = np.asarray(m["layer_transport"], np.float64)
+                layer_bits_cum = layer_t if layer_bits_cum is None \
+                    else layer_bits_cum + layer_t
         else:
             params, opt_state, m = step(params, opt_state, graph,
                                         jnp.asarray(epoch),
@@ -177,6 +213,10 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
             if pair_bits_cum is not None:
                 hist.pair_transport_gf.append(tuple(
                     pair_bits_cum.ravel() / 32.0 / 1e9))
+                hist.comp_err.append(err_cum)
+            if layer_bits_cum is not None:
+                hist.layer_transport_gf.append(tuple(
+                    layer_bits_cum.ravel() / 32.0 / 1e9))
             if log_fn:
                 log_fn(hist.row(len(hist.epoch) - 1))
     return TrainResult(hist, params, meta, policy.describe())

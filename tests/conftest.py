@@ -2,6 +2,7 @@ import os
 import random
 import sys
 import types
+import zlib
 
 # src/ onto the path so `import repro` works without installation
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -13,19 +14,48 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 # ---------------------------------------------------------------------------
-# Optional hypothesis (requirements-dev.txt): when absent, install a minimal
-# deterministic stand-in so property-based tests still collect and run a few
-# fixed examples instead of hard-failing the whole module at import.
+# Optional hypothesis (requirements-dev.txt): when absent, install a real —
+# if minimal — property-based engine so the property suites
+# (tests/test_properties.py and the @given tests across the tree) run
+# genuine randomised draws, not a token handful of fixed examples.
+#
+# Contract matched to hypothesis where it matters:
+#   * strategies: integers / floats / booleans / sampled_from / just /
+#     tuples / lists / one_of
+#   * @given draws DEFAULT_EXAMPLES examples per test (overridable via
+#     @settings(max_examples=...), honoured up to MAX_EXAMPLES_CAP)
+#   * deterministic but test-specific streams: the RNG seed derives from
+#     the test's qualified name, so every property gets its own draws and
+#     a failure reproduces exactly on re-run
+#   * assume(cond) discards the current example without failing
 # ---------------------------------------------------------------------------
+
+DEFAULT_EXAMPLES = 20
+MAX_EXAMPLES_CAP = 100
 
 
 def _install_hypothesis_stub() -> None:
     mod = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
 
+    class _Discard(Exception):
+        pass
+
     class _Strategy:
         def __init__(self, draw):
             self.draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda r: fn(self.draw(r)))
+
+        def filter(self, pred):
+            def draw(r):
+                for _ in range(100):
+                    v = self.draw(r)
+                    if pred(v):
+                        return v
+                raise _Discard()
+            return _Strategy(draw)
 
     st.integers = lambda min_value=0, max_value=100: _Strategy(
         lambda r: r.randint(int(min_value), int(max_value)))
@@ -34,34 +64,77 @@ def _install_hypothesis_stub() -> None:
     st.sampled_from = lambda elements: _Strategy(
         lambda r: r.choice(list(elements)))
     st.booleans = lambda: _Strategy(lambda r: r.choice([False, True]))
+    st.just = lambda value: _Strategy(lambda r: value)
+    st.one_of = lambda *strategies: _Strategy(
+        lambda r: r.choice(list(strategies)).draw(r))
+    st.tuples = lambda *strategies: _Strategy(
+        lambda r: tuple(s.draw(r) for s in strategies))
+
+    def _lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda r: [elements.draw(r) for _ in
+                                    range(r.randint(int(min_size),
+                                                    int(max_size)))])
+
+    st.lists = _lists
+
+    def assume(condition):
+        if not condition:
+            raise _Discard()
+        return True
 
     def given(**strategies):
         def deco(fn):
             # NOT functools.wraps: copying the signature would make pytest
             # look for fixtures named after the strategy parameters.
             def runner(*args, **kwargs):
-                rng = random.Random(0)
-                for _ in range(getattr(runner, "_stub_examples", 5)):
-                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
-                    fn(*args, **kwargs, **drawn)
+                name = f"{fn.__module__}.{getattr(fn, '__qualname__', fn.__name__)}"
+                rng = random.Random(zlib.crc32(name.encode()))
+                want = min(getattr(runner, "_stub_examples",
+                                   DEFAULT_EXAMPLES), MAX_EXAMPLES_CAP)
+                ran = 0
+                attempts = 0
+                while ran < want and attempts < 10 * want:
+                    attempts += 1
+                    try:
+                        drawn = {k: s.draw(rng)
+                                 for k, s in strategies.items()}
+                        fn(*args, **kwargs, **drawn)
+                    except _Discard:
+                        continue
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"property {name} falsified on example "
+                            f"{drawn!r}: {e}") from e
+                    ran += 1
+                if ran < want:
+                    # mirror hypothesis' filter_too_much health check: a
+                    # property whose draws are mostly/entirely discarded
+                    # verified less than it claims and must not silently
+                    # pass at reduced coverage
+                    raise AssertionError(
+                        f"property {name} ran only {ran}/{want} examples "
+                        f"after {attempts} attempts (assume()/filter "
+                        f"discards too much)")
             runner.__name__ = fn.__name__
             runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
             runner.__module__ = fn.__module__
             runner.__doc__ = fn.__doc__
-            runner._stub_examples = 5
+            runner._stub_examples = getattr(fn, "_stub_examples",
+                                            DEFAULT_EXAMPLES)
             return runner
         return deco
 
-    def settings(max_examples=5, deadline=None, **_):
+    def settings(max_examples=DEFAULT_EXAMPLES, deadline=None, **_):
         del deadline
 
         def deco(fn):
-            fn._stub_examples = min(int(max_examples), 5)
+            fn._stub_examples = min(int(max_examples), MAX_EXAMPLES_CAP)
             return fn
         return deco
 
     mod.given = given
     mod.settings = settings
+    mod.assume = assume
     mod.strategies = st
     mod.__stub__ = True
     sys.modules["hypothesis"] = mod

@@ -1,0 +1,242 @@
+"""Shared emulated ≡ shard_map parity harness (satellite of ISSUE 5).
+
+The same parity pattern used to be duplicated across test_p2p_wire.py,
+test_pair_rates.py and test_gnn_distributed.py: build a tiny partitioned
+graph + SAGE config, run the emulated ``[Q, ...]`` forward, re-run the
+identical program under ``shard_map`` in a subprocess (the main test
+process must keep the single real CPU device — see conftest), and pin
+the outputs to ≤ 1e-6.  This module is the single home of that
+machinery:
+
+* :func:`build_setup` — the shared graph/config/params/partition
+  construction (in-process fixtures);
+* :func:`mixed_map` — the deterministic mixed-rate ``[Q, Q]`` /
+  ``[L, Q, Q]`` draws every rate-map test uses;
+* :func:`run_forward_parity` — one subprocess running a whole
+  ``wire × policy × rate-map`` case list against a ``Q``-device mesh,
+  asserting emulated ≡ shard_map on logits and ledger bits;
+* :func:`run_train_parity` — the train-step variant (several optimizer
+  steps, parameter + metric comparison).
+
+tests/test_parity_matrix.py drives :func:`run_forward_parity` as one
+parametrized matrix over ``wire × policy × Q ∈ {1, 2, 4}`` including the
+per-layer ``[L, Q, Q]`` tensors (DESIGN.md §3.7).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+MIXED_RATES = [1.0, 2.0, 4.0, 16.0]
+
+
+def build_setup(q: int, f: int = 256, layers: int = 2, n: int = 256,
+                conv: str = "sage", seed: int = 0, p2p: bool = True,
+                hidden: int | None = None):
+    """The shared test scaffold: ``(g, cfg, params, pg, graph)`` with the
+    p2p halo/ELL arrays attached (harmless on the all-gather wires)."""
+    import jax
+
+    from repro.graph import partition_graph, tiny_graph
+    from repro.nn import GNNConfig, init_gnn
+
+    g = tiny_graph(n=n, feat_dim=f)
+    cfg = GNNConfig(conv=conv, in_dim=f, hidden=hidden or f,
+                    out_dim=g.num_classes, layers=layers)
+    params = init_gnn(jax.random.key(seed), cfg)
+    pg = partition_graph(g, q, scheme="random", seed=seed)
+    graph = pg.device_arrays()
+    if p2p:
+        from repro.dist.halo import attach_p2p
+        graph = attach_p2p(graph, pg)
+    return g, cfg, params, pg, graph
+
+
+def mixed_map(q: int, seed: int = 0, layers: int | None = None) -> np.ndarray:
+    """Deterministic mixed-rate map: ``[Q, Q]``, or ``[L, Q, Q]`` when
+    ``layers`` is given (diagonal 1 everywhere)."""
+    rng = np.random.default_rng(seed)
+    shape = (q, q) if layers is None else (layers, q, q)
+    rm = rng.choice(MIXED_RATES, size=shape).astype(np.float32)
+    for sl in rm.reshape(-1, q, q):
+        np.fill_diagonal(sl, 1.0)
+    return rm
+
+
+# ---------------------------------------------------------------------------
+# Subprocess scripts.  One interpreter per Q (XLA fixes the device count at
+# startup); each runs a whole case list so the graph build and mesh are paid
+# once per matrix row, not once per case.
+# ---------------------------------------------------------------------------
+
+FORWARD_SCRIPT = r"""
+import json, sys
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from parity import build_setup
+from repro.core import CommPolicy
+from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                     _make_aggregate_shard, _packed_k_for,
+                                     _packed_pair_k_for, make_worker_mesh,
+                                     shard_graph)
+from repro.nn.gnn import gnn_forward
+
+spec = json.loads(sys.argv[1])
+q, f, layers, n = spec["q"], spec["f"], spec["layers"], spec["n"]
+g, cfg, params, pg, graph = build_setup(q, f=f, layers=layers, n=n,
+                                        hidden=spec.get("hidden"))
+mesh = make_worker_mesh(q)
+gs = shard_graph(graph, mesh)
+
+for case in spec["cases"]:
+    wire, polspec, mode = case["wire"], case["policy"], case["map"]
+    label = f"{wire}/{polspec}/{mode or 'scalar'}"
+    meta = DistMeta.build(pg, params, wire=wire)
+    pol = CommPolicy.parse(polspec, 1, compressor="blockmask")
+    # rate maps arrive through the spec (mixed_map builds them host-side
+    # — ONE construction shared with the in-process tests)
+    rm = None if case.get("rates") is None \
+        else np.asarray(case["rates"], np.float32)
+    key = jax.random.key(7)
+    if rm is not None:
+        kb = dict(_packed_pair_k_for(meta, rm))
+        agg_e = _make_aggregate_emulated(graph, meta, pol, None,
+                                         jnp.ones(()), key, packed_k=kb,
+                                         rate_map=jnp.asarray(rm))
+
+        def worker(p, gblk, rmap, k):
+            agg = _make_aggregate_shard(gblk, meta, pol, None, jnp.ones(()),
+                                        k, packed_k=kb, rate_map=rmap)
+            return gnn_forward(p, cfg, gblk["features"], agg)
+
+        sm = jax.jit(shard_map(worker, mesh=mesh,
+                               in_specs=(P(), P("workers"), P(), P()),
+                               out_specs=(P("workers"), P()),
+                               check_rep=False))
+        ls, bs = sm(params, gs, jnp.asarray(rm), key)
+    else:
+        rate = float(pol.rate(0)) if pol.compresses else 1.0
+        comp = pol.compressor() if pol.compresses else None
+        # static kept-block map whenever the wire payload shape follows
+        # the rate: always on packed, under compression on p2p (the
+        # `needs_kb` rule of make_train_step)
+        kb = dict(_packed_k_for(meta, rate)) \
+            if wire == "packed" or (wire == "p2p" and pol.compresses) \
+            else None
+        agg_e = _make_aggregate_emulated(graph, meta, pol, comp,
+                                         jnp.asarray(rate), key,
+                                         packed_k=kb)
+
+        def worker(p, gblk, r, k):
+            agg = _make_aggregate_shard(gblk, meta, pol, comp, r, k,
+                                        packed_k=kb)
+            return gnn_forward(p, cfg, gblk["features"], agg)
+
+        sm = jax.jit(shard_map(worker, mesh=mesh,
+                               in_specs=(P(), P("workers"), P(), P()),
+                               out_specs=(P("workers"), P()),
+                               check_rep=False))
+        ls, bs = sm(params, gs, jnp.asarray(rate), key)
+    le, be = gnn_forward(params, cfg, graph["features"], agg_e)
+    dl = float(jnp.abs(le - ls).max())
+    db = float(jnp.abs(be - bs).max())
+    assert dl <= spec["atol"], (label, dl)
+    assert db <= 1e-6, (label, db)
+    print(label, "OK", f"dl={dl:.2e}")
+print("PARITY_MATRIX_OK")
+"""
+
+TRAIN_SCRIPT = r"""
+import json, sys
+import jax, jax.numpy as jnp
+from parity import build_setup
+from repro.dist.gnn_parallel import (DistMeta, make_train_step,
+                                     make_worker_mesh, shard_graph)
+from repro.core import CommPolicy
+from repro.train.optim import sgd
+
+spec = json.loads(sys.argv[1])
+q, f, layers, n = spec["q"], spec["f"], spec["layers"], spec["n"]
+g, cfg, params, pg, graph = build_setup(q, f=f, layers=layers, n=n,
+                                        hidden=spec["hidden"])
+meta = DistMeta.build(pg, params, wire=spec["wire"])
+opt = sgd(1e-2)
+mesh = make_worker_mesh(q)
+gs = shard_graph(graph, mesh)
+
+for polspec in spec["policies"]:
+    pol = CommPolicy.parse(polspec, 1, compressor="blockmask")
+    p_e, s_e = params, opt.init(params)
+    step_e = make_train_step(cfg, pol, opt, meta)
+    p_s, s_s = params, opt.init(params)
+    step_s = make_train_step(cfg, pol, opt, meta, mesh=mesh)
+    for i in range(spec["steps"]):
+        p_e, s_e, m_e = step_e(p_e, s_e, graph, jnp.asarray(i),
+                               jax.random.key(i))
+        p_s, s_s, m_s = step_s(p_s, s_s, gs, jnp.asarray(i),
+                               jax.random.key(i))
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)))
+    assert d < 1e-6, (polspec, d)
+    assert abs(float(m_e["loss"]) - float(m_s["loss"])) < 1e-5, polspec
+    assert abs(float(m_e["transport_bits"]) -
+               float(m_s["transport_bits"])) < 1.0, polspec
+    print(polspec, "OK", f"dp={d:.2e}")
+print("TRAIN_PARITY_OK")
+"""
+
+
+def _run(script: str, spec: dict, q: int, sentinel: str,
+         timeout: int = 1200) -> str:
+    # tests/ on the path so the scripts import parity.build_setup — ONE
+    # scaffold construction, in-process and in the subprocess
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={q}",
+               PYTHONPATH=os.pathsep.join(
+                   [SRC, os.path.dirname(os.path.abspath(__file__))]))
+    out = subprocess.run([sys.executable, "-c", script, json.dumps(spec)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert sentinel in out.stdout, out.stdout
+    return out.stdout
+
+
+def run_forward_parity(q: int, cases: list[dict], f: int = 512,
+                       layers: int = 2, n: int = 256, atol: float = 1e-6,
+                       timeout: int = 1200) -> str:
+    """Run ``cases`` (dicts of ``wire`` / ``policy`` / ``map`` ∈ {None,
+    'pair', 'layer'} / optional ``seed``) on a ``q``-device mesh in one
+    subprocess; asserts emulated ≡ shard_map ≤ ``atol`` per case.
+
+    The mixed-rate operands are drawn host-side by :func:`mixed_map` (so
+    the subprocess exercises exactly the maps the in-process tests use)
+    and shipped through the JSON spec."""
+    cases = [dict(c, rates=None if c["map"] is None else mixed_map(
+        q, c.get("seed", 0),
+        layers if c["map"] == "layer" else None).tolist())
+        for c in cases]
+    spec = {"q": q, "f": f, "layers": layers, "n": n, "atol": atol,
+            "cases": cases}
+    return _run(FORWARD_SCRIPT, spec, q, "PARITY_MATRIX_OK",
+                timeout=timeout)
+
+
+def run_train_parity(q: int, policies: list[str], wire: str = "p2p",
+                     f: int = 256, hidden: int = 128, layers: int = 3,
+                     n: int = 256, steps: int = 4,
+                     timeout: int = 900) -> str:
+    """Train-step parity: run each policy ``steps`` optimizer steps on
+    both backends and pin parameters, loss, and transport."""
+    spec = {"q": q, "f": f, "hidden": hidden, "layers": layers, "n": n,
+            "steps": steps, "wire": wire, "policies": policies}
+    return _run(TRAIN_SCRIPT, spec, q, "TRAIN_PARITY_OK", timeout=timeout)

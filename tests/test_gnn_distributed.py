@@ -1,9 +1,15 @@
-"""Distributed GNN runtime: exactness vs centralized + baseline semantics."""
+"""Distributed GNN runtime: exactness vs centralized + baseline semantics.
+
+The graph/config/params scaffold comes from the shared parity harness
+(tests/parity.py) so this file, test_p2p_wire.py and test_pair_rates.py
+all exercise the same construction.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from parity import build_setup
 
 from repro.core import FULL_COMM, NO_COMM, fixed, varco
 from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
@@ -16,10 +22,8 @@ from repro.train.optim import adamw, sgd
 
 @pytest.fixture(scope="module")
 def setup():
-    g = tiny_graph(n=256)
-    cfg = GNNConfig(conv="sage", in_dim=g.feat_dim, hidden=32,
-                    out_dim=g.num_classes, layers=3)
-    params = init_gnn(jax.random.key(0), cfg)
+    g, cfg, params, _, _ = build_setup(4, f=16, layers=3, n=256,
+                                       hidden=32, p2p=False)
     return g, cfg, params
 
 

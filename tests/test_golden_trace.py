@@ -1,0 +1,102 @@
+"""Golden-trace convergence regression (ISSUE 5 satellite).
+
+A seeded 30-step ``train_gnn`` run on ``tiny_graph`` whose loss curve is
+pinned against ``tests/golden_traces.json`` (rtol 1e-4) for the three
+policy families — ``full``, ``fixed:4``, ``auto:budget`` — all on the
+p2p wire.  Backend-parity tests catch *relative* drift between the
+emulated and shard_map paths; this catches *absolute* numeric drift of
+the whole training stack (a refactor that changes both backends in
+lockstep still trips it).
+
+Regenerate after an INTENTIONAL numeric change with::
+
+    GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_golden_trace.py
+
+and commit the refreshed json alongside the change that explains it.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_traces.json")
+
+EPOCHS = 30
+EVAL_EVERY = 5
+N, FEAT, HIDDEN, LAYERS, SEED, QW = 128, 256, 256, 2, 0, 2
+
+
+def _budget_bits() -> float:
+    """Deterministic budget for the auto run: 3/4 of the full-comm
+    transport of the run — deliberately OFF the kept-block quantisation
+    grid (F=256 → 2 lane blocks → realisable fractions {1/2, 1}), so the
+    controller has to dither between kept counts and the trace is
+    distinct from every fixed-rate run.  Derived from the partition
+    facts, so the spec string is reproducible without hand-maintained
+    constants."""
+    import jax
+
+    from repro.dist.gnn_parallel import DistMeta
+    from repro.graph import partition_graph, tiny_graph
+    from repro.nn import GNNConfig, init_gnn
+
+    g = tiny_graph(n=N, feat_dim=FEAT)
+    cfg = GNNConfig(conv="sage", in_dim=FEAT, hidden=HIDDEN,
+                    out_dim=g.num_classes, layers=LAYERS)
+    pg = partition_graph(g, QW, scheme="random", seed=SEED)
+    meta = DistMeta.build(pg, init_gnn(jax.random.key(SEED), cfg),
+                          wire="p2p")
+    d_full = 2.0 * 32.0 * meta.halo_demand * (FEAT + HIDDEN * (LAYERS - 1))
+    return 0.75 * d_full * EPOCHS
+
+
+def _policies() -> dict:
+    return {"full": "full", "fixed4": "fixed:4",
+            "auto_budget": f"auto:budget:{_budget_bits():g}"}
+
+
+def _run(spec: str) -> list:
+    from repro.core import CommPolicy
+    from repro.graph import tiny_graph
+    from repro.train.trainer import train_gnn
+
+    g = tiny_graph(n=N, feat_dim=FEAT)
+    policy = CommPolicy.parse(spec, EPOCHS, compressor="blockmask")
+    res = train_gnn(g, q=QW, scheme="random", policy=policy, epochs=EPOCHS,
+                    hidden=HIDDEN, layers=LAYERS, seed=SEED,
+                    eval_every=EVAL_EVERY, wire="p2p")
+    return [float(v) for v in res.history.loss]
+
+
+@pytest.mark.parametrize("name", ["full", "fixed4", "auto_budget"])
+def test_loss_curve_matches_golden(name):
+    spec = _policies()[name]
+    losses = _run(spec)
+    if os.environ.get("GOLDEN_REGEN"):
+        data = {}
+        if os.path.exists(GOLDEN_PATH):
+            with open(GOLDEN_PATH) as fh:
+                data = json.load(fh)
+        data[name] = {"policy": spec, "epochs": EPOCHS,
+                      "eval_every": EVAL_EVERY, "loss": losses}
+        with open(GOLDEN_PATH, "w") as fh:
+            json.dump(data, fh, indent=1, sort_keys=True)
+        pytest.skip(f"regenerated golden trace for {name}")
+    assert os.path.exists(GOLDEN_PATH), \
+        "golden_traces.json missing — run with GOLDEN_REGEN=1"
+    with open(GOLDEN_PATH) as fh:
+        golden = json.load(fh)[name]
+    assert golden["policy"] == spec, \
+        f"golden {name} was recorded for {golden['policy']!r}, now {spec!r}"
+    # rtol pins the informative (early, O(1)) part of the curve; the atol
+    # floor keeps near-zero late-epoch losses from demanding ~1e-9
+    # absolute agreement across jax/XLA releases (CI installs unpinned
+    # jax[cpu], and reduction-order changes perturb a 30-epoch run)
+    np.testing.assert_allclose(np.asarray(losses),
+                               np.asarray(golden["loss"]), rtol=1e-4,
+                               atol=1e-6,
+                               err_msg=f"{name} loss curve drifted "
+                                       f"(regen only if intentional)")

@@ -1,0 +1,394 @@
+"""Per-layer ``[L, Q, Q]`` rate tensors + pipelined prefetch (DESIGN.md §3.7).
+
+The tentpole invariants of ISSUE 5:
+
+* a ``[L, Q, Q]`` tensor with identical layer rows is the ``[Q, Q]``
+  pair map bit-for-bit — and the per-layer transport/error/delta ledger
+  summed over ``L`` reproduces the aggregate ledger exactly (the
+  conservation satellite);
+* each layer's exchange realises its OWN rate row (mixed tensors);
+* the pipelined (start/complete) forward is bitwise the fused forward;
+* the per-layer controllers water-fill the step allowance across layers,
+  stay monotone per layer (Prop. 2), reduce to the scalar plan at
+  ``L = 1``, and still land the bit budget;
+* ``CommPolicy`` grows the ``auto:<ctl>:<bits>:per-layer`` spelling and
+  ``History`` the per-layer transport columns.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from parity import build_setup, mixed_map
+
+from repro.core import CommPolicy, fixed
+from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                     _packed_pair_k_for, _rate_tensor_layers)
+from repro.dist.ratectl import (budget_controller, error_controller,
+                                exchange_widths, layer_exchange_widths,
+                                make_controller, make_pacing,
+                                stale_controller, uniform_layer_plan)
+from repro.nn import GNNConfig
+from repro.nn.gnn import gnn_forward
+
+Q, F, L, T = 4, 512, 2, 40
+
+
+@pytest.fixture(scope="module")
+def setup():
+    _, cfg, params, pg, graph = build_setup(Q, f=F, layers=L, n=256)
+    return cfg, params, pg, graph
+
+
+def _agg(graph, meta, rm, key, pol=None):
+    pol = pol or fixed(4.0, compressor="blockmask")
+    kb = dict(_packed_pair_k_for(meta, rm))
+    return _make_aggregate_emulated(graph, meta, pol, None,
+                                    jnp.ones((), jnp.float32), key,
+                                    packed_k=kb, rate_map=jnp.asarray(rm))
+
+
+# ---------------------------------------------------------------------------
+# data plane: uniform-layer conservation + mixed-layer realisation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["packed", "p2p"])
+def test_layer_ledger_conserves_pair_ledger(setup, wire):
+    """Satellite: at uniform layer rates the per-layer ``[L, Q, Q]``
+    transport (and error/delta) ledger summed over ``L`` reproduces the
+    old aggregate per-pair ledger bit-for-bit, and the delivered values
+    are identical."""
+    cfg, params, pg, graph = setup
+    meta = DistMeta.build(pg, params, wire=wire)
+    rm2 = mixed_map(Q, seed=3)
+    rm3 = np.broadcast_to(rm2, (L, Q, Q)).copy()
+    key = jax.random.key(11)
+    l2, b2 = gnn_forward(params, cfg, graph["features"],
+                         _agg(graph, meta, rm2, key))
+    l3, b3 = gnn_forward(params, cfg, graph["features"],
+                         _agg(graph, meta, rm3, key))
+    assert b2.shape == (2 + 3 * Q * Q,)
+    assert b3.shape == (2 + 3 * L * Q * Q,)
+    assert float(jnp.abs(l2 - l3).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(b2[:2]), np.asarray(b3[:2]))
+    q2 = Q * Q
+    for blk in range(3):                 # transport, err, delta blocks
+        agg_ = np.asarray(b2[2 + blk * q2:2 + (blk + 1) * q2])
+        per_layer = np.asarray(
+            b3[2 + blk * L * q2:2 + (blk + 1) * L * q2]).reshape(L, q2)
+        np.testing.assert_array_equal(agg_, per_layer.sum(0))
+
+
+def test_mixed_layer_rows_realise_each_layers_rate(setup):
+    """Layer ``l``'s exchange under ``[A, B]`` equals the same call
+    sequence under the all-``A`` (resp. all-``B``) pair map — each
+    exchange reads exactly its own row of the tensor."""
+    cfg, params, pg, graph = setup
+    meta = DistMeta.build(pg, params, wire="p2p")
+    a = mixed_map(Q, seed=1)
+    b = mixed_map(Q, seed=2)
+    key = jax.random.key(5)
+    agg_ab = _agg(graph, meta, np.stack([a, b]), key)
+    agg_a = _agg(graph, meta, a, key)
+    agg_b = _agg(graph, meta, b, key)
+    x0 = graph["features"]
+    o_ab0, _ = agg_ab(0, x0)
+    o_a0, _ = agg_a(0, x0)
+    np.testing.assert_array_equal(np.asarray(o_ab0), np.asarray(o_a0))
+    x1 = jnp.tanh(o_ab0)
+    o_ab1, _ = agg_ab(1, x1)
+    agg_b(0, x0)                         # burn call 0 → same key stream
+    o_b1, _ = agg_b(1, x1)
+    np.testing.assert_array_equal(np.asarray(o_ab1), np.asarray(o_b1))
+
+
+def test_single_layer_tensor_degenerates_to_pair_map():
+    """Regression: a ``[1, Q, Q]`` tensor (1-layer model under a
+    per-layer controller) must run and equal the ``[Q, Q]`` pair path —
+    row selection keys on the operand's rank, not on ``L == 1``."""
+    _, cfg1, params1, pg1, graph1 = build_setup(Q, f=F, layers=1, n=256)
+    meta1 = DistMeta.build(pg1, params1, wire="p2p")
+    rm2 = mixed_map(Q, seed=6)
+    key = jax.random.key(3)
+    l2, b2 = gnn_forward(params1, cfg1, graph1["features"],
+                         _agg(graph1, meta1, rm2, key))
+    l3, b3 = gnn_forward(params1, cfg1, graph1["features"],
+                         _agg(graph1, meta1, rm2[None], key))
+    np.testing.assert_array_equal(np.asarray(l2), np.asarray(l3))
+    np.testing.assert_array_equal(np.asarray(b2), np.asarray(b3))
+    # and end-to-end: per-layer policy on a 1-layer model trains, still
+    # records the [1, Q, Q] History columns, and still feeds the
+    # controller its layer_err (regression: metrics keyed on plan rank)
+    from repro.graph import tiny_graph
+    from repro.train.trainer import train_gnn
+    res = train_gnn(tiny_graph(n=96, feat_dim=256), q=2,
+                    policy=CommPolicy.parse("auto:budget:3e7:per-layer", 3),
+                    epochs=3, hidden=256, layers=1, eval_every=3,
+                    wire="p2p")
+    assert res.history.total_transport_gfloats > 0.0
+    assert res.history.layer_transport_gf
+    lt = np.asarray(res.history.layer_transport_gf[-1]).reshape(1, 2, 2)
+    np.testing.assert_allclose(
+        lt.sum(0), np.asarray(res.history.pair_transport_gf[-1]).reshape(
+            2, 2), rtol=1e-6)
+
+
+def test_rate_tensor_layer_count_must_match(setup):
+    cfg, params, pg, graph = setup
+    meta = DistMeta.build(pg, params, wire="p2p")
+    with pytest.raises(ValueError, match="layer rows"):
+        _agg(graph, meta, mixed_map(Q, seed=0, layers=3), jax.random.key(0))
+    with pytest.raises(ValueError, match="ndim"):
+        _rate_tensor_layers(meta, jnp.ones((2, 2, Q, Q)))
+
+
+# ---------------------------------------------------------------------------
+# pipelined prefetch ≡ fused
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["packed", "p2p", "dense"])
+def test_pipelined_forward_bitwise_equals_fused(setup, wire):
+    """gnn_forward auto-detects the split-phase oracle; hiding the
+    attributes forces the fused schedule — both must agree bit-for-bit
+    (the phases are one code path by construction)."""
+    cfg, params, pg, graph = setup
+    meta = DistMeta.build(pg, params, wire=wire)
+    pol = fixed(4.0, compressor="blockmask")
+    rm = None if wire == "dense" else mixed_map(Q, seed=7, layers=L)
+    key = jax.random.key(9)
+
+    def make(hide):
+        if rm is None:
+            comp = pol.compressor()
+            agg = _make_aggregate_emulated(graph, meta, pol, comp,
+                                           jnp.asarray(4.0), key)
+        else:
+            agg = _agg(graph, meta, rm, key)
+        if hide:
+            return lambda li, x: agg(li, x)      # no .start/.complete
+        assert hasattr(agg, "start") and hasattr(agg, "complete")
+        return agg
+
+    l_pipe, b_pipe = gnn_forward(params, cfg, graph["features"], make(False))
+    l_fuse, b_fuse = gnn_forward(params, cfg, graph["features"], make(True))
+    np.testing.assert_array_equal(np.asarray(l_pipe), np.asarray(l_fuse))
+    np.testing.assert_array_equal(np.asarray(b_pipe), np.asarray(b_fuse))
+
+
+def test_pipelined_forward_poly_conv(setup):
+    """The poly conv's chained taps run through the split phases too."""
+    _, _, pg, graph = setup
+    from repro.nn import init_gnn
+    g_cfg = GNNConfig(conv="poly", in_dim=F, hidden=F, out_dim=4,
+                      layers=2, k_taps=3)
+    params = init_gnn(jax.random.key(1), g_cfg)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    pol = fixed(2.0, compressor="blockmask")
+    rm = mixed_map(Q, seed=4, layers=2)
+    agg = _agg(graph, meta, rm, jax.random.key(2), pol=pol)
+    hidden = lambda li, x: agg(li, x)
+    agg2 = _agg(graph, meta, rm, jax.random.key(2), pol=pol)
+    l_pipe, b_pipe = gnn_forward(params, g_cfg, graph["features"], agg2)
+    l_fuse, b_fuse = gnn_forward(params, g_cfg, graph["features"], hidden)
+    np.testing.assert_array_equal(np.asarray(l_pipe), np.asarray(l_fuse))
+    np.testing.assert_array_equal(np.asarray(b_pipe), np.asarray(b_fuse))
+
+
+# ---------------------------------------------------------------------------
+# per-layer controllers
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def meta_cfg(setup):
+    cfg, params, pg, _ = setup
+    return DistMeta.build(pg, params, wire="p2p"), cfg
+
+
+def _sim_per_layer(ctl, meta_, cfg, steps, budget):
+    """Drive a per-layer controller against the quantised transport
+    model; returns (spent, per-layer rate history [steps, L])."""
+    rows = meta_.pair_table().astype(np.float64)
+    nb = F // 128
+    widths = layer_exchange_widths(cfg)
+    state = ctl.init()
+    spent = 0.0
+    hist = []
+    for t in range(steps):
+        plan, state = ctl.plan(state, t)
+        r = np.asarray(plan.rates, np.float64)
+        assert r.shape == (L, Q, Q)
+        for sl in r:
+            assert (np.diag(sl) == 1.0).all()
+        hist.append([float(sl[~np.eye(Q, dtype=bool)].mean()) for sl in r])
+        k = np.clip(np.floor(nb / np.maximum(r, 1.0)), 1, nb)
+        bits = 0.0
+        err = np.zeros((L, Q, Q))
+        for l, w in enumerate(widths):
+            kl = k[l].copy()
+            np.fill_diagonal(kl, 0.0)
+            bits += 2.0 * 32.0 * (w / F) * float((rows * kl * 128).sum())
+            err[l] = rows * (1.0 - k[l] / nb) * (l + 1.0)
+        spent += bits
+        state = ctl.observe(state, {
+            "transport_bits": jnp.asarray(bits, jnp.float32),
+            "pair_err": jnp.asarray(err.sum(0), jnp.float32),
+            "layer_err": jnp.asarray(err, jnp.float32),
+            "pair_delta": jnp.ones((Q, Q), jnp.float32)})
+    return spent, np.asarray(hist)
+
+
+@pytest.mark.parametrize("factory", ["budget", "error", "stale"])
+def test_per_layer_controllers_monotone_and_budgeted(meta_cfg, factory):
+    meta_, cfg = meta_cfg
+    budget = 0.5 * 2.0 * 32.0 * meta_.halo_demand * \
+        sum(exchange_widths(cfg)) * T
+    pacing = make_pacing(meta_, exchange_widths(cfg), T, budget,
+                         layer_widths=layer_exchange_widths(cfg))
+    if factory == "budget":
+        ctl = budget_controller(Q, pacing, per_layer=True)
+    elif factory == "error":
+        ctl = error_controller(Q, pacing, meta_.pair_table(),
+                               per_layer=True)
+    else:
+        ctl = stale_controller(Q, pacing, per_layer=True, threshold=0.0)
+    spent, hist = _sim_per_layer(ctl, meta_, cfg, T, budget)
+    # monotone non-increasing mean rate per layer (Prop. 2 per layer)
+    for l in range(L):
+        assert (np.diff(hist[:, l]) <= 1e-5).all(), hist[:, l]
+    assert abs(spent - budget) / budget <= 0.05, (spent, budget)
+
+
+def test_per_layer_budget_reduces_to_scalar_at_single_layer(setup):
+    """L = 1: the per-layer fill telescopes to the scalar budget plan
+    (same uniform rate every step under on-model feedback)."""
+    cfg, params, pg, _ = setup
+    meta_ = DistMeta.build(pg, params, wire="p2p")
+    cfg1 = dataclasses.replace(cfg, layers=1)
+    budget = 0.4 * 2.0 * 32.0 * meta_.halo_demand * \
+        sum(exchange_widths(cfg1)) * T
+    pacing_s = make_pacing(meta_, exchange_widths(cfg1), T, budget)
+    pacing_l = make_pacing(meta_, exchange_widths(cfg1), T, budget,
+                           layer_widths=layer_exchange_widths(cfg1))
+    ctl_s = budget_controller(Q, pacing_s)
+    ctl_l = budget_controller(Q, pacing_l, per_layer=True)
+    st_s, st_l = ctl_s.init(), ctl_l.init()
+    off = ~np.eye(Q, dtype=bool)
+    for t in range(T):
+        plan_s, st_s = ctl_s.plan(st_s, t)
+        plan_l, st_l = ctl_l.plan(st_l, t)
+        r_s = float(np.asarray(plan_s.rates)[off].mean())
+        r_l = float(np.asarray(plan_l.rates)[0][off].mean())
+        np.testing.assert_allclose(r_l, r_s, rtol=1e-4)
+        shipped = pacing_s.d_full / r_s
+        obs = {"transport_bits": jnp.asarray(shipped, jnp.float32),
+               "pair_err": jnp.zeros((Q, Q)),
+               "layer_err": jnp.zeros((1, Q, Q)),
+               "pair_delta": jnp.zeros((Q, Q))}
+        st_s = ctl_s.observe(st_s, obs)
+        st_l = ctl_l.observe(st_l, obs)
+
+
+def test_per_layer_fill_prefers_lossier_layer(meta_cfg):
+    """Given a persistent energy imbalance, the fill keeps more blocks
+    (lower rate) on the lossier layer."""
+    meta_, cfg = meta_cfg
+    budget = 0.4 * 2.0 * 32.0 * meta_.halo_demand * \
+        sum(exchange_widths(cfg)) * T
+    pacing = make_pacing(meta_, exchange_widths(cfg), T, budget,
+                         layer_widths=layer_exchange_widths(cfg))
+    ctl = budget_controller(Q, pacing, per_layer=True, ema_decay=0.0)
+    state = ctl.init()
+    err = jnp.stack([jnp.ones((Q, Q)), 50.0 * jnp.ones((Q, Q))])
+    for t in range(10):
+        plan, state = ctl.plan(state, t)
+        state = ctl.observe(state, {
+            "transport_bits": jnp.asarray(pacing.d_full / 64.0),
+            "pair_err": err.sum(0), "layer_err": err,
+            "pair_delta": jnp.zeros((Q, Q))})
+    off = ~np.eye(Q, dtype=bool)
+    r = np.asarray(plan.rates)
+    assert r[1][off].mean() < r[0][off].mean(), r
+
+
+def test_uniform_layer_plan_shape():
+    p = uniform_layer_plan(3, jnp.asarray([2.0, 8.0]))
+    assert p.rates.shape == (2, 3, 3)
+    assert p.skip.shape == (3, 3)
+    for sl in np.asarray(p.rates):
+        assert (np.diag(sl) == 1.0).all()
+    assert (np.asarray(p.rates)[1][~np.eye(3, dtype=bool)] == 8.0).all()
+
+
+def test_per_layer_needs_layer_bits(meta_cfg):
+    meta_, cfg = meta_cfg
+    pacing = make_pacing(meta_, exchange_widths(cfg), T, 1e9)
+    for factory in (lambda: budget_controller(Q, pacing, per_layer=True),
+                    lambda: error_controller(Q, pacing, meta_.pair_table(),
+                                             per_layer=True),
+                    lambda: stale_controller(Q, pacing, per_layer=True)):
+        with pytest.raises(ValueError, match="layer_bits"):
+            factory()
+    with pytest.raises(ValueError, match="sum"):
+        make_pacing(meta_, exchange_widths(cfg), T, 1e9,
+                    layer_widths=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# policy spelling + trainer integration
+# ---------------------------------------------------------------------------
+
+
+def test_commpolicy_per_layer_parse_and_describe():
+    p = CommPolicy.parse("auto:error:3e9:per-layer", T)
+    assert p.per_layer and p.controller == "error"
+    assert p.budget_bits == 3e9
+    assert "per-layer" in p.describe()
+    assert not CommPolicy.parse("auto:error:3e9", T).per_layer
+    with pytest.raises(ValueError, match="per-layer"):
+        CommPolicy.parse("auto:error:3e9:sideways", T)
+    with pytest.raises(ValueError, match="per-layer"):
+        CommPolicy.parse("auto:error:3e9:", T)    # truncated suffix
+    with pytest.raises(ValueError, match="closed-loop"):
+        CommPolicy(mode="full", per_layer=True)
+
+
+def test_make_controller_per_layer_dispatch(meta_cfg):
+    meta_, cfg = meta_cfg
+    for name in ("budget", "error", "stale"):
+        pol = CommPolicy.parse(f"auto:{name}:1e9:per-layer", T)
+        ctl = make_controller(pol, meta_, cfg, T)
+        plan, _ = ctl.plan(ctl.init(), 0)
+        assert np.asarray(plan.rates).shape == (L, Q, Q), name
+        # ema_decay reaches every per-layer controller...
+        make_controller(pol, meta_, cfg, T, ema_decay=0.5)
+    # ...but is rejected where no EMA exists (scalar budget/stale) —
+    # misdirected knobs must fail loudly, not silently no-op
+    for name in ("budget", "stale"):
+        with pytest.raises(ValueError, match="ema_decay"):
+            make_controller(CommPolicy.parse(f"auto:{name}:1e9", T),
+                            meta_, cfg, T, ema_decay=0.5)
+    make_controller(CommPolicy.parse("auto:error:1e9", T), meta_, cfg, T,
+                    ema_decay=0.5)    # scalar error keeps its EMA knob
+
+
+def test_train_gnn_per_layer_history_columns():
+    from repro.graph import tiny_graph
+    from repro.train.trainer import train_gnn
+
+    g = tiny_graph(n=128, feat_dim=256)
+    budget = 5e7
+    res = train_gnn(g, q=2, policy=CommPolicy.parse(
+        f"auto:budget:{budget:g}:per-layer", 4), epochs=4, hidden=256,
+        layers=2, eval_every=2, wire="p2p")
+    h = res.history
+    assert h.layer_transport_gf and h.pair_transport_gf and h.comp_err
+    lt = np.asarray(h.layer_transport_gf[-1]).reshape(2, 2, 2)
+    pt = np.asarray(h.pair_transport_gf[-1]).reshape(2, 2)
+    np.testing.assert_allclose(lt.sum(0), pt, rtol=1e-6)
+    row = h.row(len(h.epoch) - 1)
+    assert "layer_transport_gf" in row and "comp_err" in row

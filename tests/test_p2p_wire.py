@@ -11,14 +11,11 @@ rate divides the lane-block count — strictly below the all-gather
 collective volume.
 """
 
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from parity import build_setup, run_train_parity
 
 from repro.core import FULL_COMM, fixed, varco
 from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
@@ -36,12 +33,8 @@ F = 256
 
 @pytest.fixture(scope="module")
 def setup():
-    g = tiny_graph(n=256, feat_dim=F)
-    cfg = GNNConfig(conv="sage", in_dim=F, hidden=128,
-                    out_dim=g.num_classes, layers=3)
-    params = init_gnn(jax.random.key(0), cfg)
-    pg = partition_graph(g, 4, scheme="random")
-    graph = attach_p2p(pg.device_arrays(), pg)
+    _, cfg, params, pg, graph = build_setup(4, f=F, layers=3, n=256,
+                                            hidden=128)
     return cfg, params, pg, graph
 
 
@@ -293,59 +286,12 @@ def test_compiled_cache_bounded():
 
 
 # ---------------------------------------------------------------------------
-# shard_map backend (subprocess: needs 8 virtual devices)
+# shard_map backend (shared harness of tests/parity.py; subprocess: 8
+# virtual devices)
 # ---------------------------------------------------------------------------
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-P2P_SHARD_EQUIV = """
-import jax, jax.numpy as jnp
-from repro.graph import tiny_graph, partition_graph
-from repro.nn import GNNConfig, init_gnn
-from repro.dist.gnn_parallel import (DistMeta, make_train_step,
-                                     make_worker_mesh, shard_graph)
-from repro.dist.halo import attach_p2p
-from repro.core import FULL_COMM, fixed
-from repro.train.optim import sgd
-
-g = tiny_graph(n=256, feat_dim=256)
-cfg = GNNConfig(conv='sage', in_dim=256, hidden=128,
-                out_dim=g.num_classes, layers=3)
-params = init_gnn(jax.random.key(0), cfg)
-pg = partition_graph(g, 8, scheme='random')
-graph = attach_p2p(pg.device_arrays(), pg)
-meta = DistMeta.build(pg, params, wire='p2p')
-opt = sgd(1e-2)
-mesh = make_worker_mesh(8)
-gs = shard_graph(graph, mesh)
-
-for rate in (1.0, 2.0, 4.0, 16.0):
-    pol = FULL_COMM if rate == 1.0 else fixed(rate, compressor='blockmask')
-    p_e, s_e = params, opt.init(params)
-    step_e = make_train_step(cfg, pol, opt, meta)
-    p_s, s_s = params, opt.init(params)
-    step_s = make_train_step(cfg, pol, opt, meta, mesh=mesh)
-    for i in range(4):
-        p_e, s_e, m_e = step_e(p_e, s_e, graph, jnp.asarray(i),
-                               jax.random.key(i))
-        p_s, s_s, m_s = step_s(p_s, s_s, gs, jnp.asarray(i),
-                               jax.random.key(i))
-    d = max(float(jnp.abs(a - b).max())
-            for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)))
-    assert d < 1e-6, (rate, d)
-    assert abs(float(m_e['loss']) - float(m_s['loss'])) < 1e-5, rate
-    assert abs(float(m_e['transport_bits']) -
-               float(m_s['transport_bits'])) < 1.0, rate
-print('P2P_SHARD_OK')
-"""
 
 
 @pytest.mark.slow
 def test_p2p_shard_map_matches_emulated():
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=SRC)
-    out = subprocess.run([sys.executable, "-c", P2P_SHARD_EQUIV], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    assert "P2P_SHARD_OK" in out.stdout
+    run_train_parity(8, ["full", "fixed:2", "fixed:4", "fixed:16"],
+                     wire="p2p", f=256, hidden=128, layers=3, steps=4)

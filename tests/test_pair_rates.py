@@ -9,46 +9,31 @@ emulated and shard_map backends agree to 1e-6 at mixed rates drawn from
 {1, 2, 4, 16} on both the packed and p2p wires.
 """
 
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from parity import build_setup, mixed_map, run_forward_parity
 
 from repro.core import fixed
 from repro.core.compression import get_compressor
 from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
                                      _packed_k_for, _packed_pair_k_for,
                                      _pair_keep)
-from repro.dist.halo import attach_p2p
-from repro.graph import partition_graph, tiny_graph
-from repro.nn import GNNConfig, init_gnn
 from repro.nn.gnn import gnn_forward
 
 F = 512
 Q = 4
-MIXED_RATES = [1.0, 2.0, 4.0, 16.0]
 
 
 @pytest.fixture(scope="module")
 def setup():
-    g = tiny_graph(n=256, feat_dim=F)
-    cfg = GNNConfig(conv="sage", in_dim=F, hidden=F,
-                    out_dim=g.num_classes, layers=2)
-    params = init_gnn(jax.random.key(0), cfg)
-    pg = partition_graph(g, Q, scheme="random")
-    graph = attach_p2p(pg.device_arrays(), pg)
+    _, cfg, params, pg, graph = build_setup(Q, f=F, layers=2, n=256)
     return cfg, params, pg, graph
 
 
 def _mixed_map(seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    rm = rng.choice(MIXED_RATES, size=(Q, Q)).astype(np.float32)
-    np.fill_diagonal(rm, 1.0)
-    return rm
+    return mixed_map(Q, seed)
 
 
 def _agg(graph, meta, rm, key, pol=None):
@@ -252,70 +237,22 @@ def test_neighbor_exchange_pair_k_needs_n_keep():
 
 
 # ---------------------------------------------------------------------------
-# emulated ≡ shard_map at mixed per-pair rates (subprocess: 4 devices)
+# emulated ≡ shard_map at mixed per-pair AND per-layer rates (shared
+# harness of tests/parity.py; subprocess: 4 devices)
 # ---------------------------------------------------------------------------
-
-PAIR_SHARD_EQUIV = """
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-from repro.core import fixed
-from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
-                                     _make_aggregate_shard,
-                                     _packed_pair_k_for, make_worker_mesh,
-                                     shard_graph)
-from repro.dist.halo import attach_p2p
-from repro.graph import partition_graph, tiny_graph
-from repro.nn import GNNConfig, init_gnn
-from repro.nn.gnn import gnn_forward
-
-Q, F = 4, 512
-g = tiny_graph(n=256, feat_dim=F)
-cfg = GNNConfig(conv='sage', in_dim=F, hidden=F, out_dim=g.num_classes,
-                layers=2)
-params = init_gnn(jax.random.key(0), cfg)
-pg = partition_graph(g, Q, scheme='random')
-graph = attach_p2p(pg.device_arrays(), pg)
-mesh = make_worker_mesh(Q)
-gs = shard_graph(graph, mesh)
-rng = np.random.default_rng(0)
-rm = rng.choice([1.0, 2.0, 4.0, 16.0], size=(Q, Q)).astype(np.float32)
-np.fill_diagonal(rm, 1.0)
-pol = fixed(4.0, compressor='blockmask')
-for wire in ('p2p', 'packed'):
-    meta = DistMeta.build(pg, params, wire=wire)
-    kb = dict(_packed_pair_k_for(meta, rm))
-    agg_e = _make_aggregate_emulated(graph, meta, pol, None, jnp.ones(()),
-                                     jax.random.key(7), packed_k=kb,
-                                     rate_map=jnp.asarray(rm))
-    le, be = gnn_forward(params, cfg, graph['features'], agg_e)
-
-    def worker(p, gblk, rmap, key):
-        agg = _make_aggregate_shard(gblk, meta, pol, None, jnp.ones(()),
-                                    key, packed_k=kb, rate_map=rmap)
-        return gnn_forward(p, cfg, gblk['features'], agg)
-
-    sm = jax.jit(shard_map(worker, mesh=mesh,
-                           in_specs=(P(), P('workers'), P(), P()),
-                           out_specs=(P('workers'), P()), check_rep=False))
-    ls, bs = sm(params, gs, jnp.asarray(rm), jax.random.key(7))
-    dl = float(jnp.abs(le - ls).max())
-    db = float(jnp.abs(be - bs).max())
-    assert dl <= 1e-6, (wire, dl)
-    assert db == 0.0, (wire, db)
-    print(f'{wire} OK dl={dl:.2e}')
-print('PAIR_SHARD_EQUIV_OK')
-"""
 
 
 @pytest.mark.slow
 def test_pair_rates_emulated_matches_shard_map():
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    out = subprocess.run([sys.executable, "-c", PAIR_SHARD_EQUIV], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, \
-        f"STDOUT:\n{out.stdout}\nSTDERR:{out.stderr}"
-    assert "PAIR_SHARD_EQUIV_OK" in out.stdout
+    run_forward_parity(Q, [
+        {"wire": wire, "policy": "fixed:4", "map": mode, "seed": 0}
+        for wire in ("p2p", "packed") for mode in ("pair", "layer")])
+
+
+@pytest.mark.slow
+def test_single_layer_tensor_shard_parity():
+    """[1, Q, Q] tensors (per-layer controller on a 1-layer model) on the
+    real collectives — regression for the rank-vs-L selection bug."""
+    run_forward_parity(2, [
+        {"wire": wire, "policy": "fixed:4", "map": "layer", "seed": 1}
+        for wire in ("p2p", "packed")], layers=1)

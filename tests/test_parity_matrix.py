@@ -1,0 +1,38 @@
+"""The distributed conformance matrix (ISSUE 5 satellite).
+
+One parametrized emulated ≡ shard_map sweep over ``wire × policy × Q ∈
+{1, 2, 4}`` through the shared harness of tests/parity.py — full
+communication, fixed blockmask compression, mixed per-pair ``[Q, Q]``
+maps, and the per-layer ``[L, Q, Q]`` tensors (DESIGN.md §3.7) — so
+backend conformance is pinned by construction for every transport, not
+by hand-copied per-wire scripts.  Each Q runs as a single subprocess
+(XLA fixes the device count at interpreter startup).
+"""
+
+import pytest
+
+from parity import run_forward_parity
+
+
+def _matrix(q: int) -> list[dict]:
+    cases = [
+        {"wire": "dense", "policy": "full", "map": None},
+        {"wire": "dense", "policy": "fixed:4", "map": None},
+    ]
+    for wire in ("packed", "p2p"):
+        cases += [
+            {"wire": wire, "policy": "full", "map": None},
+            {"wire": wire, "policy": "fixed:4", "map": None},
+            {"wire": wire, "policy": "fixed:4", "map": "pair", "seed": q},
+            {"wire": wire, "policy": "fixed:4", "map": "layer",
+             "seed": 10 + q},
+        ]
+    return cases
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("q", [1, 2, 4])
+def test_parity_matrix(q):
+    out = run_forward_parity(q, _matrix(q))
+    # every case must have reported, not just the sentinel
+    assert out.count(" OK ") == len(_matrix(q)), out
