@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test verify fast slow floor smoke bench-smoke wire-smoke \
-        ring-smoke ratectl-smoke ratectl-pl-smoke docs all
+        ring-smoke quant-smoke ratectl-smoke ratectl-pl-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -30,6 +30,9 @@ wire-smoke:                  # packed + p2p halo-exchange acceptance checks
 ring-smoke:                  # p2p ring: transport == analytic at rates {1,4}
 	$(PY) benchmarks/halo_exchange.py --smoke-ring
 
+quant-smoke:                 # fused pack+quant beats pack-then-cast; int4
+	$(PY) benchmarks/halo_exchange.py --smoke-quant   # transport == analytic
+
 ratectl-smoke:               # closed loop: budget within 5%, error >= uniform
 	$(PY) benchmarks/ratectl_budget.py --smoke
 
@@ -39,5 +42,5 @@ ratectl-pl-smoke:            # per-layer: err <= uniform, budget 5%, parity
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
-all: floor verify smoke bench-smoke wire-smoke ring-smoke ratectl-smoke \
-     ratectl-pl-smoke docs
+all: floor verify smoke bench-smoke wire-smoke ring-smoke quant-smoke \
+     ratectl-smoke ratectl-pl-smoke docs

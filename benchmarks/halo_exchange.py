@@ -19,6 +19,10 @@ direction of the p2p win: transport == analytic ≪ all-gather volume.
 ``--smoke-ring`` is the CI ring target: emulated-backend p2p checks only —
 transport ≈ analytic bits at rates {1, 4}, rate-1 p2p vs dense training
 parity, and the p2p-under-all-gather volume direction (~1 min).
+``--smoke-quant`` is the CI quantised-wire target (DESIGN.md §3.8): the
+fused pack+quantise kernel beats the two-stage pack-then-cast pipeline
+wall-clock, and transport at widths {2, 4, 8} equals the analytic
+``transport_bits_quant`` charge through a real forward pass (~1 min).
 
 Output: ``experiments/bench/halo_exchange.csv`` (schema in
 benchmarks/README.md).
@@ -249,6 +253,100 @@ def smoke_ring() -> None:
     print("RING_SMOKE_OK")
 
 
+def smoke_quant() -> None:
+    """Quantised-wire acceptance (DESIGN.md §3.8, the CI ``quant-smoke``
+    target): the fused pack+quantise launch beats the two-stage
+    pack-then-cast pipeline wall-clock, and the int4 p2p transport charge
+    equals the analytic ``transport_bits_quant`` closed form through a
+    real forward pass."""
+    import numpy as np
+
+    from repro.core import fixed
+    from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                         _packed_pair_k_for)
+    from repro.dist.halo import attach_p2p
+    from repro.graph import partition_graph, tiny_graph
+    from repro.kernels import ops
+    from repro.kernels.ops import LANE
+    from repro.kernels.varco_pack import block_mask_indices
+    from repro.nn import GNNConfig, init_gnn
+    from repro.nn.gnn import gnn_forward
+
+    # 1. wall clock: ONE fused dispatch (gather + per-block amax + scale +
+    #    int round in a single program) vs the two-stage pack -> cast
+    #    pipeline that materialises the fp32 packed intermediate between
+    #    dispatches — same shape as the kernel_bench row (n=2048, F=512,
+    #    K=4, w=4)
+    nq, fq, wq = 2048, 512, 4
+    x = jax.random.normal(jax.random.key(0), (nq, fq), jnp.float32)
+    kept, inv = block_mask_indices(jax.random.key(1), fq // 128, 1.0)
+    pack_stage = jax.jit(lambda a: ops.wire_pack(a, kept, inv))
+
+    def _cast(p):
+        kq = p.shape[1] // LANE
+        pb = p.reshape(p.shape[0], kq, LANE)
+        qmax = float(2 ** (wq - 1) - 1)
+        amax = jnp.max(jnp.abs(pb), axis=-1)
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        qv = jnp.clip(jnp.rint(pb / scale[..., None]), -qmax, qmax)
+        return qv.astype(jnp.int8).reshape(p.shape), scale
+
+    cast_stage = jax.jit(_cast)
+    for _ in range(3):            # best-of-3: absorb transient CI load
+        t_f = StepTimer()
+        t_f.measure(lambda a: ops.pack_quant(a, kept, width=wq), x, iters=5)
+        t_2 = StepTimer()
+        t_2.measure(lambda a: cast_stage(pack_stage(a)), x, iters=5)
+        if t_f.us_per_call < t_2.us_per_call:
+            break
+    assert t_f.us_per_call < t_2.us_per_call, \
+        (t_f.us_per_call, t_2.us_per_call)
+    print(f"fused pack+quant ok: {t_f.us_per_call:.0f}us < two-stage "
+          f"{t_2.us_per_call:.0f}us "
+          f"({t_2.us_per_call / t_f.us_per_call:.2f}x)")
+
+    # 2. int4 transport == analytic: F=512 and hidden=512 (as smoke_ring)
+    #    so both exchanges ship 512 lanes and the closed form
+    #    ``halo_demand · K · (128·w + 32)`` holds with equality
+    g = tiny_graph(n=256, feat_dim=512)
+    cfg = GNNConfig(conv="sage", in_dim=512, hidden=512,
+                    out_dim=g.num_classes, layers=2)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, 4, scheme="random")
+    graph = attach_p2p(pg.device_arrays(), pg)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    qn, rate = meta.q, 4.0
+    rm = np.full((qn, qn), rate, np.float32)
+    np.fill_diagonal(rm, 1.0)
+
+    def forward_bits(width):
+        wm = None
+        if width is not None:
+            wm = np.full((qn, qn), width, np.float32)
+            np.fill_diagonal(wm, 32.0)
+        agg = _make_aggregate_emulated(
+            graph, meta, fixed(rate, compressor="blockmask"), None,
+            jnp.ones((), jnp.float32), jax.random.key(2),
+            packed_k=dict(_packed_pair_k_for(meta, rm)),
+            rate_map=jnp.asarray(rm),
+            width_map=None if wm is None else jnp.asarray(wm))
+        _, bits = gnn_forward(params, cfg, graph["features"], agg)
+        return np.asarray(bits)
+
+    for width in (2, 4, 8):
+        bits = forward_bits(width)
+        transport = float(bits[2:2 + qn * qn].sum())
+        analytic = 2.0 * float(meta.transport_bits_quant(512, rate, width))
+        assert abs(transport - analytic) <= 1e-6 * analytic, \
+            (width, transport, analytic)
+        print(f"quant transport ok: w={width} transport==analytic="
+              f"{analytic:.0f} bits ({width / 32:.3f}x payload + scales)")
+    # a width-32 map reproduces the unquantised ledger bit-for-bit
+    np.testing.assert_array_equal(forward_bits(32), forward_bits(None))
+    print("fp32 width map == unquantised ledger (bitwise)")
+    print("QUANT_SMOKE_OK")
+
+
 def smoke() -> None:
     from repro.core import FULL_COMM
     from repro.graph import partition_graph, tiny_graph
@@ -335,6 +433,10 @@ if __name__ == "__main__":
                      help="p2p ring acceptance on the emulated backend: "
                           "transport == analytic at rates {1, 4} + rate-1 "
                           "parity (~1 min)")
+    grp.add_argument("--smoke-quant", action="store_true",
+                     help="quantised-wire acceptance: fused pack+quantise "
+                          "beats pack-then-cast wall-clock + int4 transport "
+                          "== analytic wire bits (~1 min)")
     grp.add_argument("--full", action="store_true",
                      help="paper-scale sweep (bigger graphs, more Q/F)")
     args = ap.parse_args()
@@ -342,5 +444,7 @@ if __name__ == "__main__":
         smoke()
     elif args.smoke_ring:
         smoke_ring()
+    elif args.smoke_quant:
+        smoke_quant()
     else:
         print(main(quick=not args.full))

@@ -34,7 +34,8 @@ def main(quick: bool = True) -> dict:
     kout = ops.mha(q, k, v, causal=True, interpret=True)
     err = float(jnp.abs(kout - refo).max())
     rows.append({"kernel": "flash_attention", "shape": f"{b}x{h}x{s}x{d}",
-                 "ref_us": round(t_ref.us_per_call, 1), "max_err": err})
+                 "ref_us": round(t_ref.us_per_call, 1), "fused_us": "",
+                 "max_err": err})
 
     # varco pack/unpack round trip
     n, f = (512, 1024) if quick else (4096, 4096)
@@ -46,8 +47,46 @@ def main(quick: bool = True) -> dict:
     xt, _ = ops.compress_roundtrip(jax.random.key(0), x, 4.0, interpret=True)
     expect = ref.unpack_reference(ref.pack_reference(x, kept), inv)
     rows.append({"kernel": "varco_pack", "shape": f"{n}x{f}",
-                 "ref_us": round(t_ref.us_per_call, 1),
+                 "ref_us": round(t_ref.us_per_call, 1), "fused_us": "",
                  "max_err": float(jnp.abs(xt - expect).max())})
+
+    # fused pack+quantise vs pack-then-cast (DESIGN.md §3.8): ONE compiled
+    # program (the Pallas kernel computes the gather, the per-block amax,
+    # the scale and the int round in a single VMEM pass; XLA:CPU fuses the
+    # same graph) against two separately-dispatched stages that materialise
+    # the fp32 packed intermediate in between.  ref_us is the two-stage
+    # pipeline, fused_us the single launch.
+    nq, fq, wq = (2048, 512, 4)
+    xq = jnp.asarray(rng.normal(0, 1, (nq, fq)), jnp.float32)
+    keptq, invq = block_mask_indices(jax.random.key(1), fq // 128, 1.0)
+    t_fused = StepTimer()
+    pk_f, sc_f = t_fused.measure(
+        lambda a: ops.pack_quant(a, keptq, width=wq), xq, iters=5)
+
+    pack_stage = jax.jit(lambda a: ops.wire_pack(a, keptq, invq))
+
+    def _cast(p):
+        kq = p.shape[1] // 128
+        pb = p.reshape(p.shape[0], kq, 128)
+        qmax = float(2 ** (wq - 1) - 1)
+        amax = jnp.max(jnp.abs(pb), axis=-1)
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        qv = jnp.clip(jnp.rint(pb / scale[..., None]), -qmax, qmax)
+        return qv.astype(jnp.int8).reshape(p.shape), scale
+
+    cast_stage = jax.jit(_cast)
+    t_two = StepTimer()
+    pk_2, sc_2 = t_two.measure(lambda a: cast_stage(pack_stage(a)), xq,
+                               iters=5)
+    quant_err = float(jnp.abs(
+        ref.quant_dequant_reference(pk_f, sc_f) -
+        ref.quant_dequant_reference(pk_2, sc_2)).max())
+    speedup = t_two.us_per_call / max(t_fused.us_per_call, 1e-9)
+    rows.append({"kernel": "pack_quant_fused",
+                 "shape": f"{nq}x{fq}@w{wq} {speedup:.2f}x",
+                 "ref_us": round(t_two.us_per_call, 1),
+                 "fused_us": round(t_fused.us_per_call, 1),
+                 "max_err": quant_err})
 
     # packed wire path (runtime integration: wire_pack -> wire_unpack with
     # custom VJP; Pallas on TPU, ref oracle here).  max_err compares against
@@ -60,7 +99,7 @@ def main(quick: bool = True) -> dict:
     dense, _ = get_compressor("blockmask")(jax.random.key(0), x, 4.0)
     rows.append({"kernel": "wire_pack+unpack",
                  "shape": f"{n}x{f}->wire {n}x{kept.shape[0] * 128}",
-                 "ref_us": round(t_ref.us_per_call, 1),
+                 "ref_us": round(t_ref.us_per_call, 1), "fused_us": "",
                  "max_err": float(jnp.abs(wired - dense).max())})
 
     # ell spmm
@@ -72,7 +111,7 @@ def main(quick: bool = True) -> dict:
     refa = t_ref.measure(jax.jit(ref.ell_spmm_reference), xs, nbr, w)
     agg = ops.aggregate(xs, nbr, w, interpret=True)
     rows.append({"kernel": "ell_spmm", "shape": f"{ns}->{nd}x{kk}x{ff}",
-                 "ref_us": round(t_ref.us_per_call, 1),
+                 "ref_us": round(t_ref.us_per_call, 1), "fused_us": "",
                  "max_err": float(jnp.abs(agg - refa).max())})
 
     save_rows("kernel_bench", rows)

@@ -16,10 +16,15 @@ its x-coordinate), all on the p2p wire.  Per row it records the budget,
 the transport actually shipped (and its fraction of budget), and
 final/best test accuracy.
 
-``--smoke`` is the CI acceptance check (~2 min): the ``budget``
+``--smoke`` is the CI acceptance check (~3 min): the ``budget``
 controller's accumulated transport must land within 5% of the requested
-bits, and the ``error`` controller's accuracy at the uniform baseline's
-measured budget must be at least the baseline's.
+bits; the ``error`` controller's accuracy at the uniform baseline's
+measured budget must be at least the baseline's; the int4 rate × width
+frontier (``auto:error:<B>:w4``, DESIGN.md §3.8) must drop no more
+block energy than fp32 subset-dropping at equal budget; the realised
+ledger transport must equal the analytic ``transport_bits_quant`` at
+every wire width; and emulated ≡ shard_map at mixed ``[L, Q, Q]``
+rate × width maps.
 
 ``--per-layer`` (DESIGN.md §3.7) adds the per-layer frontier: the same
 controllers told ``auto:<controller>:<B>:per-layer`` plan ``[L, Q, Q]``
@@ -162,6 +167,74 @@ def smoke() -> None:
     assert acc_e + 1e-6 >= acc_u, (
         f"error controller accuracy {acc_e:.4f} fell below the uniform "
         f"baseline {acc_u:.4f} at equal budget")
+
+    # int4 rate × width frontier (DESIGN.md §3.8): at the SAME wire-bit
+    # budget, spending it on int4 payloads buys ~8× the kept lane-blocks,
+    # so the cumulative dropped-block energy must not exceed the fp32
+    # subset-dropping controller's
+    res_q, t_q = _train(g, f"auto:error:{budget:g}:w4", epochs)
+    err_fp32 = res_e.history.comp_err[-1]
+    err_int4 = res_q.history.comp_err[-1]
+    print(f"error ctl @ w4     spent/budget={t_q / budget:.4f}  "
+          f"acc={res_q.history.final_test_acc:.4f}  dropped energy "
+          f"{err_int4:.4g} vs fp32 {err_fp32:.4g}")
+    assert t_q <= 1.05 * budget, (t_q, budget)
+    assert err_int4 <= err_fp32 * (1.0 + 1e-6), (
+        f"int4 rate×width dropped MORE energy than fp32 subset-dropping "
+        f"at equal budget: {err_int4:.6g} > {err_fp32:.6g}")
+
+    # ledger transport = analytic wire bits at EVERY width: one forward
+    # pass per width on the partitioned benchmark graph, realised
+    # per-pair ledger charges against the transport_bits_quant closed
+    # form (w=32 must reproduce the unquantised ledger exactly)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fixed
+    from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                         _packed_pair_k_for)
+    from repro.dist.halo import attach_p2p
+    from repro.graph import partition_graph
+    from repro.nn import GNNConfig, init_gnn
+    from repro.nn.gnn import gnn_forward
+
+    cfg = GNNConfig(conv="sage", in_dim=F, hidden=F,
+                    out_dim=g.num_classes, layers=LAYERS)
+    params = init_gnn(jax.random.key(0), cfg)
+    pg = partition_graph(g, Q, scheme=SCHEME)
+    graph = attach_p2p(pg.device_arrays(), pg)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    rate = 2.0
+    rm = np.full((Q, Q), rate, np.float32)
+    np.fill_diagonal(rm, 1.0)
+    for width in (2, 4, 8, 32):
+        wm = np.full((Q, Q), float(width), np.float32)
+        np.fill_diagonal(wm, 32.0)
+        agg = _make_aggregate_emulated(
+            graph, meta, fixed(rate, compressor="blockmask"), None,
+            jnp.ones((), jnp.float32), jax.random.key(0),
+            packed_k=dict(_packed_pair_k_for(meta, rm)),
+            rate_map=jnp.asarray(rm), width_map=jnp.asarray(wm))
+        _, bits = gnn_forward(params, cfg, graph["features"], agg)
+        transport = float(np.asarray(bits)[2:2 + Q * Q].sum())
+        analytic = 2.0 * float(meta.transport_bits_quant(F, rate, width))
+        assert abs(transport - analytic) <= 1e-6 * analytic, \
+            (width, transport, analytic)
+        print(f"ledger == analytic ok: w={width} {analytic:.0f} bits")
+
+    # emulated ≡ shard_map at mixed [L, Q, Q] rate × width maps, through
+    # the shared conformance harness (≤ 1e-6, asserted per case in the
+    # subprocess)
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tests"))
+    from parity import run_forward_parity
+    out = run_forward_parity(Q, [
+        {"wire": wire, "policy": "fixed:4", "map": "layer",
+         "width_map": "layer", "seed": 0}
+        for wire in ("p2p", "packed")], layers=LAYERS)
+    print(out.strip())
+    assert out.count(" OK ") == 2, out
     print("RATECTL_SMOKE_OK")
 
 

@@ -68,7 +68,8 @@ def compressed_all_gather(x: Array, axis_name: str, *, compressor: Compressor,
 def packed_all_gather(x: Array, axis_name: str, *, key: Array,
                       rate: float | None = None,
                       n_keep: int | None = None,
-                      pair_k: Array | None = None) -> tuple[Array, Array]:
+                      pair_k: Array | None = None,
+                      pair_w: Array | None = None) -> tuple[Array, Array]:
     """All-gather of *packed* boundary activations (DESIGN.md §3.3).
 
     The real reduced-volume wire path: where :func:`compressed_all_gather`
@@ -97,6 +98,15 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     zeroed round trip matches the dense ``blockmask`` at the realised rate
     bitwise).  ``n_keep`` must then be the map's static maximum.
 
+    ``pair_w`` (traced ``[Q, Q]`` receiver × sender bit-widths,
+    DESIGN.md §3.8; requires ``pair_k``) adds the second wire axis at the
+    same per-*sender* granularity: one payload serves every receiver, so
+    sender ``j`` quantises its surviving packed columns at ``max_i
+    pair_w[i, j]`` bits (the most demanding receiver's width) via the
+    straight-through codec, and the collective count charges the payload
+    at that width plus the fp32 block scales
+    (:func:`repro.kernels.ops.per_block_wire_bits`).
+
     Returns ``(gathered [Q, B, F], collective_bits)``.  ``collective_bits``
     counts the buffer the collective physically moves — every worker's
     packed payload, halo-padding rows included, crossing to ``Q - 1`` peers
@@ -105,10 +115,13 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     equivalent ``halo_demand × K·128`` instead, so the two are comparable
     across wire formats (DESIGN.md §3.2–3.3).
     """
-    from repro.kernels.ops import wire_pack, wire_unpack
+    from repro.kernels.ops import (per_block_wire_bits, wire_pack,
+                                   wire_quant, wire_unpack)
     from repro.kernels.varco_pack import (LANE, worker_block_maps,
                                           worker_block_maps_pos)
 
+    if pair_w is not None and pair_k is None:
+        raise ValueError("pair_w needs pair_k (widths ride the rate map)")
     f = x.shape[-1]
     if f % LANE:
         raise ValueError(f"packed wire needs F % {LANE} == 0, got F={f}")
@@ -133,17 +146,28 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
         pos_kept = pos_all[idx][kept_all[idx]]               # [K]
         cmask = (pos_kept < k_send[idx]).astype(x.dtype)
         packed = packed * jnp.repeat(cmask, LANE)[None, :]
+        if pair_w is not None:
+            off_w = jnp.where(jnp.eye(q, dtype=bool), 0.0, pair_w)
+            w_send = jnp.max(off_w, axis=0)                  # [Q]
+            w_send = jnp.where(w_send > 0.0, w_send, 32.0)   # Q==1: no wire
+            packed = wire_quant(packed, w_send[idx])
     gathered = lax.all_gather(packed, axis_name)           # [Q, B, K*128]
     halo = jax.vmap(wire_unpack)(gathered, kept_all, inv_all)
-    payload = packed.size * jnp.finfo(packed.dtype).bits
-    wire_bits = jnp.asarray(payload * q * (q - 1), jnp.float32)
+    if pair_w is not None:
+        payload = packed.shape[0] * n_keep * \
+            per_block_wire_bits(w_send[idx])
+        wire_bits = lax.psum(payload, axis_name) * (q - 1)
+    else:
+        payload = packed.size * jnp.finfo(packed.dtype).bits
+        wire_bits = jnp.asarray(payload * q * (q - 1), jnp.float32)
     return halo, wire_bits
 
 
 def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
                       axis_name: str, *, key: Array | None = None,
                       n_keep: int | None = None,
-                      pair_k: Array | None = None) -> tuple[Array, Array]:
+                      pair_k: Array | None = None,
+                      pair_w: Array | None = None) -> tuple[Array, Array]:
     """Neighbor-only p2p halo exchange over a ``ppermute`` ring (§3.5).
 
     Where :func:`packed_all_gather` ships every worker's whole boundary
@@ -178,6 +202,14 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
     travels at its own rate.  ``n_keep`` must then be the map's static
     maximum, and ``wire_bits`` charges each pair its own kept columns.
 
+    ``pair_w`` (traced ``[Q, Q]`` receiver × sender bit-widths, requires
+    ``pair_k``; DESIGN.md §3.8) quantises hop ``d``'s buffer at receiver
+    ``(j+d) mod Q``'s own width before the ``ppermute`` — the p2p wire
+    realises the full 2-D rate × width map *exactly* per ordered pair —
+    and ``wire_bits`` charges each pair its kept blocks at
+    :func:`repro.kernels.ops.per_block_wire_bits` (payload at width +
+    fp32 scales; width 32 reproduces the fp32 charge bit-for-bit).
+
     Returns ``(compact, wire_bits)``: ``compact [(Q-1)·H, F]`` stacks the
     received hops (offset ``d`` at rows ``[(d-1)·H, d·H)``; ``[1, F]``
     zeros when ``Q == 1``), and ``wire_bits`` counts the genuine rows
@@ -186,7 +218,7 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
     """
     hops, wire_bits = neighbor_exchange_start(
         publish, send_slot, send_valid, axis_name, key=key, n_keep=n_keep,
-        pair_k=pair_k)
+        pair_k=pair_k, pair_w=pair_w)
     compact = neighbor_exchange_finish(hops, axis_name, key=key,
                                        n_keep=n_keep, f=publish.shape[-1])
     return compact, wire_bits
@@ -196,7 +228,8 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
                             send_valid: Array, axis_name: str, *,
                             key: Array | None = None,
                             n_keep: int | None = None,
-                            pair_k: Array | None = None
+                            pair_k: Array | None = None,
+                            pair_w: Array | None = None
                             ) -> tuple[Array, Array]:
     """Issue half of :func:`neighbor_exchange`: pack the boundary block
     once, mask each hop to its pair's kept columns, and run all ``Q - 1``
@@ -213,6 +246,8 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
     """
     if pair_k is not None and n_keep is None:
         raise ValueError("pair_k needs n_keep (the map's static maximum)")
+    if pair_w is not None and pair_k is None:
+        raise ValueError("pair_w needs pair_k (widths ride the rate map)")
     q = _axis_size(axis_name)
     f = publish.shape[-1]
     if q == 1:
@@ -250,8 +285,15 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
             k_pair = pair_k[recv, me]
             cmask = (pos_kept_me < k_pair).astype(rows.dtype)
             rows = rows * jnp.repeat(cmask, LANE)[None, :]
+            if pair_w is not None:
+                from repro.kernels.ops import (per_block_wire_bits,
+                                               wire_quant)
+                rows = wire_quant(rows, pair_w[recv, me])
+                blk_bits = per_block_wire_bits(pair_w[recv, me])
+            else:
+                blk_bits = LANE * 32.0
             bits = bits + jnp.sum(send_valid[d - 1]) * \
-                k_pair.astype(jnp.float32) * LANE * 32.0
+                k_pair.astype(jnp.float32) * blk_bits
         rows = lax.ppermute(rows, axis_name,
                             [(j, (j + d) % q) for j in range(q)])
         hops.append(rows)

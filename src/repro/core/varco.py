@@ -31,6 +31,11 @@ MODES = ("full", "none", "fixed", "varco", "auto")
 #: ``repro.dist.ratectl.base.CONTROLLERS`` (pinned by tests)
 AUTO_CONTROLLERS = ("budget", "error", "stale")
 
+#: supported wire storage bit-widths (``repro.kernels.ops.WIRE_WIDTHS``):
+#: 2/4/8 quantised, 32 exact fp32 — kept literal here so the policy layer
+#: stays import-light (pinned in sync by tests/test_ratectl.py)
+WIRE_WIDTHS = (2, 4, 8, 32)
+
 
 @dataclasses.dataclass(frozen=True)
 class CommPolicy:
@@ -51,12 +56,26 @@ class CommPolicy:
     #: of one ``[Q, Q]`` map shared by every layer (DESIGN.md §3.7);
     #: spelled ``auto:<controller>:<bits>:per-layer``
     per_layer: bool = False
+    #: auto mode only: lowest bit-width the controller may quantise a
+    #: pair's wire payload to (DESIGN.md §3.8) — 32 keeps the wire exact
+    #: fp32 (no quantised codec in the compiled step), 8/4/2 let the
+    #: controller water-fill rate × width jointly down to that floor;
+    #: spelled ``auto:<controller>:<bits>:w<max_width>``
+    max_width: int = 32
 
     def __post_init__(self):
         if self.per_layer and self.mode != "auto":
             raise ValueError(
                 f"per_layer rate planning is a closed-loop (auto) feature; "
                 f"mode {self.mode!r} plans one scalar rate per step")
+        if self.max_width not in WIRE_WIDTHS:
+            raise ValueError(
+                f"max_width must be one of {WIRE_WIDTHS} (supported wire "
+                f"storage widths), got {self.max_width!r}")
+        if self.max_width < 32 and self.mode != "auto":
+            raise ValueError(
+                f"quantised wire widths are planned closed-loop per pair; "
+                f"max_width < 32 needs mode 'auto', got mode {self.mode!r}")
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
         if self.mode in ("fixed", "varco") and self.scheduler is None:
@@ -84,10 +103,15 @@ class CommPolicy:
 
         ``full`` | ``none`` | ``fixed:<r>`` | ``varco:linear:<a>`` |
         ``varco:exp`` | ``varco:cosine`` | ``varco:step:<R>`` |
-        ``auto:<controller>:<budget-bits>[:per-layer]`` with controller
-        in ``budget`` / ``error`` / ``stale`` (e.g. ``auto:budget:2e9``;
-        the ``per-layer`` suffix plans ``[L, Q, Q]`` per-layer rate
-        tensors, DESIGN.md §3.7).
+        ``auto:<controller>:<budget-bits>[:w<width>][:per-layer]`` with
+        controller in ``budget`` / ``error`` / ``stale`` (e.g.
+        ``auto:budget:2e9``; the ``per-layer`` suffix plans ``[L, Q, Q]``
+        per-layer rate tensors, DESIGN.md §3.7; ``w<width>`` with width
+        in ``2`` / ``4`` / ``8`` lets the controller quantise pair
+        payloads down to that bit-width, DESIGN.md §3.8 — the two
+        suffixes compose in either order).  ``str(policy)`` returns the
+        canonical spec (``w`` before ``per-layer``) and round-trips
+        through ``parse`` for every documented mode.
         """
         spec = spec.strip().lower()
         if spec == "full":
@@ -103,21 +127,55 @@ class CommPolicy:
                               schedulers.parse(rest or "linear:5", total_steps),
                               compressor or "randmask")
         if kind == "auto":
-            ctl, _, budget = rest.partition(":")
-            budget, sep, suffix = budget.partition(":")
-            if not ctl or not budget:
+            parts = rest.split(":")
+            if len(parts) < 2 or not parts[0] or not parts[1]:
                 raise ValueError(
                     f"auto spec is auto:<controller>:<budget-bits>"
-                    f"[:per-layer], got {spec!r}")
-            if sep and suffix != "per-layer":
-                raise ValueError(
-                    f"unknown auto suffix {suffix!r} in {spec!r} "
-                    f"(only 'per-layer' is defined)")
+                    f"[:w<width>][:per-layer], got {spec!r}")
+            ctl, budget = parts[0], parts[1]
+            per_layer = False
+            max_width = 32
+            for suffix in parts[2:]:
+                if suffix == "per-layer":
+                    per_layer = True
+                elif len(suffix) > 1 and suffix[0] == "w" \
+                        and suffix[1:].isdigit():
+                    w = int(suffix[1:])
+                    if w not in WIRE_WIDTHS:
+                        raise ValueError(
+                            f"wire width must be one of {WIRE_WIDTHS}, "
+                            f"got w{w} in {spec!r}")
+                    max_width = w
+                else:
+                    raise ValueError(
+                        f"unknown auto suffix {suffix!r} in {spec!r} "
+                        f"('w<width>' and 'per-layer' are defined)")
             return CommPolicy("auto", compressor_name=compressor or
                               "blockmask", controller=ctl,
                               budget_bits=float(budget),
-                              per_layer=bool(suffix))
+                              per_layer=per_layer, max_width=max_width)
         raise ValueError(f"unknown comm spec {spec!r}")
+
+    def __str__(self) -> str:
+        """Canonical parseable spec: ``CommPolicy.parse(str(p)) == p`` for
+        every constructible policy, and ``str(CommPolicy.parse(s)) == s``
+        for every canonical spec (``w`` suffix before ``per-layer``)."""
+        if self.mode in ("full", "none"):
+            return self.mode
+        if self.mode == "auto":
+            s = f"auto:{self.controller}:{self.budget_bits:g}"
+            if self.max_width < 32:
+                s += f":w{self.max_width}"
+            if self.per_layer:
+                s += ":per-layer"
+            return s
+        if self.mode == "fixed":
+            return self.scheduler.name              # "fixed:<r>"
+        name = self.scheduler.name                  # varco schedules
+        for prefix, canon in (("linear:a=", "linear:"), ("step:R=", "step:")):
+            if name.startswith(prefix):
+                return f"varco:{canon}{name[len(prefix):]}"
+        return f"varco:{name}"
 
     # -- queries -------------------------------------------------------------
 
@@ -148,8 +206,9 @@ class CommPolicy:
             return self.mode
         if self.mode == "auto":
             pl = ",per-layer" if self.per_layer else ""
+            w = f",w{self.max_width}" if self.max_width < 32 else ""
             return (f"auto({self.controller},{self.budget_bits:g}b,"
-                    f"{self.compressor_name}{pl})")
+                    f"{self.compressor_name}{w}{pl})")
         return f"{self.mode}({self.scheduler.name},{self.compressor_name})"
 
 

@@ -33,8 +33,9 @@ from repro.dist.halo import (HaloSpec, attach_p2p, build_halo_spec,
                              build_reverse_ell, ell_arrays, halo_arrays)
 from repro.dist.ratectl import (RateController, RatePlan, budget_controller,
                                 error_controller, init_halo_cache,
-                                make_auto_train_step, make_controller,
-                                make_pacing, stale_controller)
+                                init_wire_residuals, make_auto_train_step,
+                                make_controller, make_pacing,
+                                stale_controller)
 from repro.dist.sharding import (activation_sharding, batch_spec, cache_spec,
                                  data_axes, dispatch_groups, maybe_shard,
                                  param_shardings, param_spec,
@@ -46,8 +47,8 @@ __all__ = [
     "HaloSpec", "attach_p2p", "build_halo_spec", "build_reverse_ell",
     "ell_arrays", "halo_arrays",
     "RateController", "RatePlan", "budget_controller", "error_controller",
-    "init_halo_cache", "make_auto_train_step", "make_controller",
-    "make_pacing", "stale_controller",
+    "init_halo_cache", "init_wire_residuals", "make_auto_train_step",
+    "make_controller", "make_pacing", "stale_controller",
     "make_dp_mesh", "make_varco_dp_train_step",
     "activation_sharding", "batch_spec", "cache_spec", "data_axes",
     "dispatch_groups", "maybe_shard", "param_shardings", "param_spec",

@@ -80,7 +80,9 @@ from repro.core.compression import Compressor
 from repro.core.varco import FULL_COMM, CommPolicy
 from repro.dist.sharding import worker_graph_shardings
 from repro.graph.partition import PartitionedGraph
-from repro.kernels.ops import ell_aggregate, wire_pack, wire_unpack
+from repro.kernels.ops import (WIRE_WIDTHS, ell_aggregate,
+                               per_block_wire_bits, wire_pack, wire_quant,
+                               wire_unpack)
 from repro.kernels.varco_pack import (LANE, worker_block_maps,
                                       worker_block_maps_pos)
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
@@ -242,6 +244,20 @@ class DistMeta:
         width = self._wire_width(feat, rate)
         return jnp.asarray(self.halo_demand * width * 32.0, jnp.float32)
 
+    def transport_bits_quant(self, feat: int, rate: float = 1.0,
+                             width: int = 32) -> jnp.ndarray:
+        """:meth:`transport_bits` on a quantised wire (DESIGN.md §3.8):
+        per needed boundary row, each of the ``K`` kept lane-blocks
+        charges ``128·width`` payload bits plus one fp32 scale.
+        ``width >= 32`` reproduces :meth:`transport_bits` exactly (fp32
+        ships no scales) — the analytic counterpart the quant smoke pins
+        the measured ledger against."""
+        if width >= 32:
+            return self.transport_bits(feat, rate)
+        k = self.packed_width(feat, rate) // LANE
+        return jnp.asarray(
+            self.halo_demand * k * (LANE * width + 32.0), jnp.float32)
+
     def collective_bits(self, feat: int, rate: float = 1.0) -> float:
         """Bits the wire format physically moves per exchange, padding
         included — the honest buffer-level volume the benchmarks compare.
@@ -356,14 +372,26 @@ def _keep_of(f: int, rate, packed_k: dict | None) -> int:
     return max(int(n_blocks / max(float(rate), 1.0)), 1)
 
 
+def _exchanged_nbs(meta: DistMeta) -> tuple:
+    """Sorted distinct lane-block counts of every exchanged feature width
+    (``feat_dim`` plus each layer's input width) — THE shared domain of
+    every bounded-recompile static-fact map (`_packed_k_for`,
+    `_packed_pair_k_for`, `_packed_pair_w_for`): each quantises its traced
+    operand to one static value per entry of this tuple, so the number of
+    distinct compiled variants is bounded by the tuple's value ranges, not
+    by the operand's."""
+    return tuple(sorted({d // LANE for d in (meta.feat_dim,
+                                             *meta.layer_dims)}))
+
+
 def _packed_k_for(meta: DistMeta, rate_f: float) -> tuple:
     """Quantise a concrete rate to the kept-block count of every exchanged
     width (``layer_dims`` = each layer's input width) — the *only* static
     fact the packed wire needs per step, so an annealing schedule triggers
     at most ``Π n_blocks`` recompiles (a handful) instead of one per
     distinct rate value."""
-    nbs = sorted({d // LANE for d in (meta.feat_dim, *meta.layer_dims)})
-    return tuple((nb, max(int(nb / max(rate_f, 1.0)), 1)) for nb in nbs)
+    return tuple((nb, max(int(nb / max(rate_f, 1.0)), 1))
+                 for nb in _exchanged_nbs(meta))
 
 
 # ---------------------------------------------------------------------------
@@ -403,13 +431,48 @@ def _packed_pair_k_for(meta: DistMeta, rate_map) -> tuple:
     q = meta.q
     rm = rm.reshape(-1, q, q)          # [L, Q, Q] (L == 1 for pair maps)
     off = ~np.eye(q, dtype=bool) if q > 1 else np.zeros((1, 1), bool)
-    nbs = sorted({d // LANE for d in (meta.feat_dim, *meta.layer_dims)})
     out = []
-    for nb in nbs:
+    for nb in _exchanged_nbs(meta):
         k = np.maximum(np.floor(nb / rm), 1.0)
         kmax = int(k[:, off].max()) if q > 1 else 1
         out.append((nb, min(max(kmax, 1), nb)))
     return tuple(out)
+
+
+def _snap_width(v) -> int:
+    """Snap a planned bit-width to the nearest supported storage width from
+    above: {2, 4, 8} quantised wire widths, else 32 (exact fp32).  Snapping
+    *up* keeps realised error at or below the planner's estimate — the
+    width analogue of `_pair_keep`'s floor-to-k rule."""
+    v = float(v)
+    for w in WIRE_WIDTHS[:-1]:
+        if v <= w:
+            return w
+    return 32
+
+
+def _packed_pair_w_for(meta: DistMeta, width_map) -> tuple:
+    """Quantise a concrete width map to the sorted tuple of distinct
+    sub-32 storage widths it realises off-diagonal — `_packed_pair_k_for`'s
+    bounded-recompile contract for the width axis.
+
+    The tuple is the jit-static fact the step function keys its compiled
+    variants on: ``()`` (no pair quantises) compiles the exact pre-
+    quantisation program — the quantise/dequantise code never enters the
+    jaxpr — and at most ``2^|{2,4,8}|`` distinct tuples exist, so an
+    annealing width schedule recompiles a bounded handful of times no
+    matter how many distinct planned widths it visits.  Accepts ``[Q, Q]``
+    or per-layer ``[L, Q, Q]`` maps (self-pairs never ship, so the
+    diagonal is ignored)."""
+    if width_map is None:
+        return ()
+    q = meta.q
+    if q <= 1:
+        return ()
+    wm = np.asarray(width_map, np.float64).reshape(-1, q, q)
+    off = ~np.eye(q, dtype=bool)
+    ws = sorted({_snap_width(v) for v in wm[:, off].ravel()})
+    return tuple(w for w in ws if w < 32)
 
 
 def _rate_tensor_layers(meta: DistMeta, rate_map) -> int:
@@ -470,16 +533,24 @@ def _pair_hop_energy(publish: jnp.ndarray, slot: jnp.ndarray,
     return jax.vmap(per_worker)(be, slot, valid)       # [Q, D, nb]
 
 
-def _pair_ledger(meta: DistMeta, f: int, rate_map, width_pairs,
+def _pair_ledger(meta: DistMeta, f: int, rate_map, row_bits,
                  pair_err, pair_delta, live=None, li: int = 0,
-                 n_layers: int = 1) -> jnp.ndarray:
+                 n_layers: int = 1, width_map=None) -> jnp.ndarray:
     """Flat per-pair ledger vector of one exchange:
     ``[analytic, transport, layer_transport (L·Q²), layer_err (L·Q²),
     layer_delta (L·Q²)]`` (length ``2 + 3·L·Q²``).
 
-    ``width_pairs [Q, Q]`` is each pair's realised on-wire column count;
-    ``live`` (0/1, default all-1) zeroes skipped pairs (the ``stale``
-    controller's reused hops ship nothing, forward or backward).
+    ``row_bits [Q, Q]`` is each pair's realised on-wire bits *per shipped
+    row* — ``kept columns · 32`` on the fp32 wire, ``kept blocks ·
+    per_block_wire_bits(w)`` (low-bit payload + one fp32 scale per block,
+    the PR-1 accounting convention) when the pair quantises; ``live``
+    (0/1, default all-1) zeroes skipped pairs (the ``stale`` controller's
+    reused hops ship nothing, forward or backward).
+
+    ``width_map [Q, Q]`` scales the *analytic* column by each pair's
+    ``w/32`` payload factor (scale overhead excluded — analytic is the
+    paper's idealised element count, transport the wire truth), making
+    rate × width one joint 2-D allocation on both ledger columns.
 
     ``li``/``n_layers`` place this exchange's pair blocks on the per-layer
     ledger axis (DESIGN.md §3.7): each block lands in layer ``li``'s
@@ -490,8 +561,12 @@ def _pair_ledger(meta: DistMeta, f: int, rate_map, width_pairs,
     rows = jnp.asarray(meta.pair_table(), jnp.float32)
     live = jnp.ones_like(rows) if live is None else live
     r = jnp.maximum(jnp.asarray(rate_map, jnp.float32), 1.0)
-    analytic = jnp.sum(rows * live * f * 32.0 / r)
-    pair_t = rows * live * width_pairs * 32.0
+    w_factor = 1.0
+    if width_map is not None:
+        w = jnp.asarray(width_map, jnp.float32)
+        w_factor = jnp.where(w >= 32.0, 1.0, w / 32.0)
+    analytic = jnp.sum(rows * live * f * 32.0 / r * w_factor)
+    pair_t = rows * live * row_bits
 
     def embed(block):
         if n_layers == 1:
@@ -508,7 +583,9 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                              compressor: Compressor | None, rate, key,
                              packed_k: dict | None = None, rate_map=None,
                              skip=None, cache=None,
-                             cache_out: list | None = None):
+                             cache_out: list | None = None,
+                             width_map=None, resid=None,
+                             resid_out: list | None = None):
     """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
 
     Numerically identical to the shard_map path: the all-gather becomes a
@@ -537,6 +614,21 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     ones and charges zero wire bits; the fresh buffers land in
     ``cache_out`` (one ``[Q, D, H, F]`` entry per exchange call).
 
+    ``width_map`` (traced ``[Q, Q]`` or ``[L, Q, Q]``, same selection rule
+    as ``rate_map``) quantises each pair's wire payload to its planned
+    bit-width (DESIGN.md §3.8): the p2p wire quantises every hop at its
+    *exact* per-pair width through the straight-through
+    :func:`repro.kernels.ops.wire_quant`; the packed all-gather wire — one
+    payload per sender — quantises at each sender's max width over its
+    receivers (serve the most demanding, like ``k_send``).  The ledger
+    charges the true ``per_block_wire_bits`` (payload at width + one fp32
+    scale per kept block).  ``resid``/``resid_out`` are the error-feedback
+    accumulators (p2p only): call ``i``'s residual ``[Q, D, H, F]`` is
+    added to the pre-quantisation payload and the fresh quantisation error
+    lands in ``resid_out``, so the compression error is re-shipped next
+    step instead of lost (gradients see only the STE path — residual
+    injection is ``stop_gradient``).
+
     The returned oracle carries the split-phase API of the pipelined
     forward (DESIGN.md §3.7): ``aggregate.start(li, x)`` issues the
     pack + exchange and returns ``(token, bits)``;
@@ -552,6 +644,13 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         raise ValueError("per-pair rate maps need wire='packed' or 'p2p'; "
                          "the dense wire keeps the scalar path")
     n_layers = _rate_tensor_layers(meta, rate_map)
+    if width_map is not None:
+        if rate_map is None:
+            raise ValueError("per-pair width maps ride the rate-map wire; "
+                             "pass rate_map alongside width_map")
+        _rate_tensor_layers(meta, width_map)   # validate [L, Q, Q] shape
+    if resid is not None and not p2p_wire:
+        raise ValueError("error-feedback residuals are a p2p-wire feature")
     calls = itertools.count()
 
     def pair_stats_p2p(publish, pos_all, k_used):
@@ -571,13 +670,15 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         (the only data dependence on the wire)."""
         call = next(calls)
         f = x.shape[-1]
-        rm = None
+        rm = wm = None
         lix = 0
         if rate_map is not None:
             # select by RANK, not by n_layers: a [1, Q, Q] tensor (1-layer
             # model under a per-layer controller) must still unsqueeze
             rm = rate_map if jnp.ndim(rate_map) == 2 else rate_map[li]
             lix = 0 if n_layers == 1 else li
+        if width_map is not None:
+            wm = width_map if jnp.ndim(width_map) == 2 else width_map[li]
         if not policy.communicates:                    # No-Comm baseline
             return None, jnp.zeros((2,), jnp.float32)
 
@@ -605,7 +706,28 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                     graph["p2p_send_valid"])         # [Q, D, H, K·128]
                 cmask = (pos_kept[:, None, :] <
                          k_jd[..., None]).astype(x.dtype)         # [Q, D, K]
-                hops = hops * jnp.repeat(cmask, LANE, axis=-1)[:, :, None, :]
+                cmask_l = jnp.repeat(cmask, LANE, axis=-1)[:, :, None, :]
+                hops = hops * cmask_l
+                if wm is not None:
+                    w_jd = wm[rv, jj]                             # [Q, D]
+                    if resid is not None:
+                        # error feedback: pack last step's residual onto
+                        # this call's kept set, mask to the pair's live
+                        # columns/rows, inject before quantising
+                        r_pack = jax.vmap(lambda rq, kk, iv: jax.vmap(
+                            lambda r_: wire_pack(r_, kk, iv))(rq))(
+                            resid[call], kept, inv)   # [Q, D, H, K·128]
+                        r_pack = r_pack * cmask_l * \
+                            graph["p2p_send_valid"][..., None]
+                        hops = hops + jax.lax.stop_gradient(r_pack)
+                    hops_q = wire_quant(hops, w_jd[:, :, None, None])
+                    if resid_out is not None:
+                        err = jax.lax.stop_gradient(hops - hops_q)
+                        resid_out.append(jax.vmap(
+                            lambda eq, kk, iv: jax.vmap(
+                                lambda e_: wire_unpack(e_, kk, iv))(eq))(
+                            err, kept, inv))          # [Q, D, H, F]
+                    hops = hops_q
                 sent = jax.vmap(lambda hp, kk, iv: jax.vmap(
                     lambda h_: wire_unpack(h_, kk, iv))(hp))(
                     hops, kept, inv)                  # [Q, D, H, F]
@@ -622,9 +744,13 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                     live = 1.0 - skip
                 if cache_out is not None:
                     cache_out.append(sent)
-                bits = _pair_ledger(meta, f, rm, k_pairs * LANE,
+                row_bits = k_pairs.astype(jnp.float32) * (
+                    per_block_wire_bits(wm) if wm is not None
+                    else LANE * 32.0)
+                bits = _pair_ledger(meta, f, rm, row_bits,
                                     pair_err, pair_delta, live=live,
-                                    li=lix, n_layers=n_layers)
+                                    li=lix, n_layers=n_layers,
+                                    width_map=wm)
             else:
                 wire_width = None
                 if policy.compresses:
@@ -671,13 +797,25 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
             packed = jax.vmap(wire_pack)(sent, kept, inv)
             cmask = (pos_kept < k_send[:, None]).astype(x.dtype)  # [Q, K]
             packed = packed * jnp.repeat(cmask, LANE, axis=-1)[:, None, :]
+            w_send = None
+            if wm is not None:
+                # one payload per sender: quantise at the max width over
+                # its receivers (serve the most demanding), like k_send
+                off_w = jnp.where(jnp.eye(q, dtype=bool), 0.0, wm)
+                w_send = jnp.max(off_w, axis=0)                   # [Q]
+                w_send = jnp.where(w_send > 0.0, w_send, 32.0)
+                packed = wire_quant(packed, w_send[:, None, None])
             sent = jax.vmap(wire_unpack)(packed, kept, inv)
             k_jd = jnp.broadcast_to(k_send[:, None], (q, max(q - 1, 1)))
             pair_err = pair_stats_p2p(pre, pos_all, k_jd)
-            width_pairs = jnp.broadcast_to((k_send * LANE)[None, :], (q, q))
-            bits = _pair_ledger(meta, f, rm, width_pairs, pair_err,
+            row_bits = jnp.broadcast_to(
+                (k_send.astype(jnp.float32) *
+                 (per_block_wire_bits(w_send) if wm is not None
+                  else LANE * 32.0))[None, :], (q, q))
+            bits = _pair_ledger(meta, f, rm, row_bits, pair_err,
                                 jnp.zeros((q, q), jnp.float32),
-                                li=lix, n_layers=n_layers)
+                                li=lix, n_layers=n_layers,
+                                width_map=wm)
         elif packed_wire:
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE
@@ -747,7 +885,7 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
 def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                           compressor: Compressor | None, rate, key,
                           axis: str = AXIS, packed_k: dict | None = None,
-                          rate_map=None):
+                          rate_map=None, width_map=None):
     """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``).
 
     Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
@@ -771,6 +909,15 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     ``2 + 3·L·Q²``, mirroring the emulated backend bit for bit
     (DESIGN.md §3.7).
 
+    ``width_map`` threads the per-pair bit-widths into the collectives'
+    ``pair_w`` channel (DESIGN.md §3.8): ``neighbor_exchange_start``
+    quantises each hop at its exact per-pair width,
+    ``packed_all_gather`` at each sender's receiver-max — the same
+    sender-side arithmetic as the emulated backend, so mixed rate × width
+    maps stay bitwise-parity across backends.  Error feedback is an
+    emulated-backend feature (residual state is per-exchange-call host
+    state); the parity suite runs without it.
+
     Carries the same ``start``/``complete`` split-phase attributes as the
     emulated oracle; on this backend ``start`` ends at the ``ppermute``
     (``neighbor_exchange_start``) and ``complete`` begins at the unpack
@@ -784,6 +931,11 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
         raise ValueError("per-pair rate maps need wire='packed' or 'p2p'; "
                          "the dense wire keeps the scalar path")
     n_layers = _rate_tensor_layers(meta, rate_map)
+    if width_map is not None:
+        if rate_map is None:
+            raise ValueError("per-pair width maps ride the rate-map wire; "
+                             "pass rate_map alongside width_map")
+        _rate_tensor_layers(meta, width_map)   # validate [L, Q, Q] shape
     calls = itertools.count()
 
     def pair_err_shard(publish_pre, pos_me, k_d):
@@ -806,12 +958,14 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
         tokens carry the decoded halo buffer."""
         call = next(calls)
         f = x.shape[-1]
-        rm = None
+        rm = wm = None
         lix = 0
         if rate_map is not None:
             # select by RANK, not by n_layers (see the emulated backend)
             rm = rate_map if jnp.ndim(rate_map) == 2 else rate_map[li]
             lix = 0 if n_layers == 1 else li
+        if width_map is not None:
+            wm = width_map if jnp.ndim(width_map) == 2 else width_map[li]
         if not policy.communicates:
             return None, jnp.zeros((2,), jnp.float32)
         xq = x[0]
@@ -827,15 +981,19 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                 hops, _ = neighbor_exchange_start(
                     publish, graph["p2p_send_slot"][0],
                     graph["p2p_send_valid"][0], axis, key=k_call,
-                    n_keep=n_keep, pair_k=k_pairs)
+                    n_keep=n_keep, pair_k=k_pairs, pair_w=wm)
                 me = lax.axis_index(axis)
                 _, _, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
                 k_d = k_pairs[(me + jnp.arange(1, max(q, 2))) % q, me]
                 pair_err = pair_err_shard(publish, pos_all[me], k_d)
-                bits = _pair_ledger(meta, f, rm, k_pairs * LANE,
+                row_bits = k_pairs.astype(jnp.float32) * (
+                    per_block_wire_bits(wm) if wm is not None
+                    else LANE * 32.0)
+                bits = _pair_ledger(meta, f, rm, row_bits,
                                     pair_err,
                                     jnp.zeros((q, q), jnp.float32),
-                                    li=lix, n_layers=n_layers)
+                                    li=lix, n_layers=n_layers,
+                                    width_map=wm)
             else:
                 n_keep = wire_width = k_call = None
                 if policy.compresses:
@@ -858,7 +1016,8 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             k_call = jax.random.fold_in(key, call)
             k_pairs = _pair_keep(nb, rm, n_keep)
             halo, _ = packed_all_gather(sent, axis, n_keep=n_keep,
-                                        key=k_call, pair_k=k_pairs)
+                                        key=k_call, pair_k=k_pairs,
+                                        pair_w=wm)
             off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
             k_send = jnp.maximum(jnp.max(off, axis=0), 1)
             me = lax.axis_index(axis)
@@ -867,10 +1026,19 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             if "p2p_send_slot" in graph:
                 k_d = jnp.broadcast_to(k_send[me], (max(q - 1, 1),))
                 pair_err = pair_err_shard(sent, pos_all[me], k_d)
-            width_pairs = jnp.broadcast_to((k_send * LANE)[None, :], (q, q))
-            bits = _pair_ledger(meta, f, rm, width_pairs, pair_err,
+            w_send = None
+            if wm is not None:
+                off_w = jnp.where(jnp.eye(q, dtype=bool), 0.0, wm)
+                w_send = jnp.max(off_w, axis=0)
+                w_send = jnp.where(w_send > 0.0, w_send, 32.0)
+            row_bits = jnp.broadcast_to(
+                (k_send.astype(jnp.float32) *
+                 (per_block_wire_bits(w_send) if wm is not None
+                  else LANE * 32.0))[None, :], (q, q))
+            bits = _pair_ledger(meta, f, rm, row_bits, pair_err,
                                 jnp.zeros((q, q), jnp.float32),
-                                li=lix, n_layers=n_layers)
+                                li=lix, n_layers=n_layers,
+                                width_map=wm)
         elif packed_wire:
             n_keep = _keep_of(f, rate, packed_k)
             wire_width = n_keep * LANE

@@ -33,11 +33,14 @@ Example::
 
 from repro.dist.ratectl.base import (CONTROLLERS, Pacing, RateController,
                                      RatePlan, allowance, make_pacing,
-                                     rate_of_allowance, sustainable_cap,
-                                     uniform_layer_plan, uniform_plan,
-                                     waterfill)
+                                     rate_of_allowance, refine_widths,
+                                     sustainable_cap, uniform_layer_plan,
+                                     uniform_plan, waterfill,
+                                     width_candidates, width_cost,
+                                     width_eps, widths_map)
 from repro.dist.ratectl.budget import budget_controller
 from repro.dist.ratectl.driver import (exchange_widths, init_halo_cache,
+                                       init_wire_residuals,
                                        layer_exchange_widths,
                                        make_auto_train_step, make_controller)
 from repro.dist.ratectl.error import error_controller
@@ -45,9 +48,10 @@ from repro.dist.ratectl.stale import stale_controller
 
 __all__ = [
     "CONTROLLERS", "Pacing", "RateController", "RatePlan", "allowance",
-    "make_pacing", "rate_of_allowance", "sustainable_cap",
+    "make_pacing", "rate_of_allowance", "refine_widths", "sustainable_cap",
     "uniform_layer_plan", "uniform_plan",
+    "width_candidates", "width_cost", "width_eps", "widths_map",
     "budget_controller", "error_controller", "stale_controller", "waterfill",
-    "exchange_widths", "init_halo_cache", "layer_exchange_widths",
-    "make_auto_train_step", "make_controller",
+    "exchange_widths", "init_halo_cache", "init_wire_residuals",
+    "layer_exchange_widths", "make_auto_train_step", "make_controller",
 ]

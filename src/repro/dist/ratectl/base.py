@@ -49,21 +49,32 @@ from typing import Any, Callable, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.varco import WIRE_WIDTHS
+
 #: controller names accepted by ``CommPolicy.parse("auto:<name>:<bits>")``
 CONTROLLERS = ("budget", "error", "stale")
 
+#: VPU lane width — one fp32 scale travels per kept lane-block of a
+#: quantised pair (``repro.kernels.ops.per_block_wire_bits``)
+LANE = 128
+
 
 class RatePlan(NamedTuple):
-    """One step's control decision: per-pair rates + per-pair hop skips.
+    """One step's control decision: per-pair rates + hop skips + widths.
 
     ``rates [Q, Q]`` (receiver × sender, f32, diagonal 1) are compression
     ratios ``>= 1``; ``skip [Q, Q]`` (0/1 f32) marks pairs whose hop is
     served from the receiver's cached halo buffer instead of the wire
-    (``stale`` controller; all-zero for the others).
+    (``stale`` controller; all-zero for the others); ``widths`` (``None``
+    or ``[Q, Q]`` / ``[L, Q, Q]`` f32, diagonal 32) are per-pair wire
+    bit-widths — ``None`` (every non-quantising plan) keeps the exact
+    fp32 wire and compiles the pre-quantisation step program
+    (DESIGN.md §3.8).
     """
 
     rates: jnp.ndarray
     skip: jnp.ndarray
+    widths: jnp.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,6 +273,86 @@ def rate_of_allowance(p: Pacing, bits) -> jnp.ndarray:
     return jnp.clip(r, jnp.maximum(p.c_min, 1.0), p.c_max)
 
 
+# ---------------------------------------------------------------------------
+# Bit-width selection: the second wire axis (DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+
+
+def width_candidates(max_width: int) -> tuple[int, ...]:
+    """Widths a controller may assign, most precise first: every supported
+    storage width from 32 (exact fp32) down to the policy floor
+    ``CommPolicy.max_width``.  ``(32,)`` — the default — means the width
+    axis is off and plans carry ``widths=None``."""
+    return tuple(w for w in sorted(WIRE_WIDTHS, reverse=True)
+                 if w >= max_width)
+
+
+def width_cost(w) -> float:
+    """Wire cost of width ``w`` relative to fp32: ``(w + 32/LANE) / 32``
+    for ``w < 32`` — the payload at ``w`` bits plus one fp32 scale per
+    kept lane-block (``per_block_wire_bits`` over ``LANE·32``) — and
+    exactly 1 at 32 (no scales ship on the fp32 wire)."""
+    return 1.0 if w >= 32 else (w + 32.0 / LANE) / 32.0
+
+
+def width_eps(w) -> float:
+    """Relative quantisation error proxy of width ``w``: the uniform-
+    quantiser MSE bound ``1 / (4·qmax²)`` of a per-block-scaled symmetric
+    rounder (error ≤ scale/2 per element, ``scale = amax/qmax``), 0 at 32.
+    Only *relative ordering* matters here — it breaks the rate-vs-width
+    tie toward precision when a wider wire buys no extra kept blocks."""
+    return 0.0 if w >= 32 else 1.0 / (4.0 * float(2 ** (w - 1) - 1) ** 2)
+
+
+def refine_widths(y, candidates, live):
+    """Per-coordinate rate × width refinement: given fp32-cost keep
+    fractions ``y`` (any shape) from a water-fill, spend each
+    coordinate's bits at the width that retains the most signal —
+    ``argmax_w  min(y / cost_w, 1) · (1 − eps_w)`` (``candidates``
+    descending, so exact ties keep the more precise width).  Returns
+    ``(y_real, widths)``: the realised keep fraction at the chosen width
+    (``>= y`` wherever quantisation is chosen — cheaper bits buy more
+    blocks) and the per-coordinate width map (32 on dead coordinates).
+    This is THE joint 2-D allocation rule: the water level moves bits
+    *across* coordinates, this refinement moves them *along* the
+    rate-vs-width frontier within each coordinate (DESIGN.md §3.8)."""
+    y = jnp.asarray(y, jnp.float32)
+    exp = (1,) * y.ndim
+    costs = jnp.asarray([width_cost(w) for w in candidates],
+                        jnp.float32).reshape(-1, *exp)
+    eps = jnp.asarray([width_eps(w) for w in candidates],
+                      jnp.float32).reshape(-1, *exp)
+    cands = jnp.asarray(candidates, jnp.float32).reshape(-1, *exp)
+    y_w = jnp.minimum(y[None] / costs, 1.0)
+    util = y_w * (1.0 - eps)
+    idx = jnp.argmax(util, axis=0)[None]
+    y_real = jnp.take_along_axis(y_w, idx, axis=0)[0]
+    widths = jnp.take_along_axis(jnp.broadcast_to(cands, y_w.shape),
+                                 idx, axis=0)[0]
+    return jnp.where(live, y_real, y), jnp.where(live, widths, 32.0)
+
+
+def best_uniform_width(bits, d_full: float, candidates):
+    """The uniform controllers' width pick: run this step's whole
+    allowance at the single width maximising the retained fraction
+    (:func:`refine_widths` over one coordinate).  Returns ``(width,
+    cost)`` as traced f32 scalars."""
+    cands = jnp.asarray(candidates, jnp.float32)
+    costs = jnp.asarray([width_cost(w) for w in candidates], jnp.float32)
+    eps = jnp.asarray([width_eps(w) for w in candidates], jnp.float32)
+    y_w = jnp.minimum(jnp.asarray(bits, jnp.float32) /
+                      jnp.maximum(d_full * costs, 1e-30), 1.0)
+    idx = jnp.argmax(y_w * (1.0 - eps))
+    return cands[idx], costs[idx]
+
+
+def widths_map(q: int, width) -> jnp.ndarray:
+    """A scalar width as a (diagonal-32) ``[Q, Q]`` width map — the wire
+    never quantises a worker's own rows (they never ship)."""
+    eye = jnp.eye(q, dtype=bool)
+    return jnp.where(eye, 32.0, jnp.asarray(width, jnp.float32))
+
+
 def init_layer_fill(p: Pacing) -> dict:
     """Per-layer fill state shared by the ``budget`` and ``stale``
     controllers: the dropped-energy EMA (initialised to ``layer_bits`` —
@@ -271,13 +362,18 @@ def init_layer_fill(p: Pacing) -> dict:
             "y": jnp.full(p.layer_bits.shape, 1.0 / p.c_max, jnp.float32)}
 
 
-def plan_layer_fill(p: Pacing, state: dict, step):
+def plan_layer_fill(p: Pacing, state: dict, step, cost_factor=1.0):
     """One per-layer planning step (DESIGN.md §3.7): PI allowance →
     sustainable cap → water-fill over ``Pacing.layer_bits`` weighted by
     the dropped-energy EMA, floored at the prior commitments.  Returns
-    ``(rates_l [L], integ', y')``."""
+    ``(rates_l [L], integ', y')``.
+
+    ``cost_factor`` (:func:`width_cost` of the step's chosen wire width)
+    deflates the wire-bit cap into fp32-equivalent keep units — shipping
+    at ``w`` bits costs ``c_w ×`` the fp32 wire per kept block, so the
+    same cap buys ``1/c_w ×`` the keep mass (DESIGN.md §3.8)."""
     bits, integ = allowance(p, state["spent"], state["integ"], step)
-    cap = sustainable_cap(p, state["spent"], step, bits)
+    cap = sustainable_cap(p, state["spent"], step, bits) / cost_factor
     density = state["ema"] / jnp.maximum(p.layer_bits, 1e-30)
     y = waterfill(density, p.layer_bits, cap, state["y"], 1.0)
     # same rate clamp as the scalar rate_of_allowance — a configured

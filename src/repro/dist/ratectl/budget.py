@@ -30,20 +30,32 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.dist.ratectl.base import (Pacing, RateController, allowance,
-                                     fold_layer_err, init_layer_fill,
-                                     plan_layer_fill, rate_of_allowance,
-                                     uniform_layer_plan, uniform_plan)
+                                     best_uniform_width, fold_layer_err,
+                                     init_layer_fill, plan_layer_fill,
+                                     rate_of_allowance, uniform_layer_plan,
+                                     uniform_plan, width_candidates,
+                                     widths_map)
 
 
 def budget_controller(q: int, pacing: Pacing, name: str = "budget",
                       per_layer: bool = False,
-                      ema_decay: float = 0.8) -> RateController:
+                      ema_decay: float = 0.8,
+                      max_width: int = 32) -> RateController:
     """Budget-tracking PI controller over a ``workers`` axis of size ``q``.
 
     State: ``{"spent": bits shipped so far, "integ": PI integral}``; the
     per-layer mode adds ``{"ema": [L] dropped-energy EMA, "y": [L]
     monotone keep fractions}`` and needs ``pacing.layer_bits``
     (``make_pacing(..., layer_widths=...)``).
+
+    ``max_width < 32`` (DESIGN.md §3.8) turns the allowance → rate map
+    into a joint rate × width choice: each step the controller picks the
+    single wire width (from 32 down to ``max_width``) whose cheaper bits
+    retain the most boundary signal — ``argmax_w  min(allowance /
+    (d_full · cost_w), 1) · (1 − eps_w)`` — then converts the allowance
+    at that width's cost into the uniform rate.  A generous allowance
+    picks 32 (exact wire, ``widths=None``); a squeezed one trades
+    precision for kept blocks.
 
     Example::
 
@@ -55,6 +67,7 @@ def budget_controller(q: int, pacing: Pacing, name: str = "budget",
         raise ValueError(
             "per_layer needs pacing.layer_bits — build the pacing with "
             "make_pacing(..., layer_widths=layer_exchange_widths(cfg))")
+    candidates = width_candidates(max_width)
 
     def init():
         state = {"spent": jnp.zeros((), jnp.float32),
@@ -63,14 +76,26 @@ def budget_controller(q: int, pacing: Pacing, name: str = "budget",
             state.update(init_layer_fill(pacing))
         return state
 
+    def pick_width(state, step):
+        """The step's uniform width from the PI allowance (32 ↔ exact)."""
+        if len(candidates) == 1:               # width axis off
+            return None, 1.0
+        bits, _ = allowance(pacing, state["spent"], state["integ"], step)
+        return best_uniform_width(bits, pacing.d_full, candidates)
+
     def plan(state, step):
+        w_star, cost = pick_width(state, step)
+        wmap = None if w_star is None else widths_map(q, w_star)
         if not per_layer:
             bits, integ = allowance(pacing, state["spent"], state["integ"],
                                     step)
-            rate = rate_of_allowance(pacing, bits)
-            return uniform_plan(q, rate), {**state, "integ": integ}
-        rates_l, integ, y = plan_layer_fill(pacing, state, step)
-        return uniform_layer_plan(q, rates_l), \
+            rate = rate_of_allowance(pacing, bits / cost)
+            plan_ = uniform_plan(q, rate)
+            return plan_._replace(widths=wmap), {**state, "integ": integ}
+        rates_l, integ, y = plan_layer_fill(pacing, state, step,
+                                            cost_factor=cost)
+        plan_ = uniform_layer_plan(q, rates_l)
+        return plan_._replace(widths=wmap), \
             {**state, "integ": integ, "y": y}
 
     def observe(state, obs):

@@ -46,7 +46,8 @@ from repro.core.varco import CommPolicy
 from repro.dist.gnn_parallel import (AXIS, COMPILED_CACHE_SIZE, DistMeta,
                                      _local_loss_fn, _make_aggregate_emulated,
                                      _make_aggregate_shard, _packed_pair_k_for,
-                                     _pmean_inexact)
+                                     _packed_pair_w_for, _pmean_inexact,
+                                     _snap_width)
 from repro.dist.ratectl.base import RateController, RatePlan, make_pacing
 from repro.dist.ratectl.budget import budget_controller
 from repro.dist.ratectl.error import error_controller
@@ -117,13 +118,14 @@ def make_controller(policy: CommPolicy, meta: DistMeta, cfg: GNNConfig,
             f"error controller or a :per-layer policy")
     if policy.controller == "budget":
         return budget_controller(meta.q, pacing, per_layer=per_layer,
-                                 **ctl_kw)
+                                 max_width=policy.max_width, **ctl_kw)
     if policy.controller == "error":
         return error_controller(meta.q, pacing, meta.pair_table(),
-                                per_layer=per_layer, **ctl_kw)
+                                per_layer=per_layer,
+                                max_width=policy.max_width, **ctl_kw)
     if policy.controller == "stale":
         return stale_controller(meta.q, pacing, per_layer=per_layer,
-                                **ctl_kw)
+                                max_width=policy.max_width, **ctl_kw)
     raise ValueError(f"unknown controller {policy.controller!r}")
 
 
@@ -134,6 +136,19 @@ def init_halo_cache(meta: DistMeta, cfg: GNNConfig) -> tuple:
     d = max(meta.q - 1, 1)
     return tuple(jnp.zeros((meta.q, d, meta.p2p_hop_width, w), jnp.float32)
                  for w in exchange_widths(cfg))
+
+
+def init_wire_residuals(meta: DistMeta, cfg: GNNConfig) -> tuple:
+    """Zero-initialised per-exchange error-feedback residual accumulators
+    for quantising policies (``max_width < 32``, p2p wire, emulated
+    backend): one full-width ``[Q, D, H, width]`` buffer per exchange
+    call — the same shapes as :func:`init_halo_cache`, because both ride
+    the train step's ``cache`` channel (stale XOR error-feedback,
+    DESIGN.md §3.8).  Each step the residual is packed onto the fresh
+    kept set, added to the pre-quantisation payload, and replaced by the
+    new quantisation error — so the wire's rounding error is re-shipped
+    instead of lost and the compressed-gradient bias stays bounded."""
+    return init_halo_cache(meta, cfg)
 
 
 def _auto_metrics(loss, rate_map, bits, q: int, n_exchanges: int) -> dict:
@@ -189,8 +204,19 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
     ``pair_err`` / ``pair_delta`` ``[Q, Q]`` matrices to the usual
     scalars — plus ``layer_transport`` / ``layer_err`` ``[L, Q, Q]``
     tensors for per-layer plans (DESIGN.md §3.7).  ``cache`` is the
-    ``stale`` controller's halo-cache tuple (:func:`init_halo_cache`);
-    other controllers pass ``()`` and get ``()`` back.
+    ``stale`` controller's halo-cache tuple (:func:`init_halo_cache`) —
+    or, for a quantising policy (``max_width < 32``) on the emulated p2p
+    wire, the error-feedback residual tuple
+    (:func:`init_wire_residuals`); the two uses are exclusive
+    (stale XOR EF).  Other configurations pass ``()`` and get ``()``
+    back.
+
+    ``plan.widths`` (``None`` or a concrete ``[Q, Q]`` / ``[L, Q, Q]``
+    map) quantises each pair's wire payload (DESIGN.md §3.8): the step
+    snaps the widths to the storage grid and keys its compiled variants
+    on the distinct sub-32 widths (`_packed_pair_w_for`) exactly like the
+    kept-block maps — ``widths=None`` or an all-32 map compiles the
+    pre-quantisation program bit-for-bit.
 
     Requirements: ``policy.mode == "auto"``, ``meta.wire`` in
     ``("packed", "p2p")``, every exchanged width on the 128-lane grid,
@@ -229,11 +255,33 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
             "hop reuse is emulated-backend only: a shape-uniform SPMD "
             "ppermute cannot drop individual pairs' buffers (DESIGN.md "
             "§3.6); run the stale controller with mesh=None")
+    # error feedback accumulates per-exchange residual state through the
+    # same cache channel hop reuse owns — stale XOR error-feedback; a
+    # stale run at max_width < 32 quantises without EF (DESIGN.md §3.8)
+    use_ef = policy.max_width < 32 and meta.wire == "p2p" \
+        and not stale and mesh is None
+
+    def _plan_widths(plan: RatePlan):
+        """Host-side width quantisation: snap the planned widths to the
+        supported storage grid (`_snap_width`, mirroring the kept-block
+        floor), and derive the jit-static distinct-width tuple
+        (`_packed_pair_w_for`) — ``()`` compiles the exact pre-
+        quantisation program.  Returns ``(wm | None, wire_w)``."""
+        if plan.widths is None:
+            return None, ()
+        wm = np.asarray(plan.widths, np.float32)
+        wm = np.vectorize(_snap_width)(wm).astype(np.float32)
+        ww = _packed_pair_w_for(meta, wm)
+        return (wm, ww) if ww else (None, ())
 
     if mesh is None:
-        @functools.partial(jax.jit, static_argnames=("packed_k",))
-        def _jit_step(params, opt_state, graph, key, rate_map, skip, cache,
-                      packed_k):
+        @functools.partial(jax.jit,
+                           static_argnames=("packed_k", "wire_w"))
+        def _jit_step(params, opt_state, graph, key, rate_map, width_map,
+                      skip, cache, packed_k, wire_w):
+            wm = width_map if wire_w else None
+            ef = use_ef and bool(wire_w) and bool(cache)
+
             def loss_fn(p):
                 cache_out: list = []
                 agg = _make_aggregate_emulated(
@@ -241,7 +289,10 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                     key, packed_k=dict(packed_k), rate_map=rate_map,
                     skip=skip if stale else None,
                     cache=cache if stale else None,
-                    cache_out=cache_out if stale else None)
+                    cache_out=cache_out if stale else None,
+                    width_map=wm,
+                    resid=cache if ef else None,
+                    resid_out=cache_out if ef else None)
                 logits, bits = gnn_forward(p, cfg, graph["features"], agg)
                 loss_sum, _ = masked_loss_and_correct(
                     logits, graph["labels"], graph["train_mask"])
@@ -259,19 +310,27 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
         def step(params, opt_state, graph, key, plan: RatePlan, cache=()):
             rm = np.asarray(plan.rates, np.float32)
             kb = _packed_pair_k_for(meta, rm)
-            return _jit_step(params, opt_state, graph, key,
-                             jnp.asarray(rm),
-                             jnp.asarray(plan.skip, jnp.float32),
-                             tuple(cache), packed_k=kb)
+            wm, ww = _plan_widths(plan)
+            out = _jit_step(params, opt_state, graph, key,
+                            jnp.asarray(rm),
+                            jnp.zeros((), jnp.float32) if wm is None
+                            else jnp.asarray(wm),
+                            jnp.asarray(plan.skip, jnp.float32),
+                            tuple(cache), packed_k=kb, wire_w=ww)
+            # an exact (unquantised) step neither reads nor rewrites EF
+            # residuals — carry them unchanged instead of dropping them
+            return out if out[3] or not cache else (*out[:3], tuple(cache))
 
+        step._jit_step = _jit_step
         return step
 
-    def make_worker(packed_k: tuple):
-        def worker(params, opt_state, gblk, rate_map, key):
+    def make_worker(packed_k: tuple, wire_w: tuple):
+        def worker(params, opt_state, gblk, rate_map, width_map, key):
             def loss_fn(p):
                 agg = _make_aggregate_shard(
                     gblk, meta, policy, None, jnp.ones((), jnp.float32),
-                    key, packed_k=dict(packed_k), rate_map=rate_map)
+                    key, packed_k=dict(packed_k), rate_map=rate_map,
+                    width_map=width_map if wire_w else None)
                 return _local_loss_fn(p, cfg, gblk, agg, meta)
 
             (loss, bits), grads = jax.value_and_grad(loss_fn,
@@ -293,16 +352,19 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
         return worker
 
     @functools.lru_cache(maxsize=compiled_cache_size)
-    def _compiled_for(kblocks: tuple):
-        return jax.jit(shard_map(make_worker(kblocks), mesh=mesh,
-                                 in_specs=(P(), P(), P(AXIS), P(), P()),
+    def _compiled_for(kblocks: tuple, wire_w: tuple = ()):
+        return jax.jit(shard_map(make_worker(kblocks, wire_w), mesh=mesh,
+                                 in_specs=(P(), P(), P(AXIS), P(), P(), P()),
                                  out_specs=(P(), P(), P()), check_rep=False))
 
     def step(params, opt_state, graph, key, plan: RatePlan, cache=()):
         rm = np.asarray(plan.rates, np.float32)
         kb = _packed_pair_k_for(meta, rm)
-        params, opt_state, m = _compiled_for(kb)(
-            params, opt_state, graph, jnp.asarray(rm), key)
+        wm, ww = _plan_widths(plan)
+        params, opt_state, m = _compiled_for(kb, ww)(
+            params, opt_state, graph, jnp.asarray(rm),
+            jnp.zeros((), jnp.float32) if wm is None else jnp.asarray(wm),
+            key)
         return params, opt_state, m, tuple(cache)
 
     step.cache_info = _compiled_for.cache_info

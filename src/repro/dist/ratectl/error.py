@@ -30,7 +30,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
-                                     allowance, sustainable_cap, waterfill)
+                                     allowance, refine_widths,
+                                     sustainable_cap, waterfill,
+                                     width_candidates)
 
 __all__ = ["error_controller", "waterfill"]
 
@@ -38,7 +40,8 @@ __all__ = ["error_controller", "waterfill"]
 def error_controller(q: int, pacing: Pacing, pair_rows,
                      ema_decay: float = 0.8,
                      name: str = "error",
-                     per_layer: bool = False) -> RateController:
+                     per_layer: bool = False,
+                     max_width: int = 32) -> RateController:
     """Error-weighted per-pair controller (module docs).
 
     ``pair_rows`` is the static ``[Q, Q]`` halo row-count table
@@ -49,6 +52,14 @@ def error_controller(q: int, pacing: Pacing, pair_rows,
     keep fractions — ``[Q, Q]`` matrices, or ``[L, Q, Q]`` tensors in
     ``per_layer`` mode (which needs ``pacing.layer_bits``).
 
+    ``max_width < 32`` (DESIGN.md §3.8) refines each coordinate's filled
+    allocation along the rate × width frontier
+    (:func:`repro.dist.ratectl.base.refine_widths`): the committed ``y``
+    stays in fp32-cost units (monotonicity and Proposition 2 are
+    untouched), but each (layer,) pair *spends* its bits at the width
+    retaining the most signal — low-density pairs drop to 2–4-bit wires
+    and keep proportionally more blocks.
+
     Example::
 
         ctl = error_controller(meta.q, pacing, meta.pair_table())
@@ -57,6 +68,7 @@ def error_controller(q: int, pacing: Pacing, pair_rows,
     eye = jnp.eye(q, dtype=bool)
     live = (rows > 0) & ~eye
     y_min = 1.0 / pacing.c_max
+    candidates = width_candidates(max_width)
     if per_layer:
         if pacing.layer_bits is None:
             raise ValueError(
@@ -95,9 +107,13 @@ def error_controller(q: int, pacing: Pacing, pair_rows,
                             -jnp.inf)
         # prior commitments are the fill's floor → monotone by construction
         y = waterfill(density, rows_fill, cap, state["y"], 1.0)
-        rates = jnp.where(live, 1.0 / jnp.clip(y, y_min, 1.0), 1.0)
+        widths = None
+        y_real = y
+        if len(candidates) > 1:
+            y_real, widths = refine_widths(y, candidates, live)
+        rates = jnp.where(live, 1.0 / jnp.clip(y_real, y_min, 1.0), 1.0)
         skip = jnp.zeros((q, q), jnp.float32)
-        plan_ = RatePlan(rates, skip)
+        plan_ = RatePlan(rates, skip, widths)
         return plan_, {**state, "integ": integ, "y": y}
 
     def observe(state, obs):

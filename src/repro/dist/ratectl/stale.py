@@ -32,19 +32,28 @@ import jax.numpy as jnp
 from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
                                      allowance, fold_layer_err,
                                      init_layer_fill, plan_layer_fill,
-                                     rate_of_allowance, uniform_layer_plan)
+                                     rate_of_allowance, uniform_layer_plan,
+                                     width_cost, widths_map)
 
 
 def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
                      max_stale: int = 5, name: str = "stale",
                      per_layer: bool = False,
-                     ema_decay: float = 0.8) -> RateController:
+                     ema_decay: float = 0.8,
+                     max_width: int = 32) -> RateController:
     """Staleness-reuse controller (module docs).
 
     State: ``{"spent", "integ", "age" [Q, Q] consecutive reuses,
     "skip" [Q, Q] next step's skip mask}``; ``per_layer=True`` adds the
     ``budget`` controller's per-layer machinery (``{"ema", "y"}`` over
     ``[L]``; needs ``pacing.layer_bits``).
+
+    ``max_width < 32`` runs every *communicating* pair's wire at that
+    width flat (skipped pairs ship nothing either way): hop reuse and
+    error feedback both key residual state off the exchange cache, so
+    the stale controller keeps the width axis static rather than joining
+    the water-fill (stale-XOR-error-feedback, DESIGN.md §3.8); the
+    cheaper wire simply lets the PI pacing afford lower rates.
 
     Example::
 
@@ -55,6 +64,8 @@ def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
             "per_layer needs pacing.layer_bits — build the pacing with "
             "make_pacing(..., layer_widths=layer_exchange_widths(cfg))")
     eye = jnp.eye(q, dtype=bool)
+    wmap = None if max_width >= 32 else widths_map(q, float(max_width))
+    w_cost = width_cost(max_width)
 
     def init():
         state = {"spent": jnp.zeros((), jnp.float32),
@@ -69,12 +80,14 @@ def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
         if not per_layer:
             bits, integ = allowance(pacing, state["spent"], state["integ"],
                                     step)
-            rate = rate_of_allowance(pacing, bits)
+            rate = rate_of_allowance(pacing, bits / w_cost)
             rates = jnp.where(eye, 1.0, rate)
-            return RatePlan(rates, state["skip"]), {**state, "integ": integ}
-        rates_l, integ, y = plan_layer_fill(pacing, state, step)
+            return RatePlan(rates, state["skip"], wmap), \
+                {**state, "integ": integ}
+        rates_l, integ, y = plan_layer_fill(pacing, state, step,
+                                            cost_factor=w_cost)
         plan_ = uniform_layer_plan(q, rates_l)
-        return RatePlan(plan_.rates, state["skip"]), \
+        return RatePlan(plan_.rates, state["skip"], wmap), \
             {**state, "integ": integ, "y": y}
 
     def observe(state, obs):

@@ -15,7 +15,13 @@ import jax.numpy as jnp
 from . import ref
 from .ell_spmm import ell_spmm
 from .flash_attention import flash_attention
-from .varco_pack import block_mask_indices, varco_pack, varco_unpack
+from .varco_pack import (LANE, block_mask_indices, varco_pack,
+                         varco_pack_quant, varco_unpack)
+
+#: wire bit-widths the quantised codecs speak — 32 is the fp32
+#: passthrough, the rest are symmetric per-lane-block int formats
+#: (qmax = 2^(w-1) - 1; int8 storage on the wire, true-width ledger).
+WIRE_WIDTHS = (2, 4, 8, 32)
 
 
 def _default_interpret() -> bool:
@@ -145,6 +151,99 @@ def _wire_unpack_bwd(res, g):
 wire_unpack.defvjp(_wire_unpack_fwd, _wire_unpack_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Quantised wire codecs (DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+#
+# ``quant_dequant`` is the value-level model of the low-bit wire: what a
+# receiver reconstructs from an int-``width`` payload plus the per-block
+# fp32 scales.  The *width* operand may be a traced array (per-pair
+# widths change every step under the controllers), which works because
+# the arithmetic — qmax = 2^(w-1)-1, scale = amax/qmax, round, clip —
+# is ordinary elementwise math; only the storage dtype needs a static
+# width, and that lives in the fused Pallas kernel
+# (``varco_pack_quant``) / ``pack_quant`` below.
+
+
+def quant_dequant(x, width, *, key=None):
+    """Symmetric per-lane-block quantise→dequantise at ``width`` bits.
+
+    ``x [..., nb*LANE]``; ``width`` — scalar or array broadcastable
+    against the per-block scale array ``[..., nb]`` (e.g. per-pair
+    widths ``w[:, :, None, None]`` against hops ``[Q, D, H, nb]``).
+    ``width >= 32`` is an exact fp32 passthrough.  Deterministic
+    round-to-nearest by default (the parity-checked wire behaviour,
+    identical on both backends); pass ``key`` for stochastic rounding
+    ``floor(v + u)``, ``u ~ U[0, 1)`` — unbiased in expectation.
+    Per-element error ≤ ``amax_block / (2^(width-1) - 1)``.
+    """
+    lead = x.shape[:-1]
+    nb = x.shape[-1] // LANE
+    xb = x.reshape(*lead, nb, LANE)
+    w = jnp.asarray(width, jnp.float32)
+    qmax = 2.0 ** (w - 1.0) - 1.0
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    v = xb / scale[..., None]
+    if key is None:
+        qv = jnp.rint(v)
+    else:
+        qv = jnp.floor(v + jax.random.uniform(key, xb.shape))
+    qv = jnp.clip(qv, -qmax[..., None], qmax[..., None])
+    dq = qv * scale[..., None]
+    out = jnp.where(jnp.broadcast_to(w >= 32.0, amax.shape)[..., None],
+                    xb, dq)
+    return out.reshape(x.shape)
+
+
+def wire_quant(x, width, *, key=None):
+    """Straight-through :func:`quant_dequant`: the forward sees the
+    quantised wire values, the backward passes gradients through
+    unchanged (the STE the ratectl error-feedback loop assumes)."""
+    return x + jax.lax.stop_gradient(quant_dequant(x, width, key=key) - x)
+
+
+def per_block_wire_bits(width):
+    """On-wire bits of ONE kept lane-block per row at ``width``: the
+    ``LANE·width`` payload plus the fp32 scale — the accounting
+    convention the int8 dense compressor established (scales charged
+    fully).  ``width >= 32`` means fp32 on the wire: no scale travels,
+    so the charge stays exactly ``LANE·32`` and pre-quantisation ledgers
+    are reproduced bit-for-bit.  ``width`` may be a traced array."""
+    w = jnp.asarray(width, jnp.float32)
+    return jnp.where(w >= 32.0, LANE * 32.0, LANE * w + 32.0)
+
+
+def _pack_quant_impl(x, kept, width: int):
+    if jax.default_backend() == "tpu":
+        n = x.shape[0]
+        pad = _padded_rows(n) - n
+        if pad:
+            x = jnp.pad(x, ((0, pad), (0, 0)))
+        packed, scales = varco_pack_quant(x, kept, width=width)
+        return (packed[:n], scales[:n]) if pad else (packed, scales)
+    return ref.pack_quant_reference(x, kept, width)
+
+
+@partial(jax.jit, static_argnames=("width", "interpret"))
+def pack_quant(x, kept, *, width: int, interpret: bool | None = None):
+    """Fused pack+quantise entry point: ``[N, F] -> (int8 [N, K*128],
+    scales f32 [N, K])`` in one kernel launch (Pallas on TPU, the
+    ``ref`` oracle elsewhere).  Decode with
+    :func:`repro.kernels.ref.quant_dequant_reference` (+ ``wire_unpack``
+    for the scatter) — the decode is jnp either way, it fuses into the
+    consumer."""
+    if interpret is not None and interpret:
+        n = x.shape[0]
+        pad = _padded_rows(n) - n
+        if pad:
+            x = jnp.pad(x, ((0, pad), (0, 0)))
+        packed, scales = varco_pack_quant(x, kept, width=width,
+                                          interpret=True)
+        return (packed[:n], scales[:n]) if pad else (packed, scales)
+    return _pack_quant_impl(x, kept, width)
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def aggregate(x, nbr, w, *, interpret: bool | None = None):
     """Forward-only ELL neighbour aggregation (kernel correctness surface).
@@ -241,5 +340,7 @@ ell_aggregate.defvjp(_ell_aggregate_fwd, _ell_aggregate_bwd)
 mha_reference = ref.mha_reference
 pack_reference = ref.pack_reference
 unpack_reference = ref.unpack_reference
+pack_quant_reference = ref.pack_quant_reference
+quant_dequant_reference = ref.quant_dequant_reference
 ell_spmm_reference = ref.ell_spmm_reference
 ssd_reference = ref.ssd_reference

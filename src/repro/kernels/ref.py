@@ -50,6 +50,38 @@ def unpack_reference(packed: jax.Array, inv_idx: jax.Array) -> jax.Array:
     return out.reshape(n, nf * LANE)
 
 
+def pack_quant_reference(x: jax.Array, block_idx: jax.Array, width: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fused pack+quantise oracle: gather kept lane-blocks and quantise
+    each to ``width`` bits with one symmetric per-(row, block) scale.
+
+    x [N, F], block_idx [K] -> (packed int8 [N, K*LANE], scales f32
+    [N, K]).  ``qmax = 2^(width-1) - 1``; zero blocks get scale 1 so the
+    dequantise is exact there too.  This is the jnp reference for the
+    Pallas ``varco_pack_quant`` kernel (one VMEM pass; the amax, the
+    scale and the rounded int8 block come out of the same tile visit).
+    """
+    packed = pack_reference(x, block_idx)
+    n, kf = packed.shape
+    k = kf // LANE
+    qmax = float(2 ** (width - 1) - 1)
+    pb = packed.reshape(n, k, LANE)
+    amax = jnp.max(jnp.abs(pb), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.rint(pb / scale[..., None]), -qmax, qmax)
+    return q.astype(jnp.int8).reshape(n, kf), scale
+
+
+def quant_dequant_reference(packed_q: jax.Array, scales: jax.Array
+                            ) -> jax.Array:
+    """Decode a quantised wire payload: int8 [N, K*LANE] × scales [N, K]
+    -> f32 [N, K*LANE] (the receiver's side of ``pack_quant_reference``)."""
+    n, kf = packed_q.shape
+    k = kf // LANE
+    pb = packed_q.astype(jnp.float32).reshape(n, k, LANE)
+    return (pb * scales[..., None]).reshape(n, kf)
+
+
 def ell_spmm_reference(x: jax.Array, nbr: jax.Array, w: jax.Array
                        ) -> jax.Array:
     """out[i] = sum_k w[i,k] x[nbr[i,k]]."""

@@ -71,6 +71,61 @@ def varco_pack(x: jax.Array, block_idx: jax.Array, *, tile_n: int = 256,
     )(block_idx, x)
 
 
+def _pack_quant_kernel(idx_ref, x_ref, out_ref, scale_ref, *, qmax):
+    del idx_ref  # consumed by the index_map
+    xb = x_ref[...]
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    out_ref[...] = jnp.clip(jnp.rint(xb / scale), -qmax, qmax
+                            ).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def varco_pack_quant(x: jax.Array, block_idx: jax.Array, *, width: int,
+                     tile_n: int = 256, interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Fused gather + low-bit quantise: one kernel launch, one VMEM pass.
+
+    x [N, F], block_idx [K] -> (packed int8 [N, K*128], scales f32
+    [N, K]).  Each kept lane-block is DMA-routed into VMEM exactly as in
+    :func:`varco_pack`, and *in the same tile visit* the kernel computes
+    the per-row block amax, the symmetric scale ``amax / qmax`` with
+    ``qmax = 2^(width-1) - 1``, and the rounded-clipped int8 block —
+    there is no second cast pass over the packed buffer and the fp32
+    intermediate never exists.  ``width`` ∈ {2, 4, 8}; all three share
+    the int8 storage dtype (values are clipped to their own qmax; sub-
+    byte bit-packing is a wire-framing concern, the ledger charges the
+    true ``width`` bits per element).  Oracle:
+    :func:`repro.kernels.ref.pack_quant_reference`.
+    """
+    n, f = x.shape
+    assert f % LANE == 0, f
+    assert width in (2, 4, 8), width
+    k = block_idx.shape[0]
+    tn = min(tile_n, n)
+    assert n % tn == 0, (n, tn)
+    qmax = float(2 ** (width - 1) - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // tn, k),
+        in_specs=[
+            pl.BlockSpec((tn, LANE), lambda i, j, idx: (i, idx[j])),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, LANE), lambda i, j, idx: (i, j)),
+            pl.BlockSpec((tn, 1), lambda i, j, idx: (i, j)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_pack_quant_kernel, qmax=qmax),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n, k * LANE), jnp.int8),
+                   jax.ShapeDtypeStruct((n, k), jnp.float32)],
+        interpret=interpret,
+    )(block_idx, x)
+
+
 def _unpack_kernel(inv_ref, packed_ref, out_ref):
     j = pl.program_id(1)
     live = inv_ref[j] >= 0

@@ -159,12 +159,18 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     if mesh is not None:
         graph = shard_graph(graph, mesh)
     if auto:
-        from repro.dist.ratectl import (init_halo_cache, make_auto_train_step,
-                                        make_controller)
+        from repro.dist.ratectl import (init_halo_cache, init_wire_residuals,
+                                        make_auto_train_step, make_controller)
         ctl = make_controller(policy, meta, cfg, total_steps=epochs)
         ctl_state = ctl.init()
-        cache = init_halo_cache(meta, cfg) \
-            if policy.controller == "stale" else ()
+        if policy.controller == "stale":
+            cache = init_halo_cache(meta, cfg)
+        elif policy.max_width < 32 and meta.wire == "p2p" and mesh is None:
+            # quantising wire: the cache channel carries the error-feedback
+            # residuals instead (stale XOR EF, DESIGN.md §3.8)
+            cache = init_wire_residuals(meta, cfg)
+        else:
+            cache = ()
         step = make_auto_train_step(cfg, policy, opt, meta, mesh=mesh,
                                     sync=sync)
     evaluate = make_eval_step(cfg, meta, mesh=mesh)

@@ -36,6 +36,8 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 MIXED_RATES = [1.0, 2.0, 4.0, 16.0]
 
+MIXED_WIDTHS = [2.0, 4.0, 8.0, 32.0]
+
 
 def build_setup(q: int, f: int = 256, layers: int = 2, n: int = 256,
                 conv: str = "sage", seed: int = 0, p2p: bool = True,
@@ -68,6 +70,19 @@ def mixed_map(q: int, seed: int = 0, layers: int | None = None) -> np.ndarray:
     for sl in rm.reshape(-1, q, q):
         np.fill_diagonal(sl, 1.0)
     return rm
+
+
+def mixed_width_map(q: int, seed: int = 0,
+                    layers: int | None = None) -> np.ndarray:
+    """Deterministic mixed wire-width map over ``WIRE_WIDTHS`` draws:
+    ``[Q, Q]``, or ``[L, Q, Q]`` when ``layers`` is given (diagonal 32 —
+    local rows never hit the wire; DESIGN.md §3.8)."""
+    rng = np.random.default_rng(seed + 1000)
+    shape = (q, q) if layers is None else (layers, q, q)
+    wm = rng.choice(MIXED_WIDTHS, size=shape).astype(np.float32)
+    for sl in wm.reshape(-1, q, q):
+        np.fill_diagonal(sl, 32.0)
+    return wm
 
 
 # ---------------------------------------------------------------------------
@@ -105,23 +120,41 @@ for case in spec["cases"]:
     # — ONE construction shared with the in-process tests)
     rm = None if case.get("rates") is None \
         else np.asarray(case["rates"], np.float32)
+    wm = None if case.get("widths") is None \
+        else np.asarray(case["widths"], np.float32)
     key = jax.random.key(7)
     if rm is not None:
         kb = dict(_packed_pair_k_for(meta, rm))
-        agg_e = _make_aggregate_emulated(graph, meta, pol, None,
-                                         jnp.ones(()), key, packed_k=kb,
-                                         rate_map=jnp.asarray(rm))
+        agg_e = _make_aggregate_emulated(
+            graph, meta, pol, None, jnp.ones(()), key, packed_k=kb,
+            rate_map=jnp.asarray(rm),
+            width_map=None if wm is None else jnp.asarray(wm))
 
-        def worker(p, gblk, rmap, k):
-            agg = _make_aggregate_shard(gblk, meta, pol, None, jnp.ones(()),
-                                        k, packed_k=kb, rate_map=rmap)
-            return gnn_forward(p, cfg, gblk["features"], agg)
+        if wm is None:
+            def worker(p, gblk, rmap, k):
+                agg = _make_aggregate_shard(gblk, meta, pol, None,
+                                            jnp.ones(()), k, packed_k=kb,
+                                            rate_map=rmap)
+                return gnn_forward(p, cfg, gblk["features"], agg)
 
-        sm = jax.jit(shard_map(worker, mesh=mesh,
-                               in_specs=(P(), P("workers"), P(), P()),
-                               out_specs=(P("workers"), P()),
-                               check_rep=False))
-        ls, bs = sm(params, gs, jnp.asarray(rm), key)
+            sm = jax.jit(shard_map(worker, mesh=mesh,
+                                   in_specs=(P(), P("workers"), P(), P()),
+                                   out_specs=(P("workers"), P()),
+                                   check_rep=False))
+            ls, bs = sm(params, gs, jnp.asarray(rm), key)
+        else:
+            def worker(p, gblk, rmap, wmap, k):
+                agg = _make_aggregate_shard(gblk, meta, pol, None,
+                                            jnp.ones(()), k, packed_k=kb,
+                                            rate_map=rmap, width_map=wmap)
+                return gnn_forward(p, cfg, gblk["features"], agg)
+
+            sm = jax.jit(shard_map(worker, mesh=mesh,
+                                   in_specs=(P(), P("workers"), P(), P(),
+                                             P()),
+                                   out_specs=(P("workers"), P()),
+                                   check_rep=False))
+            ls, bs = sm(params, gs, jnp.asarray(rm), jnp.asarray(wm), key)
     else:
         rate = float(pol.rate(0)) if pol.compresses else 1.0
         comp = pol.compressor() if pol.compresses else None
@@ -215,15 +248,22 @@ def run_forward_parity(q: int, cases: list[dict], f: int = 512,
                        layers: int = 2, n: int = 256, atol: float = 1e-6,
                        timeout: int = 1200) -> str:
     """Run ``cases`` (dicts of ``wire`` / ``policy`` / ``map`` ∈ {None,
-    'pair', 'layer'} / optional ``seed``) on a ``q``-device mesh in one
-    subprocess; asserts emulated ≡ shard_map ≤ ``atol`` per case.
+    'pair', 'layer'} / optional ``width_map`` ∈ {None, 'pair', 'layer'} /
+    optional ``seed``) on a ``q``-device mesh in one subprocess; asserts
+    emulated ≡ shard_map ≤ ``atol`` per case.
 
-    The mixed-rate operands are drawn host-side by :func:`mixed_map` (so
-    the subprocess exercises exactly the maps the in-process tests use)
-    and shipped through the JSON spec."""
-    cases = [dict(c, rates=None if c["map"] is None else mixed_map(
-        q, c.get("seed", 0),
-        layers if c["map"] == "layer" else None).tolist())
+    The mixed-rate (and mixed-width) operands are drawn host-side by
+    :func:`mixed_map` / :func:`mixed_width_map` (so the subprocess
+    exercises exactly the maps the in-process tests use) and shipped
+    through the JSON spec."""
+    cases = [dict(c,
+                  rates=None if c["map"] is None else mixed_map(
+                      q, c.get("seed", 0),
+                      layers if c["map"] == "layer" else None).tolist(),
+                  widths=None if c.get("width_map") is None
+                  else mixed_width_map(
+                      q, c.get("seed", 0),
+                      layers if c["width_map"] == "layer" else None).tolist())
         for c in cases]
     spec = {"q": q, "f": f, "layers": layers, "n": n, "atol": atol,
             "cases": cases}

@@ -1,9 +1,10 @@
 """Golden-trace convergence regression (ISSUE 5 satellite).
 
 A seeded 30-step ``train_gnn`` run on ``tiny_graph`` whose loss curve is
-pinned against ``tests/golden_traces.json`` (rtol 1e-4) for the three
-policy families — ``full``, ``fixed:4``, ``auto:budget`` — all on the
-p2p wire.  Backend-parity tests catch *relative* drift between the
+pinned against ``tests/golden_traces.json`` (rtol 1e-4) for four policy
+families — ``full``, ``fixed:4``, ``auto:budget``, and the quantised-wire
+``auto:budget:…:w8`` (rate × width allocation + error feedback,
+DESIGN.md §3.8) — all on the p2p wire.  Backend-parity tests catch *relative* drift between the
 emulated and shard_map paths; this catches *absolute* numeric drift of
 the whole training stack (a refactor that changes both backends in
 lockstep still trips it).
@@ -55,7 +56,8 @@ def _budget_bits() -> float:
 
 def _policies() -> dict:
     return {"full": "full", "fixed4": "fixed:4",
-            "auto_budget": f"auto:budget:{_budget_bits():g}"}
+            "auto_budget": f"auto:budget:{_budget_bits():g}",
+            "auto_budget_w8": f"auto:budget:{_budget_bits():g}:w8"}
 
 
 def _run(spec: str) -> list:
@@ -71,7 +73,8 @@ def _run(spec: str) -> list:
     return [float(v) for v in res.history.loss]
 
 
-@pytest.mark.parametrize("name", ["full", "fixed4", "auto_budget"])
+@pytest.mark.parametrize("name", ["full", "fixed4", "auto_budget",
+                                  "auto_budget_w8"])
 def test_loss_curve_matches_golden(name):
     spec = _policies()[name]
     losses = _run(spec)

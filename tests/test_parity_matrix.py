@@ -26,6 +26,11 @@ def _matrix(q: int) -> list[dict]:
             {"wire": wire, "policy": "fixed:4", "map": "pair", "seed": q},
             {"wire": wire, "policy": "fixed:4", "map": "layer",
              "seed": 10 + q},
+            # quantised wire (DESIGN.md §3.8): mixed rate × width maps
+            {"wire": wire, "policy": "fixed:4", "map": "pair",
+             "width_map": "pair", "seed": 20 + q},
+            {"wire": wire, "policy": "fixed:4", "map": "layer",
+             "width_map": "layer", "seed": 30 + q},
         ]
     return cases
 

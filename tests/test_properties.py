@@ -168,3 +168,66 @@ def test_packed_pair_k_dominates_every_layer(q, n_layers, seed):
         k = np.maximum(np.floor(nb / rm.reshape(-1, q, q)), 1.0)
         assert k_static >= int(k[:, off].max())
         assert 1 <= k_static <= nb
+
+
+# ---------------------------------------------------------------------------
+# quantised wire codec (DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(width=st.sampled_from([2, 4, 8]), nb=st.integers(1, 6),
+       rate=st.floats(1.0, 32.0), n=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_quant_dequant_error_within_analytic_bound(width, nb, rate, n, seed):
+    """Quantise→dequantise of a packed payload stays within the advertised
+    per-element bound ``amax_block / (2^(w−1) − 1)`` for arbitrary
+    ``(width, rate, Q, F)`` draws (deterministic rounding is tighter:
+    half that), and ``width ≥ 32`` is an exact passthrough."""
+    from repro.kernels.ops import quant_dequant
+    from repro.kernels.varco_pack import block_mask_indices
+
+    f = nb * LANE
+    key = jax.random.key(seed)
+    # scale-diverse rows (blocks spanning orders of magnitude) so the
+    # per-block scales are genuinely heterogeneous
+    mag = 10.0 ** jax.random.uniform(jax.random.fold_in(key, 1), (n, 1),
+                                     minval=-2.0, maxval=2.0)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (n, f)) * mag
+    kept, inv = block_mask_indices(key, nb, rate)
+    packed = wire_pack(x, kept, inv)                 # [n, k*LANE]
+    k = packed.shape[1] // LANE
+    dq = np.asarray(quant_dequant(packed, width))
+    pb = np.asarray(packed).reshape(n, k, LANE)
+    qmax = 2.0 ** (width - 1) - 1.0
+    bound = np.abs(pb).max(-1) / qmax                # [n, k]
+    err = np.abs(dq.reshape(n, k, LANE) - pb)
+    assert np.all(err <= 0.5 * bound[..., None] + 1e-6 * (1 + bound[..., None]))
+    # fp32 "width" is bit-exact passthrough
+    np.testing.assert_array_equal(
+        np.asarray(quant_dequant(packed, 32)), np.asarray(packed))
+
+
+@settings(max_examples=10, deadline=None)
+@given(width=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2 ** 16))
+def test_stochastic_rounding_unbiased(width, seed):
+    """``floor(v + u)`` rounding is unbiased: the mean over M independent
+    rounding keys approaches x — elementwise within 6σ of the rounding
+    noise (std ≤ scale/2 per draw), and the pooled signed error within
+    6σ of its own (much tighter) standard error."""
+    from repro.kernels.ops import quant_dequant
+
+    n, nb, m = 4, 2, 256
+    f = nb * LANE
+    key = jax.random.key(seed)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (n, f))
+    keys = jax.random.split(jax.random.fold_in(key, 1), m)
+    dq = jax.vmap(lambda k: quant_dequant(x, width, key=k))(keys)
+    mean = np.asarray(jnp.mean(dq, axis=0)).reshape(n, nb, LANE)
+    xb = np.asarray(x).reshape(n, nb, LANE)
+    qmax = 2.0 ** (width - 1) - 1.0
+    scale = np.maximum(np.abs(xb).max(-1), 1e-30) / qmax   # [n, nb]
+    sigma = scale[..., None] * 0.5 / np.sqrt(m)
+    assert np.all(np.abs(mean - xb) <= 6.0 * sigma + 1e-7)
+    pooled = ((mean - xb) / scale[..., None]).mean()
+    assert abs(pooled) <= 6.0 * 0.5 / np.sqrt(m * n * f)

@@ -81,20 +81,44 @@ def test_policy_parse_and_rates():
     ("varco:exp", "varco", "exp"),
     ("varco:cosine", "varco", "cosine"),
     ("varco:step:0.5", "varco", "step:R=0.5"),
-    ("auto:budget:2e9", "auto", "budget"),
-    ("auto:error:2e9", "auto", "error"),
-    ("auto:stale:2e9", "auto", "stale"),
+    ("auto:budget:2e+09", "auto", "budget"),
+    ("auto:error:2e+09", "auto", "error"),
+    ("auto:stale:2e+09", "auto", "stale"),
+    ("auto:budget:2e+09:w8", "auto", "budget"),
+    ("auto:budget:2e+09:w2", "auto", "budget"),
+    ("auto:error:2e+09:w4", "auto", "error"),
+    ("auto:stale:2e+09:w8", "auto", "stale"),
+    ("auto:budget:2e+09:per-layer", "auto", "budget"),
+    ("auto:error:2e+09:w4:per-layer", "auto", "error"),
 ])
 def test_policy_parse_round_trip(spec, mode, desc_frag):
     p = CommPolicy.parse(spec, 300)
     assert p.mode == mode
     assert desc_frag in p.describe()
+    # every documented spec string is its own canonical form
+    assert str(p) == spec
     if mode == "auto":
         assert p.budget_bits == 2e9
         assert p.compressor_name == "blockmask"   # auto forces the wire's
         assert p.compresses and p.communicates    # lane-block compressor
+        want_w = 32
+        for part in spec.split(":"):
+            if part and part[0] == "w" and part[1:].isdigit():
+                want_w = int(part[1:])
+        assert p.max_width == want_w
     if mode in ("fixed", "varco"):
         assert p.scheduler is not None
+        assert p.max_width == 32
+
+
+def test_policy_width_suffix_order_insensitive():
+    """`:w<bits>` and `:per-layer` compose in either order; __str__
+    canonicalises to width-first."""
+    a = CommPolicy.parse("auto:budget:2e+09:w4:per-layer", 300)
+    b = CommPolicy.parse("auto:budget:2e+09:per-layer:w4", 300)
+    assert a.max_width == b.max_width == 4
+    assert a.per_layer and b.per_layer
+    assert str(a) == str(b) == "auto:budget:2e+09:w4:per-layer"
 
 
 @pytest.mark.parametrize("bad", [
@@ -106,6 +130,11 @@ def test_policy_parse_round_trip(spec, mode, desc_frag):
     "auto:budget:xyz",       # non-numeric budget
     "auto:budget:-5",        # non-positive budget
     "fixed:abc",             # non-numeric rate
+    "auto:budget:2e9:w0",    # zero-bit wire
+    "auto:budget:2e9:w3",    # not a supported width
+    "auto:budget:2e9:w64",   # wider than fp32
+    "auto:budget:2e9:w",     # empty width
+    "auto:budget:2e9:bogus",  # unknown suffix
 ])
 def test_policy_parse_malformed(bad):
     with pytest.raises(ValueError):
@@ -115,3 +144,14 @@ def test_policy_parse_malformed(bad):
 def test_auto_policy_requires_blockmask():
     with pytest.raises(ValueError, match="blockmask"):
         CommPolicy.parse("auto:budget:1e9", 300, compressor="randmask")
+
+
+def test_width_floor_needs_auto_mode():
+    """Sub-32 wires are controller-driven (the rate × width allocation);
+    open-loop policies must reject the field even when constructed
+    directly, not just through parse."""
+    with pytest.raises(ValueError, match="auto"):
+        CommPolicy("full", max_width=8)
+    with pytest.raises(ValueError):
+        CommPolicy("auto", controller="budget", budget_bits=1e9,
+                   max_width=5)          # not in WIRE_WIDTHS either
