@@ -4,7 +4,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test verify fast slow floor smoke bench-smoke wire-smoke \
-        ring-smoke quant-smoke ratectl-smoke ratectl-pl-smoke docs all
+        ring-smoke quant-smoke ratectl-smoke ratectl-pl-smoke \
+        partition-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -39,8 +40,11 @@ ratectl-smoke:               # closed loop: budget within 5%, error >= uniform
 ratectl-pl-smoke:            # per-layer: err <= uniform, budget 5%, parity
 	$(PY) benchmarks/ratectl_budget.py --per-layer --smoke
 
+partition-smoke:             # out-of-core: RSS-bounded 1e6-node stream,
+	$(PY) benchmarks/partition_pipeline.py --smoke   # cut + shard parity
+
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
 all: floor verify smoke bench-smoke wire-smoke ring-smoke quant-smoke \
-     ratectl-smoke ratectl-pl-smoke docs
+     ratectl-smoke ratectl-pl-smoke partition-smoke docs

@@ -171,23 +171,32 @@ class DistMeta:
             else:                                     # poly taps
                 dims.append(int(layer["taps"][0]["w"].shape[0]))
         # the per-pair facts cost an O(Q² + edges) host sweep — only the
-        # rate-map-capable wires consume them, the dense wire stays free
+        # rate-map-capable wires consume them, the dense wire stays free.
+        # Shard-backed graphs (repro.graph.stream.ShardSet) carry the spec
+        # precomputed in their manifest, so no sweep (and no global graph)
+        # is needed at all.
         hop_w = compact = 0
         pair_rows: tuple = ()
         if wire != "dense":
-            from repro.dist.halo import build_halo_spec
-            spec = build_halo_spec(pg)
+            spec = getattr(pg, "halo_spec", None)
+            if spec is None:
+                from repro.dist.halo import build_halo_spec
+                spec = build_halo_spec(pg)
             pair_rows = spec.pair_rows
             if wire == "p2p":
                 hop_w, compact = spec.hop_width, spec.compact_rows
+        n_train = getattr(pg, "n_train", None)
         return DistMeta(
             q=pg.q, part_size=pg.part_size, halo_size=pg.halo_size,
             num_nodes=pg.num_nodes, feat_dim=pg.feat_dim,
             num_classes=pg.num_classes, halo_demand=pg.halo_demand,
             cross_edges=pg.cross_edges,
-            n_train=int(pg.train_mask.sum()),
-            n_val=int(pg.val_mask.sum()),
-            n_test=int(pg.test_mask.sum()),
+            n_train=int(pg.train_mask.sum()) if n_train is None
+            else int(n_train),
+            n_val=int(pg.val_mask.sum()) if n_train is None
+            else int(pg.n_val),
+            n_test=int(pg.test_mask.sum()) if n_train is None
+            else int(pg.n_test),
             layer_dims=tuple(dims), wire=wire,
             p2p_hop_width=hop_w, p2p_compact=compact,
             pair_rows=pair_rows)

@@ -1,13 +1,24 @@
-"""Graph substrate: CSR containers, synthetic datasets, partitioning."""
+"""Graph substrate: CSR containers, synthetic datasets, partitioning —
+in-memory (``partition``) and out-of-core streaming (``stream``)."""
 
 from .data import GraphData, from_edge_list, normalized_edge_weights
 from .partition import (PartitionedGraph, build_partitioned, edge_cut_stats,
-                        greedy_partition, partition_graph, random_partition)
-from .synthetic import citation_graph, copurchase_graph, load, tiny_graph
+                        greedy_partition, partition_graph, random_partition,
+                        refine_partition)
+from .stream import (GraphStore, ShardSet, load_graph_store, load_shards,
+                     open_store, stream_edge_cut, stream_partition,
+                     write_graph_store, write_shards)
+from .synthetic import (citation_graph, copurchase_graph, load,
+                        stream_powerlaw_graph, stream_sbm_graph, tiny_graph)
 
 __all__ = [
     "GraphData", "from_edge_list", "normalized_edge_weights",
     "PartitionedGraph", "build_partitioned", "edge_cut_stats",
     "greedy_partition", "partition_graph", "random_partition",
-    "citation_graph", "copurchase_graph", "load", "tiny_graph",
+    "refine_partition",
+    "GraphStore", "ShardSet", "load_graph_store", "load_shards",
+    "open_store", "stream_edge_cut", "stream_partition",
+    "write_graph_store", "write_shards",
+    "citation_graph", "copurchase_graph", "load", "stream_powerlaw_graph",
+    "stream_sbm_graph", "tiny_graph",
 ]

@@ -48,6 +48,23 @@ def random_partition(g: GraphData, q: int, seed: int = 0) -> np.ndarray:
     return owner
 
 
+def _canonical_rows(g: GraphData, weight: np.ndarray | None = None):
+    """Within-row ascending copy of the CSR (weights permuted alongside).
+
+    The streaming pipeline (``repro.graph.stream``) presents each row's
+    neighbours in whatever order its chunks arrived; sorting rows first
+    makes the BFS order of :func:`greedy_partition` and the weighted
+    neighbour sums of :func:`refine_partition` invariant to edge
+    presentation order.  A no-op (bitwise) for :func:`from_edge_list`
+    graphs, whose rows are already ascending.
+    """
+    indptr, indices = g.indptr, g.indices
+    rows = np.repeat(np.arange(g.num_nodes, dtype=np.int64),
+                     np.diff(indptr))
+    order = np.lexsort((indices, rows))
+    return indptr, indices[order], None if weight is None else weight[order]
+
+
 def greedy_partition(g: GraphData, q: int, seed: int = 0,
                      slack: float = 1.03) -> np.ndarray:
     """METIS-like streaming min-cut (LDG) over a BFS node order."""
@@ -56,7 +73,7 @@ def greedy_partition(g: GraphData, q: int, seed: int = 0,
     capacity = slack * n / q
     owner = np.full(n, -1, np.int32)
     sizes = np.zeros(q, np.float64)
-    indptr, indices = g.indptr, g.indices
+    indptr, indices, _ = _canonical_rows(g)
 
     order = np.empty(n, np.int64)
     pos = 0
@@ -95,25 +112,43 @@ def greedy_partition(g: GraphData, q: int, seed: int = 0,
 
 
 def refine_partition(g: GraphData, owner: np.ndarray, q: int,
-                     passes: int = 4, slack: float = 1.05,
-                     seed: int = 0) -> np.ndarray:
+                     passes: int = 4, slack: float = 1.05, seed: int = 0,
+                     node_weight: np.ndarray | None = None,
+                     edge_weight: np.ndarray | None = None) -> np.ndarray:
     """Kernighan-Lin-style local refinement: greedily move nodes to the
-    partition holding most of their neighbours, subject to balance."""
+    partition holding most of their neighbours, subject to balance.
+
+    ``node_weight``/``edge_weight`` (per node / per directed edge, in
+    ``g.edge_list()`` order) weight the balance constraint and the
+    neighbour affinity — the coarse levels of the multilevel streaming
+    partitioner (``repro.graph.stream``), where each node is a cluster
+    and each edge a multi-edge bundle.  ``None`` (the default) reproduces
+    the unweighted behaviour exactly.  Rows are sorted before refining
+    (:func:`_canonical_rows`), so the result is invariant to the order
+    edges were presented in.
+    """
     n = g.num_nodes
     rng = np.random.default_rng(seed)
     owner = owner.copy()
-    capacity = slack * n / q
-    sizes = np.bincount(owner, minlength=q).astype(np.float64)
-    indptr, indices = g.indptr, g.indices
+    indptr, indices, ew = _canonical_rows(g, edge_weight)
+    if node_weight is None:
+        capacity = slack * n / q
+        sizes = np.bincount(owner, minlength=q).astype(np.float64)
+    else:
+        node_weight = np.asarray(node_weight, np.float64)
+        capacity = slack * float(node_weight.sum()) / q
+        sizes = np.bincount(owner, weights=node_weight, minlength=q)
     counts = np.zeros(q, np.float64)
     for _ in range(passes):
         moved = 0
         for u in rng.permutation(n):
-            neigh = indices[indptr[u]:indptr[u + 1]]
+            row = slice(indptr[u], indptr[u + 1])
+            neigh = indices[row]
             if len(neigh) == 0:
                 continue
             counts[:] = 0.0
-            np.add.at(counts, owner[neigh], 1.0)
+            np.add.at(counts, owner[neigh],
+                      1.0 if ew is None else ew[row])
             cur = owner[u]
             cur_count = counts[cur]
             counts[sizes >= capacity] = -np.inf
@@ -125,9 +160,10 @@ def refine_partition(g: GraphData, owner: np.ndarray, q: int,
             counts[cur] = cur_count
             best = int(np.argmax(counts))
             if best != cur and counts[best] > counts[cur]:
+                w_u = 1.0 if node_weight is None else node_weight[u]
                 owner[u] = best
-                sizes[cur] -= 1.0
-                sizes[best] += 1.0
+                sizes[cur] -= w_u
+                sizes[best] += w_u
                 moved += 1
         if moved == 0:
             break

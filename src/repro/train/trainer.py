@@ -20,7 +20,8 @@ from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
                                      make_train_step, make_worker_mesh,
                                      shard_graph)
 from repro.graph.data import GraphData
-from repro.graph.partition import PartitionedGraph, partition_graph
+from repro.graph.partition import partition_graph
+from repro.graph.stream import ShardSet, is_shard_dir, load_shards
 from repro.nn.gnn import GNNConfig, init_gnn
 from repro.train.optim import Optimizer, adamw
 
@@ -109,7 +110,8 @@ class TrainResult:
     policy_desc: str
 
 
-def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
+def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
+              scheme: str = "random",
               policy: CommPolicy, epochs: int = 300, lr: float = 5e-3,
               weight_decay: float = 0.0, hidden: int = 256, layers: int = 3,
               conv: str = "sage", seed: int = 0, eval_every: int = 5,
@@ -117,6 +119,12 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
               sync: str = "grad", wire: str = "dense",
               log_fn=None) -> TrainResult:
     """Partition ``g`` over ``q`` workers and train under ``policy``.
+
+    ``g`` may also be an on-disk shard directory (written by
+    ``repro.graph.stream.write_shards``) or a loaded ``ShardSet`` — the
+    out-of-core path: partitioning happened offline, the per-pair halo /
+    ELL arrays are already in the shards, and ``q``/``scheme``/the global
+    graph are never consulted (Q ≥ 16 runs load only partition data).
 
     Mirrors the paper's §V setup by default: 3-layer SAGE, 256 hidden,
     full-batch, 300 epochs.  ``wire="packed"`` runs the reduced-volume
@@ -143,14 +151,21 @@ def train_gnn(g: GraphData, *, q: int = 8, scheme: str = "random",
     auto = policy.mode == "auto"
     if auto and wire == "dense":
         wire = "p2p"                   # per-pair rates need a per-pair wire
+    if is_shard_dir(g):
+        g = load_shards(g)
     cfg = GNNConfig(conv=conv, in_dim=g.feat_dim, hidden=hidden,
                     out_dim=g.num_classes, layers=layers)
     params = init_gnn(jax.random.key(seed), cfg)
-    pg: PartitionedGraph = partition_graph(g, q, scheme=scheme, seed=seed)
-    graph = pg.device_arrays()
-    if wire == "p2p" or auto:
-        from repro.dist.halo import attach_p2p
-        graph = attach_p2p(graph, pg)  # auto's per-pair stats need the sets
+    if isinstance(g, ShardSet):
+        pg = g                         # partitioned offline; q comes with it
+        q = pg.q
+        graph = pg.device_arrays()     # halo/ELL arrays ship in the shards
+    else:
+        pg = partition_graph(g, q, scheme=scheme, seed=seed)
+        graph = pg.device_arrays()
+        if wire == "p2p" or auto:
+            from repro.dist.halo import attach_p2p
+            graph = attach_p2p(graph, pg)  # auto's per-pair stats need them
     meta = DistMeta.build(pg, params, wire=wire)
     opt = optimizer or adamw(lr, weight_decay=weight_decay)
     opt_state = opt.init(params)

@@ -41,9 +41,16 @@ MIXED_WIDTHS = [2.0, 4.0, 8.0, 32.0]
 
 def build_setup(q: int, f: int = 256, layers: int = 2, n: int = 256,
                 conv: str = "sage", seed: int = 0, p2p: bool = True,
-                hidden: int | None = None):
+                hidden: int | None = None, shards: bool = False):
     """The shared test scaffold: ``(g, cfg, params, pg, graph)`` with the
-    p2p halo/ELL arrays attached (harmless on the all-gather wires)."""
+    p2p halo/ELL arrays attached (harmless on the all-gather wires).
+
+    ``shards=True`` takes the out-of-core route instead: the same graph is
+    written to a chunked :class:`repro.graph.stream.GraphStore`, sharded
+    on disk with the same owner vector, and loaded back as a ``ShardSet``
+    (bitwise-identical arrays, manifest-carried ``HaloSpec``) — so the
+    same parity cases conform from disk-backed shards.
+    """
     import jax
 
     from repro.graph import partition_graph, tiny_graph
@@ -53,6 +60,19 @@ def build_setup(q: int, f: int = 256, layers: int = 2, n: int = 256,
     cfg = GNNConfig(conv=conv, in_dim=f, hidden=hidden or f,
                     out_dim=g.num_classes, layers=layers)
     params = init_gnn(jax.random.key(seed), cfg)
+    if shards:
+        import tempfile
+
+        from repro.graph.partition import random_partition
+        from repro.graph.stream import (load_shards, write_graph_store,
+                                        write_shards)
+
+        owner = random_partition(g, q, seed=seed)
+        with tempfile.TemporaryDirectory() as td:
+            store = write_graph_store(g, os.path.join(td, "store"))
+            write_shards(store, owner, os.path.join(td, "shards"))
+            pg = load_shards(os.path.join(td, "shards"))
+        return g, cfg, params, pg, pg.device_arrays()
     pg = partition_graph(g, q, scheme="random", seed=seed)
     graph = pg.device_arrays()
     if p2p:
@@ -107,7 +127,8 @@ from repro.nn.gnn import gnn_forward
 spec = json.loads(sys.argv[1])
 q, f, layers, n = spec["q"], spec["f"], spec["layers"], spec["n"]
 g, cfg, params, pg, graph = build_setup(q, f=f, layers=layers, n=n,
-                                        hidden=spec.get("hidden"))
+                                        hidden=spec.get("hidden"),
+                                        shards=spec.get("shards", False))
 mesh = make_worker_mesh(q)
 gs = shard_graph(graph, mesh)
 
@@ -246,7 +267,7 @@ def _run(script: str, spec: dict, q: int, sentinel: str,
 
 def run_forward_parity(q: int, cases: list[dict], f: int = 512,
                        layers: int = 2, n: int = 256, atol: float = 1e-6,
-                       timeout: int = 1200) -> str:
+                       timeout: int = 1200, shards: bool = False) -> str:
     """Run ``cases`` (dicts of ``wire`` / ``policy`` / ``map`` ∈ {None,
     'pair', 'layer'} / optional ``width_map`` ∈ {None, 'pair', 'layer'} /
     optional ``seed``) on a ``q``-device mesh in one subprocess; asserts
@@ -255,7 +276,9 @@ def run_forward_parity(q: int, cases: list[dict], f: int = 512,
     The mixed-rate (and mixed-width) operands are drawn host-side by
     :func:`mixed_map` / :func:`mixed_width_map` (so the subprocess
     exercises exactly the maps the in-process tests use) and shipped
-    through the JSON spec."""
+    through the JSON spec.  ``shards=True`` builds the subprocess's graph
+    from disk-backed shards (``build_setup(shards=True)``) instead of the
+    in-memory partitioner — the Q ≥ 16 scale-conformance route."""
     cases = [dict(c,
                   rates=None if c["map"] is None else mixed_map(
                       q, c.get("seed", 0),
@@ -266,7 +289,7 @@ def run_forward_parity(q: int, cases: list[dict], f: int = 512,
                       layers if c["width_map"] == "layer" else None).tolist())
         for c in cases]
     spec = {"q": q, "f": f, "layers": layers, "n": n, "atol": atol,
-            "cases": cases}
+            "cases": cases, "shards": shards}
     return _run(FORWARD_SCRIPT, spec, q, "PARITY_MATRIX_OK",
                 timeout=timeout)
 

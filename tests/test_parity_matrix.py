@@ -41,3 +41,25 @@ def test_parity_matrix(q):
     out = run_forward_parity(q, _matrix(q))
     # every case must have reported, not just the sentinel
     assert out.count(" OK ") == len(_matrix(q)), out
+
+
+# Q=16 scale conformance (ISSUE 7): the subprocess builds its graph from
+# disk-backed shards (write_graph_store → write_shards → load_shards, the
+# out-of-core ingestion path) rather than the in-memory partitioner, and
+# the emulated ≡ shard_map matrix must still hold on a 16-device mesh —
+# including one mixed per-layer [L, Q, Q] rate × width case.  Small F
+# (LANE-divisible) keeps the 16-way host mesh affordable.
+_Q16_CASES = [
+    {"wire": "p2p", "policy": "full", "map": None},
+    {"wire": "p2p", "policy": "fixed:4", "map": "pair", "seed": 16},
+    {"wire": "p2p", "policy": "fixed:4", "map": "layer",
+     "width_map": "layer", "seed": 46},
+    {"wire": "packed", "policy": "fixed:4", "map": "pair",
+     "width_map": "pair", "seed": 36},
+]
+
+
+@pytest.mark.slow
+def test_parity_matrix_q16_from_shards():
+    out = run_forward_parity(16, _Q16_CASES, f=128, n=512, shards=True)
+    assert out.count(" OK ") == len(_Q16_CASES), out

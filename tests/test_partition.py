@@ -114,3 +114,59 @@ def test_refine_never_increases_edge_cut(scheme_seed, q):
         refined = refine_partition(g, base, q, seed=scheme_seed)
         after = edge_cut_stats(g, refined)["cross_edges"]
         assert after <= before, (after, before)
+
+
+def _scrambled_rows(g, seed):
+    """The same graph with each CSR row's neighbours re-shuffled — the
+    edge presentation order a chunked/streaming producer might emit.
+    Returns the graph and the per-edge permutation (old → new position),
+    so per-edge operands can be carried along."""
+    import dataclasses as dc
+    rng = np.random.default_rng(seed)
+    perm = np.concatenate([
+        g.indptr[u] + rng.permutation(int(g.indptr[u + 1] - g.indptr[u]))
+        for u in range(g.num_nodes)]).astype(np.int64)
+    return dc.replace(g, indices=g.indices[perm]), perm
+
+
+@pytest.mark.parametrize("q", [2, 4])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_partitioners_invariant_to_edge_presentation_order(q, seed):
+    """Regression (ISSUE 7 satellite): refinement — and the whole
+    metis-like pipeline — must produce the identical owner vector no
+    matter what order each row's edges were presented in (the streaming
+    pipeline's chunks make no ordering promises).  Pinned by the
+    sort-before-refine canonicalisation in ``_canonical_rows``."""
+    from repro.graph.partition import (metis_like_partition,
+                                      random_partition, refine_partition)
+    g = tiny_graph(n=300, seed=seed)
+    g2, _ = _scrambled_rows(g, seed + 17)
+    base = random_partition(g, q, seed=seed)
+    np.testing.assert_array_equal(
+        refine_partition(g, base, q, seed=seed),
+        refine_partition(g2, base, q, seed=seed))
+    np.testing.assert_array_equal(
+        metis_like_partition(g, q, seed=seed),
+        metis_like_partition(g2, q, seed=seed))
+
+
+def test_weighted_refine_invariant_and_respects_balance():
+    """The weighted extension (multilevel coarse levels): edge weights
+    presented in any order give the same owners, and node-weight balance
+    holds against the weighted capacity."""
+    from repro.graph.data import normalized_edge_weights
+    from repro.graph.partition import random_partition, refine_partition
+    g = tiny_graph(n=240, seed=1)
+    q, slack = 3, 1.05
+    nw = 1.0 + (np.arange(g.num_nodes) % 5).astype(np.float64)
+    ew = normalized_edge_weights(g, "mean").astype(np.float64)
+    base = random_partition(g, q, seed=1)
+    ref = refine_partition(g, base, q, seed=1, slack=slack,
+                           node_weight=nw, edge_weight=ew)
+    g2, perm = _scrambled_rows(g, 99)
+    ref2 = refine_partition(g2, base, q, seed=1, slack=slack,
+                            node_weight=nw, edge_weight=ew[perm])
+    np.testing.assert_array_equal(ref, ref2)
+    loads = np.bincount(ref, weights=nw, minlength=q)
+    # capacity bound + one node's weight (a move may land just under it)
+    assert loads.max() <= slack * nw.sum() / q + nw.max()

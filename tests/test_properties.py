@@ -208,6 +208,93 @@ def test_quant_dequant_error_within_analytic_bound(width, nb, rate, n, seed):
         np.asarray(quant_dequant(packed, 32)), np.asarray(packed))
 
 
+# ---------------------------------------------------------------------------
+# out-of-core streaming pipeline ≡ in-memory (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(60, 220), q=st.sampled_from([2, 3, 4]),
+       scheme=st.sampled_from(["random", "metis-like"]),
+       chunk_nodes=st.integers(7, 97), chunk_edges=st.integers(40, 900),
+       seed=st.integers(0, 5))
+def test_stream_partition_equals_in_memory_any_chunking(n, q, scheme,
+                                                        chunk_nodes,
+                                                        chunk_edges, seed):
+    """The chunked partitioner is an exact reduction: for ANY chunk
+    granularity (dividing the edge count or not), the owner vector and
+    the edge-cut statistics equal ``partition_graph``'s in-memory
+    results bitwise."""
+    import tempfile
+
+    from repro.graph import (edge_cut_stats, stream_edge_cut,
+                             stream_partition, tiny_graph,
+                             write_graph_store)
+    from repro.graph.partition import PARTITIONERS
+
+    g = tiny_graph(n=n, seed=seed)
+    with tempfile.TemporaryDirectory() as td:
+        store = write_graph_store(g, td + "/store",
+                                  chunk_nodes=chunk_nodes,
+                                  chunk_edges=chunk_edges)
+        owner_s = stream_partition(store, q, scheme=scheme, seed=seed)
+        owner_m = PARTITIONERS[scheme](g, q, seed=seed)
+        np.testing.assert_array_equal(owner_s, owner_m)
+        assert stream_edge_cut(store, owner_s) == \
+            edge_cut_stats(g, owner_m)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(60, 200), q=st.sampled_from([2, 3, 4]),
+       chunk_nodes=st.integers(9, 77), seed=st.integers(0, 4),
+       scheme=st.sampled_from(["random", "metis-like"]))
+def test_shard_roundtrip_bitwise_vs_in_memory(n, q, chunk_nodes, seed,
+                                              scheme):
+    """write shards → load → rebuild ``HaloSpec``: bitwise-exact against
+    ``build_halo_spec``/``build_partitioned``/``attach_p2p`` on the
+    in-memory graph — every stacked array, every scalar fact, and both
+    the manifest-carried and the rebuilt spec."""
+    import json as _json
+    import tempfile
+
+    from repro.dist.halo import (HaloSpec, build_halo_spec, ell_arrays,
+                                 halo_arrays)
+    from repro.graph import (build_partitioned, load_shards, tiny_graph,
+                             write_graph_store, write_shards)
+    from repro.graph.partition import PARTITIONERS
+
+    g = tiny_graph(n=n, seed=seed)
+    owner = PARTITIONERS[scheme](g, q, seed=seed)
+    pg = build_partitioned(g, owner, q)
+    spec = build_halo_spec(pg)
+    with tempfile.TemporaryDirectory() as td:
+        store = write_graph_store(g, td + "/store",
+                                  chunk_nodes=chunk_nodes)
+        ss = load_shards(write_shards(store, owner, td + "/shards"))
+    # spec: manifest copy, json round trip, and rebuild from loaded arrays
+    assert ss.halo_spec == spec
+    assert HaloSpec.from_dict(
+        _json.loads(_json.dumps(spec.to_dict()))) == spec
+    assert build_halo_spec(ss) == spec
+    # scalar facts
+    for k in ("q", "part_size", "halo_size", "num_nodes", "feat_dim",
+              "num_classes", "halo_demand", "cross_edges"):
+        assert getattr(ss, k) == getattr(pg, k), k
+    assert (ss.n_train, ss.n_val, ss.n_test) == \
+        (int(g.train_mask.sum()), int(g.val_mask.sum()),
+         int(g.test_mask.sum()))
+    # every stacked runtime array, bitwise
+    ref = {k: getattr(pg, k) for k in
+           ("features", "labels", "train_mask", "val_mask", "test_mask",
+            "node_valid", "local_dst", "local_src", "local_w",
+            "local_w_iso", "remote_dst", "remote_src", "remote_w",
+            "send_idx", "send_valid")}
+    ref.update(halo_arrays(pg, spec))
+    ref.update(ell_arrays(pg, spec))
+    for k, v in ref.items():
+        np.testing.assert_array_equal(ss.arrays[k], v, err_msg=k)
+
+
 @settings(max_examples=10, deadline=None)
 @given(width=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2 ** 16))
 def test_stochastic_rounding_unbiased(width, seed):

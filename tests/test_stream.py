@@ -1,0 +1,228 @@
+"""Out-of-core streaming pipeline unit tests (ISSUE 7 tentpole).
+
+Covers the disk-backed graph store, the external-sort edge spill, the
+streaming generators, the multilevel partitioner's quality bound, and
+the per-worker shard loader — everything below the equivalence
+properties in ``test_properties.py``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.graph import citation_graph, edge_cut_stats, tiny_graph
+from repro.graph.partition import metis_like_partition
+from repro.graph.stream import (EdgeSpill, load_graph_store, load_shards,
+                                open_store, shard_meta, spill_to_store,
+                                stream_edge_cut, stream_partition,
+                                write_graph_store, write_shards)
+from repro.graph.synthetic import stream_powerlaw_graph, stream_sbm_graph
+
+
+# ---------------------------------------------------------------------------
+# GraphStore round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_store_manifest_and_degrees(tmp_path):
+    g = tiny_graph(n=200, seed=3)
+    store = write_graph_store(g, tmp_path / "s", chunk_nodes=37,
+                              chunk_edges=251)
+    assert store.num_nodes == g.num_nodes
+    assert store.num_edges == g.num_edges
+    assert store.feat_dim == g.feat_dim
+    assert store.num_classes == g.num_classes
+    # chunking never splits a row and tiles [0, n)
+    rows = np.asarray(store.edge_rows)
+    assert rows[0, 0] == 0 and rows[-1, 1] == g.num_nodes
+    assert (rows[1:, 0] == rows[:-1, 1]).all()
+    np.testing.assert_array_equal(store.degrees(), np.diff(g.indptr))
+    # reopening from the manifest sees the same facts
+    re = open_store(tmp_path / "s")
+    assert re.num_edges == store.num_edges
+    assert re.edge_rows == store.edge_rows
+
+
+def test_store_roundtrip_bitwise(tmp_path):
+    g = tiny_graph(n=150, feat_dim=9, seed=5)
+    store = write_graph_store(g, tmp_path / "s", chunk_nodes=11,
+                              chunk_edges=64)
+    g2 = load_graph_store(store)
+    for f in ("indptr", "indices", "features", "labels", "train_mask",
+              "val_mask", "test_mask"):
+        np.testing.assert_array_equal(getattr(g, f), getattr(g2, f),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# EdgeSpill external sort
+# ---------------------------------------------------------------------------
+
+
+def test_spill_canonicalises_like_from_edge_list(tmp_path):
+    """Duplicates, self-loops, and arbitrary emit order all collapse to
+    the same CSR that ``from_edge_list`` builds in memory."""
+    n = 120
+    rng = np.random.default_rng(7)
+    dst = rng.integers(0, n, 800)
+    src = rng.integers(0, n, 800)
+    from repro.graph.data import from_edge_list
+    ref = from_edge_list(n, dst, src, np.zeros((n, 4), np.float32),
+                         np.zeros(n, np.int32))
+
+    def emit(spill):
+        # both directions, shuffled, in two awkward batches plus dups
+        a = np.concatenate([dst, src, dst[:100]])
+        b = np.concatenate([src, dst, src[:100]])
+        p = rng.permutation(len(a))
+        a, b = a[p], b[p]
+        spill.add(a[:301], b[:301])
+        spill.add(a[301:], b[301:])
+
+    store = spill_to_store(n, emit, tmp_path / "s", name="t",
+                           node_writer=None, feat_dim=0, num_classes=1,
+                           chunk_nodes=17, chunk_edges=97)
+    idx = np.concatenate([c[3] for c in store.edge_chunks()])
+    np.testing.assert_array_equal(store.degrees(), np.diff(ref.indptr))
+    np.testing.assert_array_equal(idx, ref.indices)
+
+
+def test_spill_weighted_sums_duplicate_weights(tmp_path):
+    n = 16
+    sp = EdgeSpill(n, str(tmp_path / "w"), bucket_nodes=5, weighted=True)
+    sp.add(np.array([1, 1, 2]), np.array([0, 0, 3]),
+           np.array([1.5, 2.5, 1.0]))
+    sp.add(np.array([1]), np.array([0]), np.array([0.25]))
+    store = sp.to_store(tmp_path / "ws", name="w", node_writer=None,
+                        feat_dim=0, num_classes=1, chunk_nodes=8,
+                        chunk_edges=8)
+    chunks = list(store.edge_chunks())
+    idx = np.concatenate([c[3] for c in chunks])
+    wgt = np.concatenate([c[4] for c in chunks])
+    np.testing.assert_array_equal(idx, [0, 3])       # rows 1 and 2
+    np.testing.assert_allclose(wgt, [4.25, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# Streaming generators
+# ---------------------------------------------------------------------------
+
+
+def test_generators_invariant_to_io_chunking(tmp_path):
+    """The emitted graph depends only on (n, seed, params) — never on
+    the disk chunk sizes (the fixed generation lattice guarantees it)."""
+    for fn, kw in ((stream_sbm_graph, dict(homophily=0.8)),
+                   (stream_powerlaw_graph, dict(alpha=2.3))):
+        stores = [fn(tmp_path / f"{fn.__name__}-{i}", n=2000, feat_dim=6,
+                     avg_degree=4.0, seed=11, chunk_nodes=cn,
+                     chunk_edges=ce, **kw)
+                  for i, (cn, ce) in enumerate([(97, 389), (1024, 8192)])]
+        a, b = (load_graph_store(s) for s in stores)
+        for f in ("indptr", "indices", "features", "labels",
+                  "train_mask", "val_mask", "test_mask"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                          err_msg=f"{fn.__name__}.{f}")
+
+
+def test_stream_sbm_is_homophilous(tmp_path):
+    store = stream_sbm_graph(tmp_path / "sbm", n=3000, n_classes=5,
+                             feat_dim=4, avg_degree=8.0, homophily=0.9,
+                             seed=2)
+    g = load_graph_store(store)
+    dst, src = g.edge_list()
+    intra = float((g.labels[dst] == g.labels[src]).mean())
+    # homophily 0.9 over 5 classes → inter edges rarely land intra
+    assert intra > 0.75, intra
+    assert g.num_edges > 3000 * 4          # roughly avg_degree
+
+
+def test_stream_powerlaw_has_heavy_tail(tmp_path):
+    store = stream_powerlaw_graph(tmp_path / "pl", n=5000, feat_dim=4,
+                                  avg_degree=8.0, alpha=2.3, seed=3)
+    deg = store.degrees().astype(np.float64)
+    assert deg.max() > 12 * deg.mean(), (deg.max(), deg.mean())
+    # top 1% of nodes carry an outsized share of the edges
+    top = np.sort(deg)[-len(deg) // 100:]
+    assert top.sum() > 0.10 * deg.sum()
+
+
+# ---------------------------------------------------------------------------
+# Multilevel partitioner quality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multilevel_cut_within_bound_of_in_memory(tmp_path):
+    """Forced out-of-core path (coarsen → initial → uncoarsen+refine)
+    lands within 1.1× of the in-memory metis-like cut, balanced."""
+    q, slack = 4, 1.05
+    g = citation_graph(n=4000, seed=0)
+    store = write_graph_store(g, tmp_path / "s", chunk_nodes=509,
+                              chunk_edges=4093)
+    owner = stream_partition(store, q, scheme="metis-like", seed=0,
+                             slack=slack, in_core_nodes=0,
+                             coarsen_target=500, refine_max_nodes=5000)
+    cut = stream_edge_cut(store, owner)["cross_frac"]
+    ref = edge_cut_stats(g, metis_like_partition(g, q, seed=0))
+    assert cut <= 1.1 * ref["cross_frac"], (cut, ref["cross_frac"])
+    sizes = np.bincount(owner, minlength=q)
+    assert sizes.max() <= slack * g.num_nodes / q + 1
+
+
+def test_stream_partition_exact_path_matches_in_memory(tmp_path):
+    """Graphs that fit in ``in_core_nodes`` reduce exactly to the
+    in-memory partitioner — same owner vector, both schemes."""
+    from repro.graph.partition import PARTITIONERS
+    g = tiny_graph(n=180, seed=9)
+    store = write_graph_store(g, tmp_path / "s", chunk_nodes=23,
+                              chunk_edges=131)
+    for scheme in ("random", "metis-like"):
+        np.testing.assert_array_equal(
+            stream_partition(store, 3, scheme=scheme, seed=4),
+            PARTITIONERS[scheme](g, 3, seed=4), err_msg=scheme)
+
+
+# ---------------------------------------------------------------------------
+# Shard loader
+# ---------------------------------------------------------------------------
+
+
+def _small_shards(tmp_path, q=3):
+    g = tiny_graph(n=160, seed=6)
+    store = write_graph_store(g, tmp_path / "s", chunk_nodes=19,
+                              chunk_edges=101)
+    owner = stream_partition(store, q, scheme="metis-like", seed=0)
+    return write_shards(store, owner, tmp_path / "shards")
+
+
+def test_shard_meta_reads_no_arrays(tmp_path):
+    from repro.dist.halo import HaloSpec
+    d = _small_shards(tmp_path)
+    meta = shard_meta(d)
+    assert isinstance(meta["halo_spec"], HaloSpec)
+    for k in ("q", "part_size", "halo_size", "num_nodes", "num_edges",
+              "halo_demand", "n_train", "n_val", "n_test"):
+        assert isinstance(meta[k], int), k
+    assert meta["q"] == 3
+
+
+def test_load_shards_subset_slices_full_stack(tmp_path):
+    d = _small_shards(tmp_path)
+    full = load_shards(d)
+    sub = load_shards(d, parts=[1])
+    assert sub.parts == (1,)
+    for k, v in sub.arrays.items():
+        np.testing.assert_array_equal(v[0], full.arrays[k][1], err_msg=k)
+    # global facts are identical regardless of which shard was read
+    assert (sub.q, sub.part_size, sub.halo_size) == \
+        (full.q, full.part_size, full.halo_size)
+    assert sub.halo_spec == full.halo_spec
+
+
+def test_shard_dir_files_are_per_partition(tmp_path):
+    d = _small_shards(tmp_path, q=4)
+    names = sorted(os.listdir(d))
+    assert [n for n in names if n.startswith("part_")] == \
+        [f"part_{p:05d}.npz" for p in range(4)]
+    assert "shards.json" in names and "owner.npy" in names
