@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test verify fast slow floor smoke bench-smoke wire-smoke \
         ring-smoke quant-smoke ratectl-smoke ratectl-pl-smoke \
-        partition-smoke docs all
+        partition-smoke chaos-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -43,8 +43,11 @@ ratectl-pl-smoke:            # per-layer: err <= uniform, budget 5%, parity
 partition-smoke:             # out-of-core: RSS-bounded 1e6-node stream,
 	$(PY) benchmarks/partition_pipeline.py --smoke   # cut + shard parity
 
+chaos-smoke:                 # faults: ledger exact under drops, resume
+	$(PY) benchmarks/chaos_soak.py --smoke           # bitwise, elastic Q-1
+
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
 all: floor verify smoke bench-smoke wire-smoke ring-smoke quant-smoke \
-     ratectl-smoke ratectl-pl-smoke partition-smoke docs
+     ratectl-smoke ratectl-pl-smoke partition-smoke chaos-smoke docs

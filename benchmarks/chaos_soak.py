@@ -1,0 +1,201 @@
+"""Chaos soak: seeded link faults + crash/recovery through the trainer.
+
+Runs 30-step ``train_gnn`` soaks under a deterministic
+``repro.dist.faults.FaultSchedule`` at per-step link-drop rates
+∈ {0, 5%, 20%} (full-communication policy, p2p wire, Q = 4) and replays
+the degradation ladder host-side to predict the ledger exactly: a
+dropped pair serves its cached hop (zero wire bits), past ``max_stale``
+it goes local-only, so the surviving-hop transport of every run must
+equal ``Σ_t 2 · 32 · Σ_e f_e · fresh_rows(t)`` computed from nothing
+but the schedule and the halo pair table.
+
+``--smoke`` is the CI acceptance check (ISSUE 8):
+
+* every step of every soak completes (finite losses, zero crashes);
+* the 20%-drop final loss is within 10% of the fault-free run;
+* each run's realised transport equals the host-replayed analytic
+  ledger (≤ 1e-6 relative);
+* kill-at-step-15 (``stop_after=15`` checkpoint) + ``resume=True``
+  reproduces the uninterrupted run's logged losses and cumulative
+  transport **bitwise**;
+* a worker-crash event at step 15 (shard-backed run) shrinks the run
+  elastically to Q − 1 and keeps training finite — and a post-crash
+  checkpoint resumes bitwise at the smaller world size.
+
+Output: ``experiments/bench/chaos_soak.csv`` (schema in
+benchmarks/README.md).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):               # `python benchmarks/...py` direct
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import dataset, save_rows
+
+Q = 4
+N = 512
+HIDDEN = 256
+LAYERS = 2
+EPOCHS = 30
+SEED = 0
+FAULT_SEED = 11
+MAX_STALE = 3
+BACKOFF_CAP = 8
+DROPS = (0.0, 0.05, 0.2)
+KILL_AT = 15
+
+
+def _policy():
+    from repro.core import CommPolicy
+    return CommPolicy.parse("full", EPOCHS)
+
+
+def _train(g, sched=None, **kw):
+    from repro.train import train_gnn
+    return train_gnn(g, q=Q, policy=_policy(), epochs=EPOCHS, hidden=HIDDEN,
+                     layers=LAYERS, eval_every=5, wire="p2p", seed=SEED,
+                     faults=sched, fault_max_stale=MAX_STALE,
+                     fault_backoff_cap=BACKOFF_CAP, **kw)
+
+
+def _schedule(drop: float, crash_at=()):
+    from repro.dist.faults import FaultSchedule
+    return FaultSchedule(q=Q, seed=FAULT_SEED, drop_rate=drop,
+                         crash_at=tuple(crash_at))
+
+
+def _replay_transport_bits(sched, meta, widths) -> float:
+    """Host replay of the ledger: only FRESH off-diagonal pairs ship
+    bits — ``2 × 32 × Σ_e f_e × pair_rows`` per step (forward +
+    backward cotangent, fp32 wire at rate 1)."""
+    import numpy as np
+
+    from repro.dist.faults import FRESH, degrade_plan, init_degrade
+
+    rows = np.asarray(meta.pair_table(), np.float64)
+    off = ~np.eye(meta.q, dtype=bool)
+    dst = init_degrade(meta.q)
+    total = 0.0
+    for t in range(EPOCHS):
+        serve, dst = degrade_plan(dst, sched.effective_drops(t), t,
+                                  max_stale=MAX_STALE,
+                                  backoff_cap=BACKOFF_CAP)
+        fresh_rows = float((rows * ((serve == FRESH) & off)).sum())
+        total += 2.0 * 32.0 * fresh_rows * float(sum(widths))
+    return total
+
+
+def _widths(g):
+    from repro.dist.ratectl import exchange_widths
+    from repro.nn import GNNConfig
+    cfg = GNNConfig(conv="sage", in_dim=g.feat_dim, hidden=HIDDEN,
+                    out_dim=g.num_classes, layers=LAYERS)
+    return exchange_widths(cfg)
+
+
+def _shard_dir(g, td: str) -> str:
+    from repro.graph.partition import random_partition
+    from repro.graph.stream import write_graph_store, write_shards
+    owner = random_partition(g, Q, seed=SEED)
+    store = write_graph_store(g, os.path.join(td, "store"))
+    write_shards(store, owner, os.path.join(td, "shards"))
+    return os.path.join(td, "shards")
+
+
+def sweep(assert_ok: bool) -> list[dict]:
+    import numpy as np
+
+    g = dataset("arxiv", n=N)
+    widths = _widths(g)
+    rows, base_loss = [], None
+    for drop in DROPS:
+        sched = _schedule(drop)
+        t0 = time.time()
+        res = _train(g, sched)
+        losses = res.history.loss
+        finite = bool(np.all(np.isfinite(losses)))
+        measured = res.history.total_transport_gfloats * 32e9
+        expect = _replay_transport_bits(sched, res.meta, widths)
+        ledger_ok = abs(measured - expect) <= 1e-6 * max(expect, 1.0)
+        if drop == 0.0:
+            base_loss = losses[-1]
+        rel = abs(losses[-1] - base_loss) / max(base_loss, 1e-12)
+        rows.append({"drop_rate": drop, "final_loss": losses[-1],
+                     "loss_vs_clean": rel, "transport_gbits": measured / 1e9,
+                     "analytic_gbits": expect / 1e9,
+                     "ledger_ok": int(ledger_ok), "finite": int(finite),
+                     "wall_s": time.time() - t0})
+        print(f"drop={drop:>4}: loss={losses[-1]:.4f} (vs clean "
+              f"{rel:.2%}), transport={measured / 1e9:.3f} Gbit, "
+              f"ledger {'OK' if ledger_ok else 'MISMATCH'}")
+        if assert_ok:
+            assert finite, f"non-finite loss at drop={drop}"
+            assert ledger_ok, (f"transport {measured} != analytic replay "
+                               f"{expect} at drop={drop}")
+            assert rel <= 0.10, (f"20%-drop loss {losses[-1]} deviates "
+                                 f"{rel:.1%} from fault-free {base_loss}")
+    return rows
+
+
+def kill_resume(assert_ok: bool) -> dict:
+    g = dataset("arxiv", n=N)
+    sched = _schedule(0.2)
+    with tempfile.TemporaryDirectory() as td:
+        _train(g, sched, checkpoint_dir=td, stop_after=KILL_AT)
+        resumed = _train(g, sched, checkpoint_dir=td, resume=True)
+    full = _train(g, sched)
+    n_tail = len(resumed.history.loss)
+    tail = full.history.loss[-n_tail:]
+    bitwise = resumed.history.loss == tail and \
+        resumed.history.transport_gfloats[-1] == \
+        full.history.transport_gfloats[-1]
+    print(f"kill-at-{KILL_AT} resume: "
+          f"{'bitwise' if bitwise else 'DIVERGED'}")
+    if assert_ok:
+        assert bitwise, (resumed.history.loss, tail)
+    return {"leg": "kill_resume", "bitwise": int(bitwise)}
+
+
+def crash_elastic(assert_ok: bool) -> dict:
+    import numpy as np
+
+    g = dataset("arxiv", n=N)
+    with tempfile.TemporaryDirectory() as td:
+        shards = _shard_dir(g, td)
+        sched = _schedule(0.05, crash_at=((KILL_AT, 1),))
+        res = _train(shards, sched)
+        finite = bool(np.all(np.isfinite(res.history.loss)))
+        shrunk = res.meta.q == Q - 1
+        # post-crash checkpoint + resume replays the shrink bitwise
+        ck = os.path.join(td, "ck")
+        _train(shards, sched, checkpoint_dir=ck, stop_after=KILL_AT + 5)
+        resumed = _train(shards, sched, checkpoint_dir=ck, resume=True)
+        n_tail = len(resumed.history.loss)
+        bitwise = resumed.history.loss == res.history.loss[-n_tail:]
+    print(f"crash leg: finite={finite} q={res.meta.q} "
+          f"post-crash resume {'bitwise' if bitwise else 'DIVERGED'}")
+    if assert_ok:
+        assert finite and shrunk and bitwise
+    return {"leg": "crash_elastic", "finite": int(finite),
+            "q_final": res.meta.q, "bitwise": int(bitwise)}
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = sweep(assert_ok=smoke)
+    kill_resume(assert_ok=smoke)
+    crash_elastic(assert_ok=smoke)
+    path = save_rows("chaos_soak", rows)
+    print(f"wrote {path}")
+    if smoke:
+        print("CHAOS_SOAK_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    main()

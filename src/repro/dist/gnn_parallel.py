@@ -588,13 +588,41 @@ def _pair_ledger(meta: DistMeta, f: int, rate_map, row_bits,
         embed(pair_t), embed(pair_err), embed(pair_delta)])
 
 
+def _dead_mix(meta: DistMeta, dead) -> jnp.ndarray:
+    """Per-receiver fraction of remote halo rows served by DEAD pairs
+    (``[Q]``): the blend weight of the local-only renormalisation.  A
+    fully dark receiver (every remote pair dead) lands exactly on the
+    isolated (No-Comm) aggregation weights — the paper's rate→0 limit
+    (DESIGN.md §3.10)."""
+    rows = jnp.asarray(meta.pair_table(), jnp.float32)
+    dark = jnp.sum(rows * jnp.asarray(dead, jnp.float32), axis=1)
+    return dark / jnp.maximum(jnp.sum(rows, axis=1), 1.0)
+
+
+def _fault_live(q: int, fskip, dead, live):
+    """Fold the fault masks into the ledger's live matrix: CACHED
+    (``fskip``) and DEAD pairs ship nothing, forward or backward — both
+    their analytic and transport charges go to zero, and the budget/PI
+    loop re-spends those bits on live pairs."""
+    if fskip is None and dead is None:
+        return live
+    lv = jnp.ones((q, q), jnp.float32) if live is None else live
+    if fskip is not None:
+        lv = lv * (1.0 - jnp.asarray(fskip, jnp.float32))
+    if dead is not None:
+        lv = lv * (1.0 - jnp.asarray(dead, jnp.float32))
+    return lv
+
+
 def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                              compressor: Compressor | None, rate, key,
                              packed_k: dict | None = None, rate_map=None,
                              skip=None, cache=None,
                              cache_out: list | None = None,
                              width_map=None, resid=None,
-                             resid_out: list | None = None):
+                             resid_out: list | None = None,
+                             fskip=None, fcache=None,
+                             fcache_out: list | None = None, dead=None):
     """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
 
     Numerically identical to the shard_map path: the all-gather becomes a
@@ -638,6 +666,18 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     step instead of lost (gradients see only the STE path — residual
     injection is ``stop_gradient``).
 
+    ``fskip``/``fcache``/``fcache_out``/``dead`` are the FAULT channel
+    (DESIGN.md §3.10) — deliberately separate from the ``stale``
+    controller's ``skip``/``cache`` so degraded-mode halo service works
+    under every policy: a pair with ``fskip[i, j] == 1`` (link dropped,
+    cache still fresh enough) is served from ``fcache[call]`` and charges
+    zero wire bits; ``dead[i, j] == 1`` (past ``max_stale``) zeroes the
+    pair's rows and blends the receiver's local aggregation toward the
+    isolated weights (:func:`_dead_mix`).  The served buffers land in
+    ``fcache_out`` (one ``[Q, D, H, F]`` sender-major entry per exchange
+    call) so the receiver's cache tracks the last content it actually
+    aggregated.
+
     The returned oracle carries the split-phase API of the pipelined
     forward (DESIGN.md §3.7): ``aggregate.start(li, x)`` issues the
     pack + exchange and returns ``(token, bits)``;
@@ -660,6 +700,11 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         _rate_tensor_layers(meta, width_map)   # validate [L, Q, Q] shape
     if resid is not None and not p2p_wire:
         raise ValueError("error-feedback residuals are a p2p-wire feature")
+    if (fskip is not None or fcache is not None or dead is not None) and \
+            not (p2p_wire and rate_map is not None):
+        raise ValueError("fault channels (fskip/fcache/dead) ride the "
+                         "p2p rate-map wire; pass rate_map with "
+                         "wire='p2p' (DESIGN.md §3.10)")
     calls = itertools.count()
 
     def pair_stats_p2p(publish, pos_all, k_used):
@@ -751,8 +796,24 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                     sk = skip[rv, jj]                             # [Q, D]
                     sent = jnp.where(sk[..., None, None] > 0.0, c, sent)
                     live = 1.0 - skip
+                if fcache is not None:
+                    # fault channel: dropped-but-fresh pairs serve the
+                    # receiver's cached hop rows (zero wire bits)
+                    fsk = fskip[rv, jj]                           # [Q, D]
+                    sent = jnp.where(fsk[..., None, None] > 0.0,
+                                     fcache[call], sent)
+                if fcache_out is not None:
+                    fcache_out.append(sent)
                 if cache_out is not None:
                     cache_out.append(sent)
+                if dead is not None:
+                    # past max_stale: the pair ships nothing; its rows
+                    # zero out and `complete` renormalises the receiver's
+                    # local aggregation (_dead_mix)
+                    dd = dead[rv, jj]                             # [Q, D]
+                    sent = jnp.where(dd[..., None, None] > 0.0,
+                                     jnp.zeros_like(sent), sent)
+                live = _fault_live(q, fskip, dead, live)
                 row_bits = k_pairs.astype(jnp.float32) * (
                     per_block_wire_bits(wm) if wm is not None
                     else LANE * 32.0)
@@ -857,6 +918,13 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
 
         if p2p_wire:
             ell_w = _ell_w_for(graph, policy, rate)
+            if dead is not None:
+                # local-only fallback: blend each receiver's aggregation
+                # weights toward the isolated normalisation by its dark
+                # remote-row fraction (all pairs dead → exact No-Comm)
+                mix = _dead_mix(meta, dead)
+                ell_w = ell_w + mix[:, None, None] * \
+                    (graph["ell_w_iso"] - ell_w)
 
             def part_p2p(xq, nbr, w, rnbr, rslot, rd, rs, rw, halo_c):
                 loc = ell_aggregate(xq, nbr, w, rnbr, rslot)
@@ -894,7 +962,9 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
 def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                           compressor: Compressor | None, rate, key,
                           axis: str = AXIS, packed_k: dict | None = None,
-                          rate_map=None, width_map=None):
+                          rate_map=None, width_map=None,
+                          fskip=None, fcache=None,
+                          fcache_out: list | None = None, dead=None):
     """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``).
 
     Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
@@ -927,6 +997,17 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     emulated-backend feature (residual state is per-exchange-call host
     state); the parity suite runs without it.
 
+    ``fskip``/``fcache``/``fcache_out``/``dead`` are the fault channel
+    (DESIGN.md §3.10; p2p rate-map wire only), applied RECEIVER-side
+    after ``neighbor_exchange_finish``: the SPMD ``ppermute`` still
+    executes shape-uniformly (a fault means delivery failed, not that the
+    hop was never scheduled), but the receiver discards the dropped
+    pair's rows in favour of ``fcache[call][0]`` (its ``[1, D, H, F]``
+    receiver-major cache block, sharded over the worker axis) or zeros
+    (dead pairs), and the ledger's ``live`` mask zeroes both charges —
+    the same pair arithmetic as the emulated backend, so fault runs stay
+    in the parity matrix.
+
     Carries the same ``start``/``complete`` split-phase attributes as the
     emulated oracle; on this backend ``start`` ends at the ``ppermute``
     (``neighbor_exchange_start``) and ``complete`` begins at the unpack
@@ -945,6 +1026,11 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             raise ValueError("per-pair width maps ride the rate-map wire; "
                              "pass rate_map alongside width_map")
         _rate_tensor_layers(meta, width_map)   # validate [L, Q, Q] shape
+    if (fskip is not None or fcache is not None or dead is not None) and \
+            not (p2p_wire and rate_map is not None):
+        raise ValueError("fault channels (fskip/fcache/dead) ride the "
+                         "p2p rate-map wire; pass rate_map with "
+                         "wire='p2p' (DESIGN.md §3.10)")
     calls = itertools.count()
 
     def pair_err_shard(publish_pre, pos_me, k_d):
@@ -1001,6 +1087,7 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                 bits = _pair_ledger(meta, f, rm, row_bits,
                                     pair_err,
                                     jnp.zeros((q, q), jnp.float32),
+                                    live=_fault_live(q, fskip, dead, None),
                                     li=lix, n_layers=n_layers,
                                     width_map=wm)
             else:
@@ -1014,7 +1101,7 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                     graph["p2p_send_valid"][0], axis, key=k_call,
                     n_keep=n_keep)
                 bits = _exchange_bits(meta, f, rate, wire_width)
-            return (hops, k_call, n_keep), bits
+            return (hops, k_call, n_keep, call), bits
 
         sent = xq[graph["send_idx"][0]] * graph["send_valid"][0][:, None]
         wire_width = None
@@ -1075,12 +1162,34 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             return out[:p_sz][None]
 
         if p2p_wire:
-            hops, k_call, n_keep = token
-            loc = ell_aggregate(xq, graph["ell_nbr"][0],
-                                _ell_w_for(graph, policy, rate)[0],
+            hops, k_call, n_keep, call = token
+            ell_w = _ell_w_for(graph, policy, rate)[0]
+            if dead is not None:
+                me = lax.axis_index(axis)
+                mix = _dead_mix(meta, dead)[me]
+                ell_w = ell_w + mix * (graph["ell_w_iso"][0] - ell_w)
+            loc = ell_aggregate(xq, graph["ell_nbr"][0], ell_w,
                                 graph["ell_rnbr"][0], graph["ell_rslot"][0])
             halo = neighbor_exchange_finish(hops, axis, key=k_call,
                                             n_keep=n_keep, f=f)
+            if q > 1 and (fcache is not None or dead is not None):
+                # receiver-side fault service: hop d's rows came from
+                # sender (me - d) mod q; substitute the cached block for
+                # CACHED pairs, zeros for DEAD ones (emulated-identical)
+                me = lax.axis_index(axis)
+                src = (me - jnp.arange(1, q)) % q              # [D]
+                hal3 = halo.reshape(q - 1, -1, f)
+                if fcache is not None:
+                    fsk = fskip[me, src]
+                    hal3 = jnp.where(fsk[:, None, None] > 0.0,
+                                     fcache[call][0], hal3)
+                if fcache_out is not None:
+                    fcache_out.append(hal3[None])
+                if dead is not None:
+                    dd = dead[me, src]
+                    hal3 = jnp.where(dd[:, None, None] > 0.0,
+                                     jnp.zeros_like(hal3), hal3)
+                halo = hal3.reshape(-1, f)
             rem = jnp.zeros((p_sz + 1, f), x.dtype)
             rem = rem.at[graph["remote_dst"][0]].add(
                 graph["remote_w"][0][:, None] *

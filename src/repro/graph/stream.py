@@ -1074,13 +1074,28 @@ def load_shards(path: str | os.PathLike,
                 parts: list[int] | None = None) -> ShardSet:
     """Load shard arrays for ``parts`` (default: all) as ``[len(parts),
     ...]`` stacks.  A single-partition load reads exactly one
-    ``part_*.npz`` — the per-worker ingestion path."""
+    ``part_*.npz`` — the per-worker ingestion path (and what the
+    elastic-Q recovery uses to boot a replacement worker).  ``parts``
+    must be unique, in-range partition ids; they are loaded in the
+    given order."""
     meta = shard_meta(path)
     q = meta["q"]
-    parts = list(range(q)) if parts is None else list(parts)
+    parts = list(range(q)) if parts is None else [int(p) for p in parts]
+    if not parts:
+        raise ValueError("parts must name at least one partition")
+    if len(set(parts)) != len(parts):
+        raise ValueError(f"duplicate partition ids in parts: {parts}")
+    bad = [p for p in parts if not 0 <= p < q]
+    if bad:
+        raise ValueError(f"partition ids {bad} out of range for q={q}")
     stacks: dict[str, list] = {k: [] for k in _SHARD_KEYS}
     for p in parts:
-        with np.load(os.path.join(path, f"part_{p:05d}.npz")) as z:
+        fname = os.path.join(path, f"part_{p:05d}.npz")
+        if not os.path.exists(fname):
+            raise FileNotFoundError(
+                f"shard dir {path!s} is missing partition file "
+                f"part_{p:05d}.npz (manifest says q={q})")
+        with np.load(fname) as z:
             for k in _SHARD_KEYS:
                 stacks[k].append(z[k])
     arrays = {k: np.stack(v) for k, v in stacks.items()}

@@ -2,6 +2,16 @@
 
 Layout-stable: leaves are stored as (dtype, shape, raw bytes) in tree-flatten
 order with the treedef structure recorded as a string for validation.
+
+Crash consistency (DESIGN.md §3.10): ``save`` writes through a temp file,
+fsyncs it, atomically renames it over the target, and fsyncs the
+containing directory — a crash at any point leaves either the old
+checkpoint or the new one, never a torn file.  ``restore`` validates the
+treedef, leaf count, and every leaf's shape AND dtype, reporting the
+offending tree path.  :func:`save_train_state` / :func:`restore_train_state`
+round-trip the *full* train state (params, optimizer, controller state,
+halo/fault caches, EF residuals, cumulative ledger counters, step) so
+``train_gnn(resume=True)`` reproduces the uninterrupted run bitwise.
 """
 
 from __future__ import annotations
@@ -13,6 +23,10 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+#: the single train-state file a checkpoint directory holds — the atomic
+#: rename makes in-place overwrite crash-consistent, so no numbered files
+TRAIN_STATE_FILE = "state.ckpt"
 
 
 def _encode_leaf(x) -> dict:
@@ -33,8 +47,27 @@ def _decode_leaf(d) -> jnp.ndarray:
                                      np.dtype(d["dtype"])).reshape(shape))
 
 
+def _leaf_dtype(x) -> str:
+    a = np.asarray(x)
+    return "bfloat16" if a.dtype == jnp.bfloat16 else str(a.dtype)
+
+
+def _fsync_dir(d: str) -> None:
+    """Durably record the rename itself (best-effort on platforms whose
+    directories reject O_RDONLY opens)."""
+    try:
+        fd = os.open(d, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(path: str, tree, extra: dict | None = None) -> None:
-    """Atomically write ``tree`` (any pytree of arrays) to ``path``."""
+    """Atomically write ``tree`` (any pytree of arrays) to ``path``:
+    tmp file + fsync + rename + directory fsync."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     payload = {
         "treedef": str(treedef),
@@ -47,26 +80,80 @@ def save(path: str, tree, extra: dict | None = None) -> None:
     try:
         with os.fdopen(fd, "wb") as f:
             f.write(msgpack.packb(payload, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(d)
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
 
 
-def restore(path: str, like):
-    """Restore into the structure of ``like`` (validates treedef + shapes)."""
+def peek(path: str) -> dict:
+    """The ``extra`` metadata of a checkpoint without decoding its leaves
+    — resume uses it to learn the checkpoint's world (q, alive workers)
+    *before* it can build the like-tree to restore into."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
-    leaves, treedef = jax.tree_util.tree_flatten(like)
+    return payload["extra"]
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (validates treedef + every
+    leaf's shape and dtype, naming the offending tree path)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
     if payload["treedef"] != str(treedef):
         raise ValueError("checkpoint treedef mismatch")
-    if len(payload["leaves"]) != len(leaves):
+    if len(payload["leaves"]) != len(leaves_p):
         raise ValueError("checkpoint leaf count mismatch")
     out = []
-    for stored, ref in zip(payload["leaves"], leaves):
+    for stored, (kp, ref) in zip(payload["leaves"], leaves_p):
         arr = _decode_leaf(stored)
+        where = jax.tree_util.keystr(kp) or "<root>"
         if tuple(arr.shape) != tuple(np.shape(ref)):
             raise ValueError(
-                f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
+                f"shape mismatch at {where}: checkpoint "
+                f"{tuple(arr.shape)} vs expected {tuple(np.shape(ref))}")
+        want = _leaf_dtype(ref)
+        if stored["dtype"] != want:
+            raise ValueError(
+                f"dtype mismatch at {where}: checkpoint "
+                f"{stored['dtype']} vs expected {want}")
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out), payload["extra"]
+
+
+# ---------------------------------------------------------------------------
+# Full-train-state API (crash-consistent resume)
+# ---------------------------------------------------------------------------
+
+
+def latest_checkpoint(ckpt_dir: str) -> str | None:
+    """Path of the train-state checkpoint under ``ckpt_dir`` (or None)."""
+    p = os.path.join(ckpt_dir, TRAIN_STATE_FILE)
+    return p if os.path.exists(p) else None
+
+
+def save_train_state(ckpt_dir: str, tree, step: int,
+                     extra: dict | None = None) -> str:
+    """Atomically persist the full train state after ``step`` completed
+    steps.  ``tree`` must round-trip through :func:`restore` against the
+    trainer's like-tree — every piece of carried state (controller,
+    caches, residuals, cumulative counters) belongs in it, or the resume
+    diverges from the uninterrupted run."""
+    path = os.path.join(ckpt_dir, TRAIN_STATE_FILE)
+    save(path, tree, extra={"step": int(step), **(extra or {})})
+    return path
+
+
+def restore_train_state(ckpt_dir: str, like):
+    """``(tree, step, extra)`` from ``ckpt_dir`` — raises FileNotFoundError
+    when no checkpoint exists (callers decide whether that is fatal)."""
+    path = latest_checkpoint(ckpt_dir)
+    if path is None:
+        raise FileNotFoundError(
+            f"no {TRAIN_STATE_FILE} under {ckpt_dir!r}")
+    tree, extra = restore(path, like)
+    return tree, int(extra["step"]), extra

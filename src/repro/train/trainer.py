@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.varco import CommPolicy
+from repro.dist import faults as faultlib
 from repro.dist.gnn_parallel import (DistMeta, make_eval_step,
                                      make_train_step, make_worker_mesh,
                                      shard_graph)
@@ -23,6 +24,7 @@ from repro.graph.data import GraphData
 from repro.graph.partition import partition_graph
 from repro.graph.stream import ShardSet, is_shard_dir, load_shards
 from repro.nn.gnn import GNNConfig, init_gnn
+from repro.train import checkpoint as ckpt
 from repro.train.optim import Optimizer, adamw
 
 
@@ -117,6 +119,10 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
               conv: str = "sage", seed: int = 0, eval_every: int = 5,
               use_shard_map: bool = False, optimizer: Optimizer | None = None,
               sync: str = "grad", wire: str = "dense",
+              faults: "faultlib.FaultSchedule | None" = None,
+              fault_max_stale: int = 5, fault_backoff_cap: int = 16,
+              checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+              resume: bool = False, stop_after: int | None = None,
               log_fn=None) -> TrainResult:
     """Partition ``g`` over ``q`` workers and train under ``policy``.
 
@@ -147,10 +153,30 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
     exchanges get their own water-filled share of each step's bit
     allowance — and fills ``History.layer_transport_gf`` (DESIGN.md
     §3.7).
+
+    A ``faults`` :class:`repro.dist.faults.FaultSchedule` turns on the
+    degraded-mode loop (DESIGN.md §3.10): each step the schedule's
+    seeded link-drop mask feeds the *exchange → cached → backoff-probe →
+    local-only* ladder (``fault_max_stale`` staleness cap,
+    ``fault_backoff_cap`` probe backoff), every policy's step runs
+    through the fault-channel oracle (scalar policies ride a uniform
+    rate map), and a ``crash_at`` event drops the run elastically to
+    Q − 1 — shard-backed inputs only — migrating controller and ladder
+    state.  The fault channel defaults the wire to ``"p2p"`` like auto.
+
+    ``checkpoint_dir`` + ``checkpoint_every`` persist the full train
+    state atomically every N epochs (``stop_after`` additionally
+    checkpoints and exits after that many epochs — the kill switch of
+    the crash-consistency tests); ``resume=True`` restores it and
+    continues at the saved epoch, bitwise-equal to the uninterrupted
+    run.  Resume replays any recorded worker shrink but refuses a
+    checkpoint whose world size cannot be reached from ``g``.
     """
     auto = policy.mode == "auto"
-    if auto and wire == "dense":
+    fault = faults is not None
+    if (auto or fault) and wire == "dense":
         wire = "p2p"                   # per-pair rates need a per-pair wire
+    sched = faults
     if is_shard_dir(g):
         g = load_shards(g)
     cfg = GNNConfig(conv=conv, in_dim=g.feat_dim, hidden=hidden,
@@ -166,6 +192,33 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
         if wire == "p2p" or auto:
             from repro.dist.halo import attach_p2p
             graph = attach_p2p(graph, pg)  # auto's per-pair stats need them
+    if resume:
+        if not checkpoint_dir:
+            raise ValueError("resume=True needs checkpoint_dir")
+        path = ckpt.latest_checkpoint(checkpoint_dir)
+        if path is None:
+            raise FileNotFoundError(
+                f"resume=True but no checkpoint under {checkpoint_dir!r}")
+        peeked = ckpt.peek(path)
+        alive = peeked.get("alive")
+        if alive is not None and len(alive) < q:
+            # the checkpointed run had already shrunk: replay the shrinks
+            # so the like-tree (and every step closure) matches its world
+            if not isinstance(pg, ShardSet):
+                raise ValueError("resuming a shrunk run needs shard-backed "
+                                 "input (a ShardSet / shard dir)")
+            cur = list(range(q))
+            for w in sorted(set(cur) - set(int(a) for a in alive)):
+                pg = faultlib.shrink_shards(pg, cur.index(w))
+                cur.remove(w)
+            q = pg.q
+            graph = pg.device_arrays()
+            if sched is not None:
+                sched = dataclasses.replace(
+                    sched, alive=tuple(int(a) for a in alive))
+        if int(peeked.get("q", q)) != q:
+            raise ValueError(f"checkpoint world size {peeked['q']} does "
+                             f"not match this run's q={q}")
     meta = DistMeta.build(pg, params, wire=wire)
     opt = optimizer or adamw(lr, weight_decay=weight_decay)
     opt_state = opt.init(params)
@@ -173,24 +226,40 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
     mesh = make_worker_mesh(q) if use_shard_map else None
     if mesh is not None:
         graph = shard_graph(graph, mesh)
-    if auto:
+    if auto or fault:
         from repro.dist.ratectl import (init_halo_cache, init_wire_residuals,
-                                        make_auto_train_step, make_controller)
-        ctl = make_controller(policy, meta, cfg, total_steps=epochs)
-        ctl_state = ctl.init()
+                                        make_auto_train_step, make_controller,
+                                        uniform_plan)
+
+    def _init_cache(meta_):
+        if not auto:
+            return ()
         if policy.controller == "stale":
-            cache = init_halo_cache(meta, cfg)
-        elif policy.max_width < 32 and meta.wire == "p2p" and mesh is None:
+            return init_halo_cache(meta_, cfg)
+        if policy.max_width < 32 and meta_.wire == "p2p" and mesh is None:
             # quantising wire: the cache channel carries the error-feedback
             # residuals instead (stale XOR EF, DESIGN.md §3.8)
-            cache = init_wire_residuals(meta, cfg)
-        else:
-            cache = ()
-        step = make_auto_train_step(cfg, policy, opt, meta, mesh=mesh,
-                                    sync=sync)
+            return init_wire_residuals(meta_, cfg)
+        return ()
+
+    def _make_step(meta_):
+        if fault:
+            return faultlib.make_fault_train_step(cfg, policy, opt, meta_,
+                                                  mesh=mesh, sync=sync)
+        if auto:
+            return make_auto_train_step(cfg, policy, opt, meta_, mesh=mesh,
+                                        sync=sync)
+        return make_train_step(cfg, policy, opt, meta_, mesh=mesh, sync=sync)
+
+    ctl = ctl_state = None
+    if auto:
+        ctl = make_controller(policy, meta, cfg, total_steps=epochs)
+        ctl_state = ctl.init()
+    cache = _init_cache(meta)
+    fcache = init_halo_cache(meta, cfg) if fault else ()
+    dstate = faultlib.init_degrade(q) if fault else None
+    step = _make_step(meta)
     evaluate = make_eval_step(cfg, meta, mesh=mesh)
-    if not auto:
-        step = make_train_step(cfg, policy, opt, meta, mesh=mesh, sync=sync)
 
     hist = History()
     halo_bits_cum = 0.0
@@ -198,14 +267,126 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
     pair_bits_cum = None
     layer_bits_cum = None
     err_cum = 0.0
-    t0 = time.time()
-    for epoch in range(epochs):
+    start_epoch = 0
+
+    def _state_tree():
+        tree = {"params": params, "opt": opt_state}
         if auto:
+            tree["ctl"] = ctl_state
+        if cache:
+            tree["cache"] = tuple(cache)
+        if fault:
+            tree["fcache"] = tuple(fcache)
+        return tree
+
+    def _ck_extra():
+        return {
+            "q": int(q),
+            "alive": [int(w) for w in sched.alive_workers] if fault
+            else None,
+            "halo": float(halo_bits_cum),
+            "transport": float(transport_bits_cum),
+            "err": float(err_cum),
+            "pair": None if pair_bits_cum is None else pair_bits_cum.tolist(),
+            "layer": None if layer_bits_cum is None
+            else layer_bits_cum.tolist(),
+            "degrade": None if dstate is None else {
+                "age": dstate.age.tolist(),
+                "backoff": dstate.backoff.tolist(),
+                "next_try": dstate.next_try.tolist()},
+            "policy": policy.describe(),
+        }
+
+    if resume:
+        tree, start_epoch, ext = ckpt.restore_train_state(checkpoint_dir,
+                                                          _state_tree())
+        params, opt_state = tree["params"], tree["opt"]
+        if auto:
+            ctl_state = tree["ctl"]
+        if "cache" in tree:
+            cache = tree["cache"]
+        if fault:
+            fcache = tree["fcache"]
+            dg = ext.get("degrade")
+            if dg is not None:
+                dstate = faultlib.DegradeState(
+                    age=np.asarray(dg["age"], np.int64),
+                    backoff=np.asarray(dg["backoff"], np.int64),
+                    next_try=np.asarray(dg["next_try"], np.int64))
+        halo_bits_cum = float(ext.get("halo", 0.0))
+        transport_bits_cum = float(ext.get("transport", 0.0))
+        err_cum = float(ext.get("err", 0.0))
+        if ext.get("pair") is not None:
+            pair_bits_cum = np.asarray(ext["pair"], np.float64)
+        if ext.get("layer") is not None:
+            layer_bits_cum = np.asarray(ext["layer"], np.float64)
+
+    t0 = time.time()
+    for epoch in range(start_epoch, epochs):
+        if fault:
+            crash = sched.crash_at_step(epoch)
+            if crash is not None:
+                if not isinstance(pg, ShardSet):
+                    raise ValueError(
+                        "elastic worker-crash recovery needs shard-backed "
+                        "input (a ShardSet / shard dir) — in-memory "
+                        "partitions cannot be renumbered at Q - 1")
+                if q <= 2:
+                    raise ValueError("cannot shrink below Q = 2 — the "
+                                     "fault plane needs at least one link")
+                q_old = q
+                pg = faultlib.shrink_shards(pg, crash)
+                q = pg.q
+                graph = pg.device_arrays()
+                meta = DistMeta.build(pg, params, wire=wire)
+                mesh = make_worker_mesh(q) if use_shard_map else None
+                if mesh is not None:
+                    graph = shard_graph(graph, mesh)
+                sched = sched.shrink(crash)
+                dstate = faultlib.migrate_degrade_state(dstate, crash)
+                if auto:
+                    ctl = make_controller(policy, meta, cfg,
+                                          total_steps=epochs)
+                    ctl_state = faultlib.migrate_controller_state(
+                        ctl_state, crash, q_old)
+                cache = _init_cache(meta)   # stale/EF buffers restart cold
+                fcache = init_halo_cache(meta, cfg)
+                step = _make_step(meta)
+                evaluate = make_eval_step(cfg, meta, mesh=mesh)
+                # keep cumulative pair splits shaped [..., Q, Q]: the dead
+                # worker's history leaves the ledger with it
+                if pair_bits_cum is not None:
+                    pair_bits_cum = np.delete(
+                        np.delete(pair_bits_cum, crash, 0), crash, 1)
+                if layer_bits_cum is not None:
+                    layer_bits_cum = np.delete(
+                        np.delete(layer_bits_cum, crash, 1), crash, 2)
+            serve, dstate = faultlib.degrade_plan(
+                dstate, sched.effective_drops(epoch), epoch,
+                max_stale=fault_max_stale, backoff_cap=fault_backoff_cap)
+            fskip, dead = faultlib.serve_masks(serve)
+        if fault:
+            if auto:
+                plan, ctl_state = ctl.plan(ctl_state, epoch)
+            else:
+                r = float(policy.rate(epoch)) if policy.compresses else 1.0
+                plan = uniform_plan(q, r)
+            params, opt_state, m, cache, fcache = step(
+                params, opt_state, graph, jax.random.key(epoch), plan,
+                fskip, dead, cache, fcache)
+            if auto:
+                ctl_state = ctl.observe(ctl_state, m)
+        elif auto:
             plan, ctl_state = ctl.plan(ctl_state, epoch)
             params, opt_state, m, cache = step(params, opt_state, graph,
                                                jax.random.key(epoch), plan,
                                                cache)
             ctl_state = ctl.observe(ctl_state, m)
+        else:
+            params, opt_state, m = step(params, opt_state, graph,
+                                        jnp.asarray(epoch),
+                                        jax.random.key(epoch))
+        if auto or fault:
             pair_t = np.asarray(m["pair_transport"], np.float64)
             pair_bits_cum = pair_t if pair_bits_cum is None \
                 else pair_bits_cum + pair_t
@@ -214,10 +395,6 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
                 layer_t = np.asarray(m["layer_transport"], np.float64)
                 layer_bits_cum = layer_t if layer_bits_cum is None \
                     else layer_bits_cum + layer_t
-        else:
-            params, opt_state, m = step(params, opt_state, graph,
-                                        jnp.asarray(epoch),
-                                        jax.random.key(epoch))
         halo_bits_cum += float(m["halo_bits"])
         transport_bits_cum += float(m["transport_bits"])
         if epoch % eval_every == 0 or epoch == epochs - 1:
@@ -240,4 +417,12 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
                     layer_bits_cum.ravel() / 32.0 / 1e9))
             if log_fn:
                 log_fn(hist.row(len(hist.epoch) - 1))
+        done = epoch + 1
+        if checkpoint_dir and (
+                (checkpoint_every and done % checkpoint_every == 0)
+                or done == stop_after):
+            ckpt.save_train_state(checkpoint_dir, _state_tree(), done,
+                                  extra=_ck_extra())
+        if stop_after is not None and done >= stop_after:
+            break
     return TrainResult(hist, params, meta, policy.describe())

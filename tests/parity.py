@@ -144,6 +144,69 @@ for case in spec["cases"]:
     wm = None if case.get("widths") is None \
         else np.asarray(case["widths"], np.float32)
     key = jax.random.key(7)
+    if rm is not None and case.get("fault") is not None:
+        # fault-channel parity: seeded drop masks split into CACHED/DEAD,
+        # a random fault hop cache (sender-major), identical on both
+        # backends; the receiver-served buffers must round-trip too
+        from repro.dist.faults import (FaultSchedule, _cache_recv_to_send,
+                                       _cache_send_to_recv)
+        fs = int(case["fault"])
+        sched = FaultSchedule(q=q, seed=fs, drop_rate=0.3, spike_rate=0.1)
+        drops = sched.effective_drops(0) > 0.0
+        rng = np.random.default_rng(fs)
+        dead_m = drops & (rng.random((q, q)) < 0.5)
+        fskip = (drops & ~dead_m).astype(np.float32)
+        dead = dead_m.astype(np.float32)
+        np.fill_diagonal(fskip, 0.0)
+        np.fill_diagonal(dead, 0.0)
+        widths = [cfg.in_dim] + [cfg.hidden] * (cfg.layers - 1)
+        d = max(q - 1, 1)
+        fcache = tuple(
+            jnp.asarray(rng.standard_normal(
+                (q, d, meta.p2p_hop_width, w)).astype(np.float32))
+            for w in widths)
+        kb = dict(_packed_pair_k_for(meta, rm))
+        fe = []
+        agg_e = _make_aggregate_emulated(
+            graph, meta, pol, None, jnp.ones(()), key, packed_k=kb,
+            rate_map=jnp.asarray(rm),
+            width_map=None if wm is None else jnp.asarray(wm),
+            fskip=jnp.asarray(fskip), fcache=fcache, fcache_out=fe,
+            dead=jnp.asarray(dead))
+        le, be = gnn_forward(params, cfg, graph["features"], agg_e)
+
+        def worker(p, gblk, rmap, wmap, fsk, dd, fc, k):
+            fo = []
+            agg = _make_aggregate_shard(
+                gblk, meta, pol, None, jnp.ones(()), k, packed_k=kb,
+                rate_map=rmap,
+                width_map=wmap if wm is not None else None,
+                fskip=fsk, fcache=fc, fcache_out=fo, dead=dd)
+            l, b = gnn_forward(p, cfg, gblk["features"], agg)
+            return l, b, tuple(fo)
+
+        sm = jax.jit(shard_map(worker, mesh=mesh,
+                               in_specs=(P(), P("workers"), P(), P(),
+                                         P(), P(), P("workers"), P()),
+                               out_specs=(P("workers"), P(),
+                                          P("workers")),
+                               check_rep=False))
+        rcache = tuple(jnp.asarray(_cache_send_to_recv(np.asarray(c), q))
+                       for c in fcache)
+        ls, bs, fo_s = sm(params, gs, jnp.asarray(rm),
+                          jnp.zeros(()) if wm is None else jnp.asarray(wm),
+                          jnp.asarray(fskip), jnp.asarray(dead), rcache,
+                          key)
+        dl = float(jnp.abs(le - ls).max())
+        db = float(jnp.abs(be - bs).max())
+        dc = max(float(jnp.abs(a - jnp.asarray(
+                     _cache_recv_to_send(np.asarray(b), q))).max())
+                 for a, b in zip(fe, fo_s))
+        assert dl <= spec["atol"], (label, "fault", dl)
+        assert db <= 1e-6, (label, "fault", db)
+        assert dc <= 1e-6, (label, "fault cache", dc)
+        print(label, "fault OK", f"dl={dl:.2e} dc={dc:.2e}")
+        continue
     if rm is not None:
         kb = dict(_packed_pair_k_for(meta, rm))
         agg_e = _make_aggregate_emulated(
@@ -270,8 +333,11 @@ def run_forward_parity(q: int, cases: list[dict], f: int = 512,
                        timeout: int = 1200, shards: bool = False) -> str:
     """Run ``cases`` (dicts of ``wire`` / ``policy`` / ``map`` ∈ {None,
     'pair', 'layer'} / optional ``width_map`` ∈ {None, 'pair', 'layer'} /
-    optional ``seed``) on a ``q``-device mesh in one subprocess; asserts
-    emulated ≡ shard_map ≤ ``atol`` per case.
+    optional ``seed`` / optional ``fault`` seed — a seeded
+    ``FaultSchedule`` drop mask split into CACHED/DEAD plus a random
+    fault hop cache, applied identically on both backends) on a
+    ``q``-device mesh in one subprocess; asserts emulated ≡ shard_map
+    ≤ ``atol`` per case.
 
     The mixed-rate (and mixed-width) operands are drawn host-side by
     :func:`mixed_map` / :func:`mixed_width_map` (so the subprocess

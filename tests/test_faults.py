@@ -1,0 +1,335 @@
+"""Fault-injection plane (ISSUE 8): schedule determinism, the
+degradation ladder, cached zero-bit serving, the rate→0 local-only
+limit, and the elastic Q − 1 shrink."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.dist.faults import (CACHED, DEAD, FRESH, DegradeState,
+                               FaultSchedule, degrade_plan, init_degrade,
+                               migrate_controller_state,
+                               migrate_degrade_state, serve_masks,
+                               shrink_shards)
+
+Q = 4
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule: pure function of (seed, step)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_is_pure_and_replayable():
+    a = FaultSchedule(q=Q, seed=7, drop_rate=0.3, spike_rate=0.2)
+    b = FaultSchedule(q=Q, seed=7, drop_rate=0.3, spike_rate=0.2)
+    for t in (0, 1, 5, 1000):
+        np.testing.assert_array_equal(a.link_drops(t), b.link_drops(t))
+        np.testing.assert_array_equal(a.latency(t), b.latency(t))
+        np.testing.assert_array_equal(a.effective_drops(t),
+                                      b.effective_drops(t))
+    # different steps/seeds decorrelate
+    assert not np.array_equal(a.effective_drops(0), a.effective_drops(1))
+    c = FaultSchedule(q=Q, seed=8, drop_rate=0.3, spike_rate=0.2)
+    assert not np.array_equal(a.effective_drops(0), c.effective_drops(0))
+    # masks are off-diagonal, 0/1 float32
+    d = a.link_drops(3)
+    assert d.dtype == np.float32 and float(np.diag(d).sum()) == 0.0
+
+
+def test_latency_spikes_count_as_effective_drops():
+    s = FaultSchedule(q=Q, seed=3, drop_rate=0.0, spike_rate=0.5,
+                      spike_factor=8.0, spike_threshold=4.0)
+    eff = s.effective_drops(2) > 0
+    lat = s.latency(2)
+    np.testing.assert_array_equal(eff, lat >= 4.0)
+
+
+def test_schedule_shrink_preserves_survivor_streams():
+    s = FaultSchedule(q=Q, seed=5, drop_rate=0.4)
+    shrunk = s.shrink(1)           # drop current index 1
+    assert shrunk.alive_workers == (0, 2, 3) and shrunk.cur_q == Q - 1
+    keep = np.ix_([0, 2, 3], [0, 2, 3])
+    for t in range(6):
+        np.testing.assert_array_equal(shrunk.effective_drops(t),
+                                      s.effective_drops(t)[keep])
+
+
+def test_crash_events_use_original_worker_ids():
+    s = FaultSchedule(q=Q, seed=0, crash_at=((3, 2), (5, 3)))
+    assert s.crash_at_step(0) is None
+    assert s.crash_at_step(3) == 2
+    s2 = s.shrink(s.crash_at_step(3))
+    # original worker 3 is now current index 2
+    assert s2.crash_at_step(5) == 2
+    # events naming dead workers are ignored
+    s3 = dataclasses.replace(s, crash_at=((4, 2),)).shrink(2)
+    assert s3.crash_at_step(4) is None
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder: exchange → cached → backoff probe → local-only
+# ---------------------------------------------------------------------------
+
+
+def _dark_pair_trace(steps: int, max_stale: int = 2, cap: int = 4):
+    """Serve modes of one permanently dark pair."""
+    st = init_degrade(2)
+    drops = np.array([[0.0, 1.0], [0.0, 0.0]], np.float32)
+    out = []
+    for t in range(steps):
+        serve, st = degrade_plan(st, drops, t, max_stale=max_stale,
+                                 backoff_base=1, backoff_cap=cap)
+        out.append(int(serve[0, 1]))
+    return out, st
+
+
+def test_ladder_cached_then_dead():
+    trace, st = _dark_pair_trace(8)
+    assert trace[:2] == [CACHED, CACHED]      # under max_stale: cache
+    assert all(v == DEAD for v in trace[2:])  # at the cap: local-only
+    assert int(st.age[0, 1]) == 8
+    assert 1 <= int(st.backoff[0, 1]) <= 4
+
+
+def test_ladder_backoff_caps_and_recovery_waits_for_probe():
+    st = init_degrade(2)
+    cap = 4
+    down = np.array([[0.0, 1.0], [0.0, 0.0]], np.float32)
+    up = np.zeros((2, 2), np.float32)
+    probes = []
+    serve_at = {}
+    for t in range(18):
+        drops = up if t >= 14 else down     # link recovers at t=14
+        pre = DegradeState(st.age.copy(), st.backoff.copy(),
+                           st.next_try.copy())
+        serve, st = degrade_plan(st, drops, t, max_stale=2,
+                                 backoff_base=1, backoff_cap=cap)
+        listened = (pre.age[0, 1] >= 2) and \
+            (pre.backoff[0, 1] == 0 or t >= pre.next_try[0, 1])
+        if pre.age[0, 1] >= 2 and listened:
+            probes.append(t)
+        serve_at[t] = int(serve[0, 1])
+    # probe cadence: immediate, then 1, 2, 4, 4, 4 (capped)
+    assert probes == [2, 3, 5, 9, 13, 17]
+    # between probes even the recovered link stays DEAD ...
+    assert serve_at[14] == DEAD and serve_at[16] == DEAD
+    # ... until the next probe lands FRESH
+    assert serve_at[17] == FRESH
+    assert int(st.backoff[0, 1]) == 0 and int(st.age[0, 1]) == 0
+
+
+def test_serve_masks_disjoint_and_migrate_shapes():
+    serve = np.array([[FRESH, CACHED], [DEAD, FRESH]], np.int8)
+    fskip, dead = serve_masks(serve)
+    assert float((fskip * dead).sum()) == 0.0
+    np.testing.assert_array_equal(fskip, [[0, 1], [0, 0]])
+    np.testing.assert_array_equal(dead, [[0, 0], [1, 0]])
+    st = migrate_degrade_state(init_degrade(Q), 2)
+    assert st.age.shape == (Q - 1, Q - 1)
+
+
+def test_degrade_plan_is_pure():
+    st = init_degrade(2)
+    drops = np.array([[0.0, 1.0], [1.0, 0.0]], np.float32)
+    before = (st.age.copy(), st.backoff.copy(), st.next_try.copy())
+    degrade_plan(st, drops, 0)
+    np.testing.assert_array_equal(st.age, before[0])
+    np.testing.assert_array_equal(st.backoff, before[1])
+    np.testing.assert_array_equal(st.next_try, before[2])
+
+
+# ---------------------------------------------------------------------------
+# Aggregation fault channel (emulated backend; parity with shard_map is
+# pinned by test_parity_matrix.py's fault cases)
+# ---------------------------------------------------------------------------
+
+
+def _forward_setup():
+    import jax.numpy as jnp  # noqa: F401  (jax import gate)
+
+    import parity
+    from repro.dist.gnn_parallel import DistMeta
+
+    g, cfg, params, pg, graph = parity.build_setup(Q, f=256, layers=2,
+                                                   n=256)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    return cfg, params, graph, meta
+
+
+def _fault_forward(cfg, params, graph, meta, fskip, dead, fcache,
+                   key_seed=3):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import CommPolicy
+    from repro.dist.gnn_parallel import (_make_aggregate_emulated,
+                                         _packed_pair_k_for)
+    from repro.nn.gnn import gnn_forward
+
+    pol = CommPolicy.parse("full", 1, compressor="blockmask")
+    rm = np.ones((Q, Q), np.float32)
+    fe: list = []
+    agg = _make_aggregate_emulated(
+        graph, meta, pol, None, jnp.ones(()), jax.random.key(key_seed),
+        packed_k=dict(_packed_pair_k_for(meta, rm)),
+        rate_map=jnp.asarray(rm), fskip=jnp.asarray(fskip),
+        fcache=fcache, fcache_out=fe, dead=jnp.asarray(dead))
+    logits, bits = gnn_forward(params, cfg, graph["features"], agg)
+    return logits, np.asarray(bits, np.float64), tuple(fe)
+
+
+def test_cached_serving_is_bitwise_and_charges_zero_bits():
+    from repro.dist.ratectl import init_halo_cache
+    from repro.nn import GNNConfig  # noqa: F401
+
+    cfg, params, graph, meta = _forward_setup()
+    zeros = np.zeros((Q, Q), np.float32)
+    l0, b0, fresh = _fault_forward(cfg, params, graph, meta, zeros, zeros,
+                                   init_halo_cache(meta, cfg))
+    # serve pair (receiver 2 ← sender 0) from the captured fresh buffers
+    fskip = zeros.copy()
+    fskip[2, 0] = 1.0
+    l1, b1, _ = _fault_forward(cfg, params, graph, meta, fskip, zeros,
+                               fresh)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    # the cached pair ships nothing: its per-pair ledger entry zeroes and
+    # both ledger columns shrink
+    lq2 = 2 * Q * Q
+    t0 = b0[2:2 + lq2].reshape(2, Q, Q)
+    t1 = b1[2:2 + lq2].reshape(2, Q, Q)
+    assert t0[:, 2, 0].sum() > 0 and t1[:, 2, 0].sum() == 0.0
+    assert b1[0] < b0[0] and b1[1] < b0[1]
+    np.testing.assert_allclose(b0[1] - b1[1], t0[:, 2, 0].sum())
+
+
+def test_all_dark_matches_no_comm_limit():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import CommPolicy
+    from repro.dist.gnn_parallel import _make_aggregate_emulated
+    from repro.dist.ratectl import init_halo_cache
+    from repro.nn.gnn import gnn_forward
+
+    cfg, params, graph, meta = _forward_setup()
+    zeros = np.zeros((Q, Q), np.float32)
+    dead = 1.0 - np.eye(Q, dtype=np.float32)
+    l1, b1, _ = _fault_forward(cfg, params, graph, meta, zeros, dead,
+                               init_halo_cache(meta, cfg))
+    assert b1[1] == 0.0, "dead pairs must charge zero transport"
+    pol = CommPolicy.parse("none", 1)
+    agg = _make_aggregate_emulated(graph, meta, pol, None, jnp.ones(()),
+                                   jax.random.key(3))
+    l_iso, _ = gnn_forward(params, cfg, graph["features"], agg)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l_iso),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Elastic shrink + state migration
+# ---------------------------------------------------------------------------
+
+
+def test_shrink_shards_renumbers_and_trains():
+    import jax
+    import jax.numpy as jnp
+
+    import parity
+    from repro.core import CommPolicy
+    from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                         _packed_pair_k_for)
+    from repro.nn.gnn import gnn_forward
+
+    g, cfg, params, pg, graph = parity.build_setup(Q, f=256, layers=2,
+                                                   n=256, shards=True)
+    dead = 2
+    new = shrink_shards(pg, dead)
+    assert new.q == Q - 1 and new.halo_spec.q == Q - 1
+    assert new.parts == tuple(range(Q - 1))
+    # no surviving remote edge references the dead worker
+    src_part = np.asarray(new.remote_src) // new.halo_size
+    valid = np.asarray(new.remote_w) > 0
+    assert valid.sum() > 0 and src_part[valid].max() < Q - 1
+    assert new.cross_edges == int(valid.sum())
+    # the shrunk set still runs a full-comm forward to finite logits
+    meta = DistMeta.build(new, params, wire="p2p")
+    rm = np.ones((Q - 1, Q - 1), np.float32)
+    pol = CommPolicy.parse("full", 1, compressor="blockmask")
+    agg = _make_aggregate_emulated(
+        new.device_arrays(), meta, pol, None, jnp.ones(()),
+        jax.random.key(0), packed_k=dict(_packed_pair_k_for(meta, rm)),
+        rate_map=jnp.asarray(rm))
+    logits, _ = gnn_forward(params, cfg, new.device_arrays()["features"],
+                            agg)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_shrink_shards_rejects_bad_input():
+    import parity
+    g, cfg, params, pg, graph = parity.build_setup(2, f=256, layers=2,
+                                                   n=128, shards=True)
+    with pytest.raises(ValueError):
+        shrink_shards(pg, 5)
+    with pytest.raises(TypeError):
+        shrink_shards("not a shardset", 0)
+
+
+def test_migrate_controller_state_cuts_pair_leaves():
+    import jax.numpy as jnp
+
+    state = {"spent": jnp.zeros(()), "integ": jnp.asarray(2.0),
+             "ema": jnp.arange(2 * Q * Q, dtype=jnp.float32
+                               ).reshape(2, Q, Q),
+             "age": np.arange(Q * Q).reshape(Q, Q)}
+    out = migrate_controller_state(state, 1, Q)
+    assert out["ema"].shape == (2, Q - 1, Q - 1)
+    exp = np.delete(np.delete(np.arange(Q * Q).reshape(Q, Q), 1, 0), 1, 1)
+    np.testing.assert_array_equal(np.asarray(out["age"]), exp)
+    assert float(out["integ"]) == 2.0   # scalars pass through untouched
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_zero_drop_fault_plane_is_noop():
+    """drop_rate=0 through the fault step lands bitwise on the plain
+    trainer — the fault channel is free when no fault fires."""
+    import parity
+    from repro.core import CommPolicy
+    from repro.train.trainer import train_gnn
+
+    g, *_ = parity.build_setup(2, f=256, layers=2, n=128)
+    ep = 6
+    pol = CommPolicy.parse("full", ep)
+    kw = dict(q=2, policy=pol, epochs=ep, hidden=128, layers=2,
+              eval_every=2, wire="p2p", seed=0)
+    plain = train_gnn(g, **kw)
+    faulted = train_gnn(g, faults=FaultSchedule(q=2, seed=0,
+                                                drop_rate=0.0), **kw)
+    assert plain.history.loss == faulted.history.loss
+    assert plain.history.transport_gfloats == \
+        faulted.history.transport_gfloats
+
+
+def test_trainer_crash_shrinks_elastically():
+    import parity
+    from repro.core import CommPolicy
+    from repro.train.trainer import train_gnn
+
+    g, cfg, params, pg, graph = parity.build_setup(Q, f=256, layers=2,
+                                                   n=256, shards=True)
+    ep = 6
+    pol = CommPolicy.parse("full", ep)
+    sched = FaultSchedule(q=Q, seed=1, drop_rate=0.1, crash_at=((3, 1),))
+    res = train_gnn(pg, policy=pol, epochs=ep, hidden=128, layers=2,
+                    eval_every=1, wire="p2p", seed=0, faults=sched)
+    assert res.meta.q == Q - 1
+    assert all(np.isfinite(res.history.loss))
+    # in-memory partitions cannot take the elastic path
+    with pytest.raises(ValueError, match="shard-backed"):
+        train_gnn(g, q=Q, policy=pol, epochs=ep, hidden=128, layers=2,
+                  eval_every=1, wire="p2p", seed=0, faults=sched)

@@ -103,3 +103,58 @@ def test_checkpoint_rejects_mismatch(tmp_path):
         checkpoint.restore(path, {"a": jnp.ones((3,))})
     with pytest.raises(ValueError):
         checkpoint.restore(path, {"b": jnp.ones((2,))})
+
+
+def test_checkpoint_mismatch_names_tree_path(tmp_path):
+    """dtype AND shape validation report the offending leaf's tree path
+    (ISSUE 8 satellite)."""
+    import pytest
+    tree = {"a": jnp.ones((2, 3), jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    path = os.path.join(tmp_path, "s.msgpack")
+    checkpoint.save(path, tree)
+    bad_dtype = {"a": tree["a"], "b": {"c": jnp.ones((4,), jnp.float32)}}
+    with pytest.raises(ValueError, match=r"dtype mismatch at .*c.*bfloat16"):
+        checkpoint.restore(path, bad_dtype)
+    bad_shape = {"a": jnp.ones((3, 2), jnp.float32), "b": tree["b"]}
+    with pytest.raises(ValueError, match=r"shape mismatch at .*a"):
+        checkpoint.restore(path, bad_shape)
+
+
+def test_checkpoint_save_is_atomic(tmp_path, monkeypatch):
+    """A failed overwrite leaves the previous checkpoint intact and no
+    temp droppings behind (tmp + fsync + rename)."""
+    import pytest
+    path = os.path.join(tmp_path, "s.msgpack")
+    checkpoint.save(path, {"a": jnp.ones((2,))})
+
+    def _boom(leaf):
+        raise RuntimeError("mid-write failure")
+
+    # encoder dies mid-write: the crash lands before the rename
+    monkeypatch.setattr(checkpoint, "_encode_leaf", _boom)
+    with pytest.raises(RuntimeError, match="mid-write"):
+        checkpoint.save(path, {"a": jnp.zeros((2,))})
+    monkeypatch.undo()
+    restored, _ = checkpoint.restore(path, {"a": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(restored["a"]), [1.0, 1.0])
+    leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert leftovers == []
+
+
+def test_train_state_api_roundtrip(tmp_path):
+    import pytest
+    tree = {"params": {"w": jnp.arange(4.0)},
+            "opt": {"mu": jnp.zeros((4,))}}
+    d = os.path.join(tmp_path, "ck")
+    assert checkpoint.latest_checkpoint(d) is None
+    p = checkpoint.save_train_state(d, tree, 17, extra={"q": 4})
+    assert checkpoint.latest_checkpoint(d) == p
+    assert checkpoint.peek(p)["step"] == 17
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out, step, extra = checkpoint.restore_train_state(d, like)
+    assert step == 17 and extra["q"] == 4
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.arange(4.0))
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore_train_state(os.path.join(tmp_path, "nope"), like)

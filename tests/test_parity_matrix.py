@@ -32,6 +32,16 @@ def _matrix(q: int) -> list[dict]:
             {"wire": wire, "policy": "fixed:4", "map": "layer",
              "width_map": "layer", "seed": 30 + q},
         ]
+    if q >= 2:
+        # fault-channel conformance (ISSUE 8): seeded FaultSchedule drops
+        # split CACHED/DEAD + random hop cache, identical on both
+        # backends, at mixed [Q, Q] and [L, Q, Q] rate × width maps
+        cases += [
+            {"wire": "p2p", "policy": "fixed:4", "map": "pair",
+             "seed": q, "fault": 40 + q},
+            {"wire": "p2p", "policy": "fixed:4", "map": "layer",
+             "width_map": "layer", "seed": 50 + q, "fault": 50 + q},
+        ]
     return cases
 
 
@@ -56,6 +66,8 @@ _Q16_CASES = [
      "width_map": "layer", "seed": 46},
     {"wire": "packed", "policy": "fixed:4", "map": "pair",
      "width_map": "pair", "seed": 36},
+    {"wire": "p2p", "policy": "fixed:4", "map": "pair", "seed": 26,
+     "fault": 99},
 ]
 
 

@@ -1,0 +1,99 @@
+"""Crash-consistent resume (ISSUE 8): interrupting any golden-trace
+config mid-run and restoring from the checkpoint must continue
+**bitwise** on the uninterrupted trajectory.
+
+Each config trains once uninterrupted (eval every epoch), then is
+interrupted at steps {7, 19} via ``stop_after`` (checkpoint + exit) and
+resumed; the resumed losses are pinned exactly — not allclose — against
+the uninterrupted tail.  Covers all golden policies including the
+quantised-wire ``auto:budget:…:w8`` (error-feedback residuals ride the
+checkpoint) plus ``auto:stale`` (hop caches + skip state do too), and
+the uninterrupted curves are cross-checked against
+``tests/golden_traces.json`` where a golden exists."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from test_golden_trace import (EPOCHS, EVAL_EVERY, FEAT, GOLDEN_PATH, HIDDEN,
+                               LAYERS, N, QW, SEED, _budget_bits, _policies)
+
+INTERRUPTS = (7, 19)
+
+_uninterrupted: dict = {}
+
+
+def _specs() -> dict:
+    specs = dict(_policies())
+    specs["auto_stale"] = f"auto:stale:{_budget_bits():g}"
+    return specs
+
+
+def _train(spec: str, **kw):
+    from repro.core import CommPolicy
+    from repro.graph import tiny_graph
+    from repro.train.trainer import train_gnn
+
+    g = tiny_graph(n=N, feat_dim=FEAT)
+    policy = CommPolicy.parse(spec, EPOCHS, compressor="blockmask")
+    return train_gnn(g, q=QW, scheme="random", policy=policy,
+                     epochs=EPOCHS, hidden=HIDDEN, layers=LAYERS,
+                     seed=SEED, eval_every=1, wire="p2p", **kw)
+
+
+def _full_run(name: str, spec: str):
+    if name not in _uninterrupted:
+        _uninterrupted[name] = _train(spec)
+    return _uninterrupted[name]
+
+
+@pytest.mark.parametrize("name", sorted(_specs()))
+@pytest.mark.parametrize("k", INTERRUPTS)
+def test_resume_is_bitwise(name, k, tmp_path):
+    spec = _specs()[name]
+    full = _full_run(name, spec)
+    ck = os.path.join(tmp_path, "ck")
+    partial = _train(spec, checkpoint_dir=ck, stop_after=k)
+    assert len(partial.history.loss) == k, "stop_after must halt the run"
+    resumed = _train(spec, checkpoint_dir=ck, resume=True)
+    assert resumed.history.loss == full.history.loss[k:], \
+        f"{name} interrupted at {k}: resumed tail diverged"
+    # the cumulative ledger resumes too (counters ride the checkpoint)
+    assert resumed.history.transport_gfloats[-1] == \
+        full.history.transport_gfloats[-1]
+    assert resumed.history.halo_gfloats[-1] == \
+        full.history.halo_gfloats[-1]
+    if full.history.pair_transport_gf:
+        assert resumed.history.pair_transport_gf[-1] == \
+            full.history.pair_transport_gf[-1]
+
+
+@pytest.mark.parametrize("name", sorted(_policies()))
+def test_uninterrupted_run_stays_on_golden(name):
+    """The eval-every-epoch runs the resume tests pin against still sit
+    on the committed golden curves (sampled at the golden cadence)."""
+    if os.environ.get("GOLDEN_REGEN"):
+        pytest.skip("golden refresh handled by test_golden_trace")
+    assert os.path.exists(GOLDEN_PATH), \
+        "golden_traces.json missing — run with GOLDEN_REGEN=1"
+    with open(GOLDEN_PATH) as fh:
+        golden = json.load(fh)[name]
+    full = _full_run(name, _policies()[name])
+    idx = list(range(0, EPOCHS, EVAL_EVERY))
+    if (EPOCHS - 1) not in idx:
+        idx.append(EPOCHS - 1)
+    sampled = [full.history.loss[i] for i in idx]
+    np.testing.assert_allclose(np.asarray(sampled),
+                               np.asarray(golden["loss"]), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_resume_requires_checkpoint(tmp_path):
+    spec = _specs()["full"]
+    with pytest.raises(FileNotFoundError):
+        _train(spec, checkpoint_dir=os.path.join(tmp_path, "none"),
+               resume=True)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        _train(spec, resume=True)

@@ -226,3 +226,22 @@ def test_shard_dir_files_are_per_partition(tmp_path):
     assert [n for n in names if n.startswith("part_")] == \
         [f"part_{p:05d}.npz" for p in range(4)]
     assert "shards.json" in names and "owner.npy" in names
+
+
+def test_load_shards_parts_validation(tmp_path):
+    """Subset loading rejects empty/duplicate/out-of-range part lists and
+    names a missing partition file (ISSUE 8 satellite — the elastic-Q
+    single-shard worker boot depends on precise errors here)."""
+    import pytest
+    d = _small_shards(tmp_path)
+    with pytest.raises(ValueError, match="at least one"):
+        load_shards(d, parts=[])
+    with pytest.raises(ValueError, match="duplicate"):
+        load_shards(d, parts=[0, 0])
+    with pytest.raises(ValueError, match="out of range"):
+        load_shards(d, parts=[0, 7])
+    os.remove(os.path.join(d, "part_00001.npz"))
+    with pytest.raises(FileNotFoundError, match="part_00001"):
+        load_shards(d, parts=[1])
+    # surviving shards still load individually
+    assert load_shards(d, parts=[2]).parts == (2,)
