@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test verify fast slow floor smoke bench-smoke wire-smoke \
         ring-smoke quant-smoke ratectl-smoke ratectl-pl-smoke \
-        partition-smoke chaos-smoke docs all
+        partition-smoke chaos-smoke serve-smoke docs all
 
 test verify:
 	$(PY) -m pytest -x -q
@@ -46,8 +46,12 @@ partition-smoke:             # out-of-core: RSS-bounded 1e6-node stream,
 chaos-smoke:                 # faults: ledger exact under drops, resume
 	$(PY) benchmarks/chaos_soak.py --smoke           # bitwise, elastic Q-1
 
+serve-smoke:                 # serving SLO: warm p99 <= 0.5x cold, warm
+	$(PY) benchmarks/serving_bench.py --smoke        # bits < cold, exactness
+
 docs:                        # intra-repo markdown link check (CI docs job)
 	$(PY) scripts/check_links.py
 
 all: floor verify smoke bench-smoke wire-smoke ring-smoke quant-smoke \
-     ratectl-smoke ratectl-pl-smoke partition-smoke chaos-smoke docs
+     ratectl-smoke ratectl-pl-smoke partition-smoke chaos-smoke \
+     serve-smoke docs

@@ -69,7 +69,8 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
                       rate: float | None = None,
                       n_keep: int | None = None,
                       pair_k: Array | None = None,
-                      pair_w: Array | None = None) -> tuple[Array, Array]:
+                      pair_w: Array | None = None,
+                      rounding: str = "rint") -> tuple[Array, Array]:
     """All-gather of *packed* boundary activations (DESIGN.md §3.3).
 
     The real reduced-volume wire path: where :func:`compressed_all_gather`
@@ -147,10 +148,12 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
         cmask = (pos_kept < k_send[idx]).astype(x.dtype)
         packed = packed * jnp.repeat(cmask, LANE)[None, :]
         if pair_w is not None:
+            from repro.kernels.ops import round_key
             off_w = jnp.where(jnp.eye(q, dtype=bool), 0.0, pair_w)
             w_send = jnp.max(off_w, axis=0)                  # [Q]
             w_send = jnp.where(w_send > 0.0, w_send, 32.0)   # Q==1: no wire
-            packed = wire_quant(packed, w_send[idx])
+            rk = round_key(key, idx) if rounding == "stochastic" else None
+            packed = wire_quant(packed, w_send[idx], key=rk)
     gathered = lax.all_gather(packed, axis_name)           # [Q, B, K*128]
     halo = jax.vmap(wire_unpack)(gathered, kept_all, inv_all)
     if pair_w is not None:
@@ -229,7 +232,10 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
                             key: Array | None = None,
                             n_keep: int | None = None,
                             pair_k: Array | None = None,
-                            pair_w: Array | None = None
+                            pair_w: Array | None = None,
+                            resid: Array | None = None,
+                            resid_out: list | None = None,
+                            rounding: str = "rint"
                             ) -> tuple[Array, Array]:
     """Issue half of :func:`neighbor_exchange`: pack the boundary block
     once, mask each hop to its pair's kept columns, and run all ``Q - 1``
@@ -243,14 +249,34 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
     sole consumer of the received buffers — so XLA's latency-hiding
     scheduler can keep the hops in flight behind the local work, and the
     explicit data dependence on the wire is confined to the unpack.
+
+    ``resid`` (``[D, H, F]``, requires ``pair_w``) is this worker's
+    error-feedback residual state (DESIGN.md §3.8): hop ``d``'s residual
+    rows are packed onto the sender's kept set, masked to the pair's live
+    columns/rows, and added to the pre-quantisation payload under
+    ``stop_gradient``; the fresh per-hop quantisation error is unpacked
+    back to ``[D, H, F]`` and appended to ``resid_out`` — the same
+    sender-major state layout as the emulated backend, so the two
+    backends' EF caches stay ≤ 1e-6 apart under the parity suite.
+
+    ``rounding`` selects the quantiser's rounding mode: deterministic
+    ``"rint"`` (default) or ``"stochastic"``, which draws each hop's
+    uniforms from :func:`repro.kernels.ops.round_key` ``(key, me, d-1)``
+    — the same per-(sender, hop) streams the emulated backend vmaps
+    over, so both backends round identically.
     """
     if pair_k is not None and n_keep is None:
         raise ValueError("pair_k needs n_keep (the map's static maximum)")
     if pair_w is not None and pair_k is None:
         raise ValueError("pair_w needs pair_k (widths ride the rate map)")
+    if resid is not None and pair_w is None:
+        raise ValueError("error-feedback residuals ride the quantised "
+                         "wire; pass pair_w alongside resid")
     q = _axis_size(axis_name)
     f = publish.shape[-1]
     if q == 1:
+        if resid is not None and resid_out is not None:
+            resid_out.append(resid)     # no wire at Q == 1: state carries
         return (jnp.zeros((1, 1, f), publish.dtype),
                 jnp.zeros((), jnp.float32))
     width = f
@@ -277,6 +303,7 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
             pos_kept_me = pos_all[me][kept_all[me]]          # [K]
 
     hops = []
+    errs = []
     bits = jnp.zeros((), jnp.float32)
     for d in range(1, q):
         rows = publish[send_slot[d - 1]] * send_valid[d - 1][:, None]
@@ -287,8 +314,25 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
             rows = rows * jnp.repeat(cmask, LANE)[None, :]
             if pair_w is not None:
                 from repro.kernels.ops import (per_block_wire_bits,
-                                               wire_quant)
-                rows = wire_quant(rows, pair_w[recv, me])
+                                               round_key, wire_quant,
+                                               wire_unpack)
+                if resid is not None:
+                    # error feedback: last step's residual packed onto
+                    # this call's kept set, masked to the pair's live
+                    # columns/rows, injected before quantising
+                    r_rows = wire_pack(resid[d - 1], kept_all[me],
+                                       inv_all[me])
+                    r_rows = r_rows * jnp.repeat(cmask, LANE)[None, :] * \
+                        send_valid[d - 1][:, None]
+                    rows = rows + lax.stop_gradient(r_rows)
+                rk = round_key(key, me, d - 1) \
+                    if rounding == "stochastic" else None
+                rows_q = wire_quant(rows, pair_w[recv, me], key=rk)
+                if resid is not None:
+                    err = lax.stop_gradient(rows - rows_q)
+                    errs.append(wire_unpack(err, kept_all[me],
+                                            inv_all[me]))
+                rows = rows_q
                 blk_bits = per_block_wire_bits(pair_w[recv, me])
             else:
                 blk_bits = LANE * 32.0
@@ -297,6 +341,8 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
         rows = lax.ppermute(rows, axis_name,
                             [(j, (j + d) % q) for j in range(q)])
         hops.append(rows)
+    if errs and resid_out is not None:
+        resid_out.append(jnp.stack(errs))          # [D, H, F] sender-major
     if pair_k is not None:
         wire_bits = lax.psum(bits, axis_name)
     else:

@@ -29,7 +29,7 @@ MODES = ("full", "none", "fixed", "varco", "auto")
 #: closed-loop controllers (``repro.dist.ratectl``) reachable via
 #: ``auto:<controller>:<budget-bits>`` — kept in sync with
 #: ``repro.dist.ratectl.base.CONTROLLERS`` (pinned by tests)
-AUTO_CONTROLLERS = ("budget", "error", "stale")
+AUTO_CONTROLLERS = ("budget", "error", "stale", "qos")
 
 #: supported wire storage bit-widths (``repro.kernels.ops.WIRE_WIDTHS``):
 #: 2/4/8 quantised, 32 exact fp32 — kept literal here so the policy layer
@@ -104,7 +104,7 @@ class CommPolicy:
         ``full`` | ``none`` | ``fixed:<r>`` | ``varco:linear:<a>`` |
         ``varco:exp`` | ``varco:cosine`` | ``varco:step:<R>`` |
         ``auto:<controller>:<budget-bits>[:w<width>][:per-layer]`` with
-        controller in ``budget`` / ``error`` / ``stale`` (e.g.
+        controller in ``budget`` / ``error`` / ``stale`` / ``qos`` (e.g.
         ``auto:budget:2e9``; the ``per-layer`` suffix plans ``[L, Q, Q]``
         per-layer rate tensors, DESIGN.md §3.7; ``w<width>`` with width
         in ``2`` / ``4`` / ``8`` lets the controller quantise pair

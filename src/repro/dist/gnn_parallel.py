@@ -81,8 +81,8 @@ from repro.core.varco import FULL_COMM, CommPolicy
 from repro.dist.sharding import worker_graph_shardings
 from repro.graph.partition import PartitionedGraph
 from repro.kernels.ops import (WIRE_WIDTHS, ell_aggregate,
-                               per_block_wire_bits, wire_pack, wire_quant,
-                               wire_unpack)
+                               per_block_wire_bits, round_key, wire_pack,
+                               wire_quant, wire_unpack)
 from repro.kernels.varco_pack import (LANE, worker_block_maps,
                                       worker_block_maps_pos)
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
@@ -622,7 +622,8 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                              width_map=None, resid=None,
                              resid_out: list | None = None,
                              fskip=None, fcache=None,
-                             fcache_out: list | None = None, dead=None):
+                             fcache_out: list | None = None, dead=None,
+                             rounding: str = "rint"):
     """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
 
     Numerically identical to the shard_map path: the all-gather becomes a
@@ -774,7 +775,19 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                         r_pack = r_pack * cmask_l * \
                             graph["p2p_send_valid"][..., None]
                         hops = hops + jax.lax.stop_gradient(r_pack)
-                    hops_q = wire_quant(hops, w_jd[:, :, None, None])
+                    if rounding == "stochastic":
+                        # per-(sender, hop) rounding keys — the exact
+                        # streams the shard backend's workers draw from
+                        # round_key(key, me, d-1), so both backends
+                        # round identically (DESIGN.md §3.8)
+                        rks = jax.vmap(lambda j_: jax.vmap(
+                            lambda d_: round_key(k_call, j_, d_))(
+                            jnp.arange(hops.shape[1])))(jnp.arange(q))
+                        hops_q = jax.vmap(jax.vmap(
+                            lambda h_, w_, k_: wire_quant(
+                                h_, w_, key=k_)))(hops, w_jd, rks)
+                    else:
+                        hops_q = wire_quant(hops, w_jd[:, :, None, None])
                     if resid_out is not None:
                         err = jax.lax.stop_gradient(hops - hops_q)
                         resid_out.append(jax.vmap(
@@ -874,7 +887,13 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                 off_w = jnp.where(jnp.eye(q, dtype=bool), 0.0, wm)
                 w_send = jnp.max(off_w, axis=0)                   # [Q]
                 w_send = jnp.where(w_send > 0.0, w_send, 32.0)
-                packed = wire_quant(packed, w_send[:, None, None])
+                if rounding == "stochastic":
+                    rks = jax.vmap(lambda j_: round_key(k_call, j_))(
+                        jnp.arange(q))
+                    packed = jax.vmap(lambda p_, w_, k_: wire_quant(
+                        p_, w_, key=k_))(packed, w_send, rks)
+                else:
+                    packed = wire_quant(packed, w_send[:, None, None])
             sent = jax.vmap(wire_unpack)(packed, kept, inv)
             k_jd = jnp.broadcast_to(k_send[:, None], (q, max(q - 1, 1)))
             pair_err = pair_stats_p2p(pre, pos_all, k_jd)
@@ -963,8 +982,10 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                           compressor: Compressor | None, rate, key,
                           axis: str = AXIS, packed_k: dict | None = None,
                           rate_map=None, width_map=None,
+                          resid=None, resid_out: list | None = None,
                           fskip=None, fcache=None,
-                          fcache_out: list | None = None, dead=None):
+                          fcache_out: list | None = None, dead=None,
+                          rounding: str = "rint"):
     """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``).
 
     Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
@@ -993,9 +1014,19 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     quantises each hop at its exact per-pair width,
     ``packed_all_gather`` at each sender's receiver-max — the same
     sender-side arithmetic as the emulated backend, so mixed rate × width
-    maps stay bitwise-parity across backends.  Error feedback is an
-    emulated-backend feature (residual state is per-exchange-call host
-    state); the parity suite runs without it.
+    maps stay bitwise-parity across backends.
+
+    ``resid``/``resid_out`` thread the error-feedback residual channel
+    (p2p rate-map wire with ``width_map``): ``resid`` is the tuple of
+    per-exchange-call residual *blocks* ``[1, D, H, F]`` (the worker's
+    slice of the sender-major ``[Q, D, H, F]`` state, sharded over the
+    worker axis) and each call appends its fresh quantisation error —
+    same layout — to ``resid_out``, mirroring the emulated backend's EF
+    arithmetic step for step so the two backends' residual caches stay
+    ≤ 1e-6 apart (tests/parity.py's EF train parity).  ``rounding``
+    selects the quantiser's rounding mode ("rint" | "stochastic") with
+    the per-(sender, hop) key schedule of
+    :func:`repro.kernels.ops.round_key` on both backends.
 
     ``fskip``/``fcache``/``fcache_out``/``dead`` are the fault channel
     (DESIGN.md §3.10; p2p rate-map wire only), applied RECEIVER-side
@@ -1031,6 +1062,10 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
         raise ValueError("fault channels (fskip/fcache/dead) ride the "
                          "p2p rate-map wire; pass rate_map with "
                          "wire='p2p' (DESIGN.md §3.10)")
+    if resid is not None and not (p2p_wire and width_map is not None):
+        raise ValueError("error-feedback residuals ride the quantised "
+                         "p2p wire; pass width_map with wire='p2p' "
+                         "(DESIGN.md §3.8)")
     calls = itertools.count()
 
     def pair_err_shard(publish_pre, pos_me, k_d):
@@ -1073,10 +1108,19 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                 n_keep = _keep_of(f, rate, packed_k)
                 k_call = jax.random.fold_in(key, call)
                 k_pairs = _pair_keep(nb, rm, n_keep)
+                r_out: list = []
                 hops, _ = neighbor_exchange_start(
                     publish, graph["p2p_send_slot"][0],
                     graph["p2p_send_valid"][0], axis, key=k_call,
-                    n_keep=n_keep, pair_k=k_pairs, pair_w=wm)
+                    n_keep=n_keep, pair_k=k_pairs, pair_w=wm,
+                    resid=None if resid is None else resid[call][0],
+                    resid_out=r_out if resid is not None else None,
+                    rounding=rounding)
+                if resid is not None and resid_out is not None:
+                    # [1, D, H, F] block — P(AXIS) out_spec stacks the
+                    # workers back into the sender-major [Q, D, H, F]
+                    resid_out.append(r_out[0][None] if r_out
+                                     else resid[call])
                 me = lax.axis_index(axis)
                 _, _, pos_all = worker_block_maps_pos(k_call, q, nb, n_keep)
                 k_d = k_pairs[(me + jnp.arange(1, max(q, 2))) % q, me]
@@ -1113,7 +1157,7 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             k_pairs = _pair_keep(nb, rm, n_keep)
             halo, _ = packed_all_gather(sent, axis, n_keep=n_keep,
                                         key=k_call, pair_k=k_pairs,
-                                        pair_w=wm)
+                                        pair_w=wm, rounding=rounding)
             off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
             k_send = jnp.maximum(jnp.max(off, axis=0), 1)
             me = lax.axis_index(axis)
@@ -1448,3 +1492,99 @@ def make_eval_step(cfg: GNNConfig, meta: DistMeta, mesh: Mesh | None = None):
     sm = shard_map(worker, mesh=mesh, in_specs=(P(), P(AXIS)),
                    out_specs=P(), check_rep=False)
     return jax.jit(sm)
+
+
+def make_infer_step(cfg: GNNConfig, policy: CommPolicy, meta: DistMeta,
+                    rounding: str = "rint"):
+    """Inference-only distributed forward for the serving runtime
+    (DESIGN.md §3.11; emulated backend, p2p wire).
+
+    ``infer(params, graph, key, plan, cache=()) -> (logits, hiddens,
+    metrics, cache')`` — the serving analogue of
+    ``repro.dist.ratectl.driver.make_auto_train_step`` with the grad
+    plumbing skipped: no ``value_and_grad``, no optimizer, no cotangent
+    traffic, and the forward still runs the split-phase ``start`` /
+    ``complete`` oracle so the halo hops overlap the self-term matmuls
+    exactly as in training.
+
+    * ``plan`` is a :class:`repro.dist.ratectl.base.RatePlan`; its
+      ``skip`` mask and the ``cache`` tuple (``init_halo_cache`` shapes)
+      are the drift-gated halo service: a skipped pair's hop is served
+      from ``cache`` at zero wire bits, the fresh buffers land in
+      ``cache'``, and ``metrics["pair_delta"]`` carries the measured
+      relative drift the gate (``repro.dist.ratectl.stale.drift_skip``)
+      consumes.
+    * ``hiddens`` is the tuple of every layer's post-activation output
+      ``[Q, P, F_l]`` (the last entry is ``logits``) — the payload the
+      serving embedding cache stores per (layer, node-block).
+    * ``metrics`` charges the wire ONE WAY (``halo_bits`` /
+      ``transport_bits`` / ``pair_transport`` are forward-only — no
+      backward cotangents at inference), unlike the train step's doubled
+      charges.
+
+    Example::
+
+        infer = make_infer_step(cfg, policy, meta)
+        logits, hid, m, cache = infer(params, graph, key, plan, cache)
+    """
+    if policy.mode != "auto":
+        raise ValueError(f"make_infer_step needs an 'auto' policy, got "
+                         f"mode {policy.mode!r}")
+    if meta.wire != "p2p":
+        raise ValueError("the serving forward reuses the stale "
+                         "controller's hop caches; it needs wire='p2p', "
+                         f"got {meta.wire!r}")
+    for f_ in {meta.feat_dim, *meta.layer_dims}:
+        if f_ % LANE:
+            raise ValueError(
+                f"per-pair rate maps pack lane-blocks; every exchanged "
+                f"width must be divisible by {LANE}, got {f_}")
+    reps = 1 if cfg.conv == "sage" else max(cfg.k_taps - 1, 1)
+    n_ex = cfg.layers * reps
+    q = meta.q
+
+    @functools.partial(jax.jit, static_argnames=("packed_k", "wire_w"))
+    def _jit_infer(params, graph, key, rate_map, width_map, skip, cache,
+                   packed_k, wire_w):
+        cache_out: list = []
+        hidden: list = []
+        agg = _make_aggregate_emulated(
+            graph, meta, policy, None, jnp.ones((), jnp.float32), key,
+            packed_k=dict(packed_k), rate_map=rate_map,
+            skip=skip if cache else None,
+            cache=cache if cache else None,
+            cache_out=cache_out if cache else None,
+            width_map=width_map if wire_w else None,
+            rounding=rounding)
+        logits, bits = gnn_forward(params, cfg, graph["features"], agg,
+                                   hidden_out=hidden)
+        return logits, tuple(hidden), bits, tuple(cache_out)
+
+    def infer(params, graph, key, plan, cache=()):
+        rm = np.asarray(plan.rates, np.float32)
+        kb = _packed_pair_k_for(meta, rm)
+        wm = ww = None
+        if plan.widths is not None:
+            wm = np.vectorize(_snap_width)(
+                np.asarray(plan.widths, np.float32)).astype(np.float32)
+            ww = _packed_pair_w_for(meta, wm)
+        if not ww:
+            wm, ww = None, ()
+        logits, hidden, bits, cache_new = _jit_infer(
+            params, graph, key, jnp.asarray(rm),
+            jnp.zeros((), jnp.float32) if wm is None else jnp.asarray(wm),
+            jnp.asarray(plan.skip, jnp.float32), tuple(cache),
+            packed_k=kb, wire_w=ww)
+        n_layers = 1 if rm.ndim == 2 else rm.shape[0]
+        q2, lq2 = q * q, (1 if rm.ndim == 2 else rm.shape[0]) * q * q
+        layer_t = bits[2:2 + lq2].reshape(n_layers, q, q)
+        layer_e = bits[2 + lq2:2 + 2 * lq2].reshape(n_layers, q, q)
+        layer_d = bits[2 + 2 * lq2:2 + 3 * lq2].reshape(n_layers, q, q)
+        metrics = {"halo_bits": bits[0], "transport_bits": bits[1],
+                   "pair_transport": jnp.sum(layer_t, axis=0),
+                   "pair_err": jnp.sum(layer_e, axis=0),
+                   "pair_delta": jnp.sum(layer_d, axis=0) / max(n_ex, 1)}
+        return logits, hidden, metrics, cache_new
+
+    infer._jit_infer = _jit_infer
+    return infer

@@ -288,3 +288,28 @@ def attach_p2p(graph: dict, pg, spec: HaloSpec | None = None) -> dict:
     for k, v in {**halo_arrays(pg, spec), **ell_arrays(pg, spec)}.items():
         out[k] = jnp.asarray(v)
     return out
+
+
+def pair_query_mass(pair_rows: np.ndarray,
+                    queries_per_part: np.ndarray) -> np.ndarray:
+    """``[Q, Q]`` query mass for the ``qos`` controller (DESIGN.md §3.11).
+
+    ``pair_rows[r, s]`` is the static halo row-count table
+    (``DistMeta.pair_table()``); ``queries_per_part[r]`` counts the
+    serving queries that landed on partition ``r`` in the last window.
+    Each ordered pair's mass is the receiver's query count times the
+    pair's halo rows — every query against partition ``r`` re-reads all
+    of ``r``'s inbound halo rows, so a pair's refresh urgency scales
+    with both.  Feeds ``observe({"query_mass": ...})`` of
+    :func:`repro.dist.ratectl.qos.qos_controller`.
+
+    Example::
+
+        mass = pair_query_mass(meta.pair_table(), frontend.query_counts())
+    """
+    rows = np.asarray(pair_rows, np.float32)
+    qc = np.asarray(queries_per_part, np.float32)
+    if qc.shape != (rows.shape[0],):
+        raise ValueError(f"queries_per_part must be [Q]={rows.shape[0]}, "
+                         f"got {qc.shape}")
+    return qc[:, None] * rows

@@ -15,6 +15,9 @@ of ``repro.core.schedulers``.
   non-increasing per pair (Proposition 2 still applies).
 * ``stale``   — skip pairs whose boundary activations barely changed,
   reusing the receiver's cached halo rows under a staleness cap.
+* ``qos``     — water-filling of the bit allowance over the measured
+  per-pair serving **query mass** (``repro.serve``, DESIGN.md §3.11):
+  hot partitions' halos refresh at the lowest rates / widest widths.
 * ``driver``  — :func:`make_controller` from a ``CommPolicy``
   ``auto:<controller>:<budget>`` spec and :func:`make_auto_train_step`,
   the per-pair-rate Algorithm-1 step (emulated + shard_map backends).
@@ -44,14 +47,16 @@ from repro.dist.ratectl.driver import (exchange_widths, init_halo_cache,
                                        layer_exchange_widths,
                                        make_auto_train_step, make_controller)
 from repro.dist.ratectl.error import error_controller
-from repro.dist.ratectl.stale import stale_controller
+from repro.dist.ratectl.qos import qos_controller
+from repro.dist.ratectl.stale import drift_skip, stale_controller
 
 __all__ = [
     "CONTROLLERS", "Pacing", "RateController", "RatePlan", "allowance",
     "make_pacing", "rate_of_allowance", "refine_widths", "sustainable_cap",
     "uniform_layer_plan", "uniform_plan",
     "width_candidates", "width_cost", "width_eps", "widths_map",
-    "budget_controller", "error_controller", "stale_controller", "waterfill",
+    "budget_controller", "drift_skip", "error_controller", "qos_controller",
+    "stale_controller", "waterfill",
     "exchange_widths", "init_halo_cache", "init_wire_residuals",
     "layer_exchange_widths", "make_auto_train_step", "make_controller",
 ]

@@ -52,7 +52,7 @@ import numpy as np
 from repro.core.varco import WIRE_WIDTHS
 
 #: controller names accepted by ``CommPolicy.parse("auto:<name>:<bits>")``
-CONTROLLERS = ("budget", "error", "stale")
+CONTROLLERS = ("budget", "error", "stale", "qos")
 
 #: VPU lane width — one fp32 scale travels per kept lane-block of a
 #: quantised pair (``repro.kernels.ops.per_block_wire_bits``)

@@ -51,7 +51,9 @@ from repro.dist.gnn_parallel import (AXIS, COMPILED_CACHE_SIZE, DistMeta,
 from repro.dist.ratectl.base import RateController, RatePlan, make_pacing
 from repro.dist.ratectl.budget import budget_controller
 from repro.dist.ratectl.error import error_controller
+from repro.dist.ratectl.qos import qos_controller
 from repro.dist.ratectl.stale import stale_controller
+from repro.kernels.ops import default_wire_rounding
 from repro.kernels.varco_pack import LANE
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
 from repro.train.optim import Optimizer, apply_updates
@@ -110,12 +112,12 @@ def make_controller(policy: CommPolicy, meta: DistMeta, cfg: GNNConfig,
             raise ValueError(
                 f"{'/'.join(bad)} are stale-controller knobs; the "
                 f"{policy.controller!r} controller does not accept them")
-    if "ema_decay" in ctl_kw and policy.controller != "error" \
+    if "ema_decay" in ctl_kw and policy.controller not in ("error", "qos") \
             and not per_layer:
         raise ValueError(
-            f"ema_decay drives the error EMA; the scalar "
+            f"ema_decay drives the error/qos EMAs; the scalar "
             f"{policy.controller!r} controller keeps none — use the "
-            f"error controller or a :per-layer policy")
+            f"error or qos controller or a :per-layer policy")
     if policy.controller == "budget":
         return budget_controller(meta.q, pacing, per_layer=per_layer,
                                  max_width=policy.max_width, **ctl_kw)
@@ -123,6 +125,10 @@ def make_controller(policy: CommPolicy, meta: DistMeta, cfg: GNNConfig,
         return error_controller(meta.q, pacing, meta.pair_table(),
                                 per_layer=per_layer,
                                 max_width=policy.max_width, **ctl_kw)
+    if policy.controller == "qos":
+        return qos_controller(meta.q, pacing, meta.pair_table(),
+                              per_layer=per_layer,
+                              max_width=policy.max_width, **ctl_kw)
     if policy.controller == "stale":
         return stale_controller(meta.q, pacing, per_layer=per_layer,
                                 max_width=policy.max_width, **ctl_kw)
@@ -192,7 +198,8 @@ def _auto_metrics(loss, rate_map, bits, q: int, n_exchanges: int) -> dict:
 def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                          meta: DistMeta, mesh: Mesh | None = None,
                          sync: str = "grad", stale: bool | None = None,
-                         compiled_cache_size: int = COMPILED_CACHE_SIZE):
+                         compiled_cache_size: int = COMPILED_CACHE_SIZE,
+                         rounding: str | None = None):
     """One Algorithm-1 step driven by a :class:`RatePlan`.
 
     ``step(params, opt_state, graph, key, plan, cache=()) ->
@@ -223,7 +230,15 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
     and the graph pytree carrying the ``attach_p2p`` arrays (the per-pair
     ledger and error stats read the per-pair halo sets on every wire).
     Hop reuse (``stale``) additionally needs ``wire == "p2p"`` and the
-    emulated backend.
+    emulated backend; error feedback runs on both backends with
+    bitwise-identical residual state (tests/test_ratectl.py pins it).
+
+    ``rounding`` picks the quantiser's rounding mode — ``"rint"``
+    (deterministic nearest-even) or ``"stochastic"`` (unbiased, per-step
+    ``(seed, step, pair)`` key schedule, DESIGN.md §3.8).  ``None``
+    defers to :func:`repro.kernels.ops.default_wire_rounding`:
+    stochastic on TPU, ``rint`` elsewhere, so CPU golden traces are
+    unchanged and TPU wires are unbiased by default.
 
     Example::
 
@@ -255,11 +270,15 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
             "hop reuse is emulated-backend only: a shape-uniform SPMD "
             "ppermute cannot drop individual pairs' buffers (DESIGN.md "
             "§3.6); run the stale controller with mesh=None")
+    if rounding is None:
+        rounding = default_wire_rounding()
+    if rounding not in ("rint", "stochastic"):
+        raise ValueError(f"rounding must be 'rint' or 'stochastic', "
+                         f"got {rounding!r}")
     # error feedback accumulates per-exchange residual state through the
     # same cache channel hop reuse owns — stale XOR error-feedback; a
     # stale run at max_width < 32 quantises without EF (DESIGN.md §3.8)
-    use_ef = policy.max_width < 32 and meta.wire == "p2p" \
-        and not stale and mesh is None
+    use_ef = policy.max_width < 32 and meta.wire == "p2p" and not stale
 
     def _plan_widths(plan: RatePlan):
         """Host-side width quantisation: snap the planned widths to the
@@ -292,7 +311,8 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                     cache_out=cache_out if stale else None,
                     width_map=wm,
                     resid=cache if ef else None,
-                    resid_out=cache_out if ef else None)
+                    resid_out=cache_out if ef else None,
+                    rounding=rounding)
                 logits, bits = gnn_forward(p, cfg, graph["features"], agg)
                 loss_sum, _ = masked_loss_and_correct(
                     logits, graph["labels"], graph["train_mask"])
@@ -324,17 +344,26 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
         step._jit_step = _jit_step
         return step
 
-    def make_worker(packed_k: tuple, wire_w: tuple):
-        def worker(params, opt_state, gblk, rate_map, width_map, key):
+    def make_worker(packed_k: tuple, wire_w: tuple, ef: bool):
+        def worker(params, opt_state, gblk, rate_map, width_map, key,
+                   cache):
+            # `cache` is the EF residual tuple sharded along its leading
+            # [Q] axis: this worker sees [1, D, H, F] blocks and passes
+            # its own sender-major slab into the exchange
             def loss_fn(p):
+                cache_out: list = []
                 agg = _make_aggregate_shard(
                     gblk, meta, policy, None, jnp.ones((), jnp.float32),
                     key, packed_k=dict(packed_k), rate_map=rate_map,
-                    width_map=width_map if wire_w else None)
-                return _local_loss_fn(p, cfg, gblk, agg, meta)
+                    width_map=width_map if wire_w else None,
+                    resid=cache if ef else None,
+                    resid_out=cache_out if ef else None,
+                    rounding=rounding)
+                loss, bits = _local_loss_fn(p, cfg, gblk, agg, meta)
+                return loss, (bits, tuple(cache_out))
 
-            (loss, bits), grads = jax.value_and_grad(loss_fn,
-                                                     has_aux=True)(params)
+            (loss, (bits, cache_new)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
             loss = lax.psum(loss, AXIS)
             if sync == "grad":
                 grads = jax.tree_util.tree_map(lambda g: lax.psum(g, AXIS),
@@ -346,26 +375,32 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                 params = apply_updates(params, updates)
                 params = _pmean_inexact(params, AXIS)
                 new_state = _pmean_inexact(new_state, AXIS)
-            return params, new_state, _auto_metrics(loss, rate_map, bits,
-                                                    meta.q, n_ex)
+            return (params, new_state,
+                    _auto_metrics(loss, rate_map, bits, meta.q, n_ex),
+                    cache_new)
 
         return worker
 
     @functools.lru_cache(maxsize=compiled_cache_size)
-    def _compiled_for(kblocks: tuple, wire_w: tuple = ()):
-        return jax.jit(shard_map(make_worker(kblocks, wire_w), mesh=mesh,
-                                 in_specs=(P(), P(), P(AXIS), P(), P(), P()),
-                                 out_specs=(P(), P(), P()), check_rep=False))
+    def _compiled_for(kblocks: tuple, wire_w: tuple = (), ef: bool = False):
+        return jax.jit(shard_map(
+            make_worker(kblocks, wire_w, ef), mesh=mesh,
+            in_specs=(P(), P(), P(AXIS), P(), P(), P(), P(AXIS)),
+            out_specs=(P(), P(), P(), P(AXIS)), check_rep=False))
 
     def step(params, opt_state, graph, key, plan: RatePlan, cache=()):
         rm = np.asarray(plan.rates, np.float32)
         kb = _packed_pair_k_for(meta, rm)
         wm, ww = _plan_widths(plan)
-        params, opt_state, m = _compiled_for(kb, ww)(
+        ef = use_ef and bool(ww) and bool(cache)
+        params, opt_state, m, cache_new = _compiled_for(kb, ww, ef)(
             params, opt_state, graph, jnp.asarray(rm),
             jnp.zeros((), jnp.float32) if wm is None else jnp.asarray(wm),
-            key)
-        return params, opt_state, m, tuple(cache)
+            key, tuple(cache))
+        # an exact (unquantised) step neither reads nor rewrites EF
+        # residuals — carry them unchanged instead of dropping them
+        return params, opt_state, m, \
+            tuple(cache_new) if ef else tuple(cache)
 
     step.cache_info = _compiled_for.cache_info
     step.cache_clear = _compiled_for.cache_clear

@@ -1,0 +1,100 @@
+"""``qos`` controller: per-pair rates water-filled from serving query mass.
+
+The serving-side allocation mode (DESIGN.md §3.11): where the ``error``
+controller spends the bit allowance where *training* loses the most
+signal (measured dropped-block energy), this one spends it where
+*queries* concentrate — each ordered pair's fill density is the EMA of
+its observed **query mass** (queries landing on the receiving partition,
+weighted by the pair's halo row count), so hot partitions' halos refresh
+at the lowest rates / widest widths and cold pairs drop toward the floor.
+
+Same budget machinery as the other controllers: the PI-paced allowance
+(:func:`repro.dist.ratectl.base.allowance`) is water-filled over the
+live pairs by query-mass density, and ``max_width < 32`` refines each
+pair's allocation along the rate × width frontier exactly as the
+``error`` controller does.  Unlike ``error``, the fill floor is NOT
+monotone — query traffic moves, and serving has no Proposition-2
+convergence argument to protect — so rates track the load both ways.
+
+The measurement arrives through ``observe``'s optional ``query_mass``
+key (``[Q, Q]``; :func:`repro.dist.halo.pair_query_mass` builds it from
+the frontend's per-partition query counts).  A missing key leaves the
+EMA untouched — at the halo-row prior the controller degenerates to the
+``budget`` controller's uniform fill, so a *training* loop can run an
+``auto:qos:<bits>`` policy unchanged.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
+                                     allowance, refine_widths, waterfill,
+                                     width_candidates)
+
+__all__ = ["qos_controller"]
+
+
+def qos_controller(q: int, pacing: Pacing, pair_rows,
+                   ema_decay: float = 0.8,
+                   name: str = "qos",
+                   per_layer: bool = False,
+                   max_width: int = 32) -> RateController:
+    """Query-mass-weighted per-pair controller (module docs).
+
+    ``pair_rows`` is the static ``[Q, Q]`` halo row-count table
+    (``DistMeta.pair_table()``): the water-filling's cost unit and the
+    mass EMA's prior (uniform per-row density until queries arrive).
+
+    State: ``{"spent", "integ", "mass"}`` — ``mass`` the ``[Q, Q]``
+    query-mass EMA.
+
+    Example::
+
+        ctl = qos_controller(meta.q, pacing, meta.pair_table())
+    """
+    if per_layer:
+        raise ValueError(
+            "per-layer qos planning is not supported: query mass has no "
+            "layer axis — use auto:qos:<bits> without :per-layer")
+    rows = jnp.asarray(pair_rows, jnp.float32)
+    eye = jnp.eye(q, dtype=bool)
+    live = (rows > 0) & ~eye
+    y_min = 1.0 / pacing.c_max
+    candidates = width_candidates(max_width)
+    # bits of one serve/train step per unit of Σ rows·y (see error ctl)
+    bits_per_rowkeep = pacing.d_full / max(float(jnp.sum(rows)), 1.0)
+
+    def init():
+        return {"spent": jnp.zeros((), jnp.float32),
+                "integ": jnp.zeros((), jnp.float32),
+                "mass": rows}
+
+    def plan(state, step):
+        bits, integ = allowance(pacing, state["spent"], state["integ"],
+                                step)
+        cap = bits / bits_per_rowkeep
+        density = jnp.where(live,
+                            state["mass"] / jnp.maximum(rows, 1.0),
+                            -jnp.inf)
+        # non-monotone fill: traffic moves, the floor stays at y_min
+        y = waterfill(density, rows, cap, y_min, 1.0)
+        widths = None
+        y_real = y
+        if len(candidates) > 1:
+            y_real, widths = refine_widths(y, candidates, live)
+        rates = jnp.where(live, 1.0 / jnp.clip(y_real, y_min, 1.0), 1.0)
+        skip = jnp.zeros((q, q), jnp.float32)
+        return RatePlan(rates, skip, widths), {**state, "integ": integ}
+
+    def observe(state, obs):
+        out = {**state,
+               "spent": state["spent"] +
+               jnp.asarray(obs["transport_bits"], jnp.float32)}
+        mass = obs.get("query_mass") if isinstance(obs, dict) else None
+        if mass is not None:
+            out["mass"] = ema_decay * state["mass"] + \
+                (1.0 - ema_decay) * jnp.asarray(mass, jnp.float32)
+        return out
+
+    return RateController(name, init, observe, plan)

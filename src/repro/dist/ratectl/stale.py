@@ -36,6 +36,29 @@ from repro.dist.ratectl.base import (Pacing, RateController, RatePlan,
                                      width_cost, widths_map)
 
 
+def drift_skip(delta, age, threshold: float, max_stale: int):
+    """The halo-drift gating predicate, shared between training and
+    serving: pair ``(i, j)`` may be served from cache (skip == 1) iff its
+    measured relative drift ``delta[i, j] = ‖fresh − cached‖² / ‖fresh‖²``
+    stayed at or below ``threshold`` AND the pair has been reused fewer
+    than ``max_stale`` consecutive times (``age``).  The diagonal never
+    skips (local rows never hit the wire).
+
+    This is the exact predicate :func:`stale_controller`'s ``observe``
+    applies between train steps; ``repro.serve.cache`` reuses it verbatim
+    for drift-gated cache invalidation (DESIGN.md §3.11) — the
+    shared-predicate property test in tests/test_serve.py pins the two
+    call sites to this one function.
+
+    Returns the ``[Q, Q]`` float32 0/1 skip mask.
+    """
+    delta = jnp.asarray(delta, jnp.float32)
+    age = jnp.asarray(age, jnp.float32)
+    eye = jnp.eye(delta.shape[-1], dtype=bool)
+    return ((delta <= threshold) & (age < max_stale) &
+            ~eye).astype(jnp.float32)
+
+
 def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
                      max_stale: int = 5, name: str = "stale",
                      per_layer: bool = False,
@@ -94,8 +117,7 @@ def stale_controller(q: int, pacing: Pacing, threshold: float = 0.05,
         delta = jnp.asarray(obs["pair_delta"], jnp.float32)
         # pairs served stale this step aged by one; refreshed pairs reset
         age = jnp.where(state["skip"] > 0.0, state["age"] + 1.0, 0.0)
-        skip = ((delta <= threshold) & (age < max_stale) &
-                ~eye).astype(jnp.float32)
+        skip = drift_skip(delta, age, threshold, max_stale)
         out = {**state, "age": age, "skip": skip,
                "spent": state["spent"] +
                jnp.asarray(obs["transport_bits"], jnp.float32)}

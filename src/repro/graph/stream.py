@@ -234,11 +234,18 @@ class EdgeSpill:
     """
 
     def __init__(self, n: int, workdir: str, bucket_nodes: int = CHUNK_NODES,
-                 weighted: bool = False):
+                 weighted: bool = False, drop_nonpositive: bool = False):
         self.n = n
         self.bucket_nodes = max(int(bucket_nodes), 1)
         self.n_buckets = max(-(-n // self.bucket_nodes), 1)
         self.weighted = weighted
+        # signed-weight mode (streaming graph updates, repro.serve.update):
+        # inserts spill +1, deletes -1; duplicate summing nets them out and
+        # edges whose total lands ≤ 0 are dropped from the canonical rows
+        self.drop_nonpositive = drop_nonpositive
+        if drop_nonpositive and not weighted:
+            raise ValueError("drop_nonpositive sums signed weights; "
+                             "it needs weighted=True")
         self.dir = workdir
         os.makedirs(workdir, exist_ok=True)
         self._piece = [0] * self.n_buckets
@@ -288,9 +295,31 @@ class EdgeSpill:
             ukey, inv = np.unique(key, return_inverse=True)
             wsum = np.zeros(len(ukey), np.float64)
             np.add.at(wsum, inv, w)
+            if self.drop_nonpositive:
+                alive = wsum > 0.0
+                ukey, wsum = ukey[alive], wsum[alive]
         else:
             ukey, wsum = np.unique(key), None
         return (ukey // self.n, (ukey % self.n).astype(np.int32), wsum)
+
+    def canonical_edges(self) -> tuple[np.ndarray, np.ndarray,
+                                       np.ndarray | None]:
+        """Concatenated canonical directed rows over all buckets:
+        ``(dst, src, wsum | None)``, dst-major ascending, self-loops
+        dropped, duplicates summed (and, under ``drop_nonpositive``,
+        netted-out edges removed).  The in-memory counterpart of
+        :meth:`to_store` for graphs that fit — ``repro.serve.update``
+        rebuilds a :class:`repro.graph.data.GraphData` from these rows
+        after an edge-update batch."""
+        ds, ss, ws = [], [], []
+        for bk in range(self.n_buckets):
+            dst, src, wsum = self._bucket_rows(bk)
+            ds.append(dst)
+            ss.append(src)
+            if self.weighted:
+                ws.append(wsum)
+        return (np.concatenate(ds), np.concatenate(ss),
+                np.concatenate(ws) if self.weighted else None)
 
     def to_store(self, path: str | os.PathLike, *, name: str,
                  node_writer=None, feat_dim: int = 0, num_classes: int = 1,

@@ -203,6 +203,35 @@ def wire_quant(x, width, *, key=None):
     return x + jax.lax.stop_gradient(quant_dequant(x, width, key=key) - x)
 
 
+#: fold_in salt separating the stochastic-rounding key stream from the
+#: mask-selection streams that share the per-exchange key (DESIGN.md §3.8)
+ROUND_SALT = 0x5EED
+
+
+def default_wire_rounding() -> str:
+    """Default rounding mode of the quantised wire on this backend:
+    ``"stochastic"`` on TPU (unbiased ``floor(v + u)`` — the hardware
+    target, where the paper's convergence argument wants an unbiased
+    codec), ``"rint"`` elsewhere (deterministic round-to-nearest — the
+    parity-checked CPU behaviour every golden trace is pinned under).
+    Callers may always opt into either mode explicitly; this is only the
+    ``rounding=None`` resolution used by ``make_auto_train_step``."""
+    return "stochastic" if jax.default_backend() == "tpu" else "rint"
+
+
+def round_key(key, sender, hop=None):
+    """Per-(pair) stochastic-rounding key schedule: the shared
+    per-exchange key (already ``fold_in(step key, call)``) is salted away
+    from the mask streams, then folded with the *sender* index and — on
+    the p2p wire — the ring-hop index, so every ordered pair draws its
+    own uniforms and the emulated backend (vmapping over senders) and the
+    shard_map backend (each worker its own ``sender``) consume identical
+    streams.  The (seed, step, pair) derivation: seed and step live in
+    the exchange key, the pair in the folds here."""
+    k = jax.random.fold_in(jax.random.fold_in(key, ROUND_SALT), sender)
+    return k if hop is None else jax.random.fold_in(k, hop)
+
+
 def per_block_wire_bits(width):
     """On-wire bits of ONE kept lane-block per row at ``width``: the
     ``LANE·width`` payload plus the fp32 scale — the accounting

@@ -23,15 +23,25 @@ from repro.models.transformer import init_lm
 from repro.nn.modules import param_count
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """CLI surface (separate from :func:`main` so tests can pin it).
+
+    ``--smoke`` is a real opt-in flag: ``store_true`` with
+    ``default=False`` — the earlier ``default=True`` spelling made the
+    flag a no-op (there was no way to run the full config).
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action="store_true", default=False)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--greedy", action="store_true", default=True)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_lm(jax.random.key(0), cfg)

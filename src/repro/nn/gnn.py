@@ -67,8 +67,15 @@ def init_gnn(key: Array, cfg: GNNConfig) -> dict:
 
 
 def gnn_forward(params: dict, cfg: GNNConfig, x: Array,
-                aggregate: AggregateFn) -> tuple[Array, Array]:
+                aggregate: AggregateFn,
+                hidden_out: list | None = None) -> tuple[Array, Array]:
     """Run the GNN; returns (logits, total_wire_bits).
+
+    ``hidden_out`` (optional list) collects every layer's post-activation
+    output — one entry per layer, the last being the returned logits —
+    without touching the compute graph; the serving embedding cache
+    (``repro.serve``, DESIGN.md §3.11) stores these per (layer,
+    node-block).
 
     ``aggregate`` is called once per (layer, tap>0): every call corresponds
     to one halo exchange in the distributed runtime (Fig. 2's
@@ -118,6 +125,8 @@ def gnn_forward(params: dict, cfg: GNNConfig, x: Array,
         if cfg.residual and h_new.shape == h.shape:
             h_new = h_new + h
         h = jax.nn.relu(h_new) if li < n_layers - 1 else h_new
+        if hidden_out is not None:
+            hidden_out.append(h)
     return h, bits
 
 

@@ -1,0 +1,36 @@
+"""Distributed GNN inference serving (DESIGN.md §3.11).
+
+The serving runtime reuses the training data plane — the partitioned
+graph, the p2p halo wire, the packed/quantised codecs and the rate
+controllers — to answer node-embedding queries without the grad
+plumbing:
+
+* ``frontend`` — :class:`MicroBatcher` (deadline-aware multi-tenant
+  micro-batching per owning partition) and :class:`ServingEngine`, the
+  query-facing runtime over ``make_infer_step``'s inference-only
+  distributed forward.
+* ``cache``    — :class:`EmbeddingCache`, post-layer activations keyed
+  by ``(layer, node-block)`` with drift-gated invalidation sharing the
+  ``stale`` controller's halo-drift predicate
+  (:func:`repro.dist.ratectl.stale.drift_skip`): cached halos serve at
+  zero wire bits until measured drift crosses the threshold, then
+  refresh through the packed/quantised wire at controller-chosen
+  rate × width.
+* ``update``   — incremental recompute on streaming edge-update batches
+  (through ``repro.graph.stream.EdgeSpill``'s spill path): only the
+  k-hop frontier of touched nodes is re-embedded.
+
+Example::
+
+    from repro.serve import ServingEngine
+    eng = ServingEngine(g, params, cfg, q=4)
+    eng.refresh(force=True)                    # cold start: exact halos
+    emb, status = eng.serve([3, 17, 101])      # status == "FRESH"
+"""
+
+from repro.serve.cache import EmbeddingCache
+from repro.serve.frontend import MicroBatcher, Query, ServingEngine
+from repro.serve.update import apply_edge_updates, incremental_recompute
+
+__all__ = ["EmbeddingCache", "MicroBatcher", "Query", "ServingEngine",
+           "apply_edge_updates", "incremental_recompute"]

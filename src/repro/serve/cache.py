@@ -1,0 +1,96 @@
+"""Per-partition embedding cache keyed by ``(layer, node-block)``.
+
+The serving runtime stores every layer's post-activation output (the
+``hiddens`` tuple of ``make_infer_step``) in partition-local blocks of
+``block_nodes`` rows, so a query gathers its answer with two integer
+indirections (owner → block → offset) and an update batch invalidates
+only the blocks its frontier touches.
+
+Invalidation is **drift-gated** and shares the ``stale`` controller's
+halo-drift predicate verbatim (:func:`repro.dist.ratectl.stale.
+drift_skip` — one function, two call sites, pinned by
+tests/test_serve.py): a pair whose measured halo drift is under the
+threshold and whose staleness is under the cap keeps serving its cached
+rows at **zero wire bits**; once either trips, the refresh ships through
+the packed/quantised wire at the controller-chosen rate × width.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.dist.ratectl.stale import drift_skip
+
+__all__ = ["EmbeddingCache"]
+
+
+class EmbeddingCache:
+    """Blocked activation store over a fixed partition assignment.
+
+    ``owner[n]`` / ``local_index[n]`` are the partitioner's maps
+    (:class:`repro.graph.partition.PartitionedGraph`); ``put`` ingests a
+    padded ``[Q, P, F]`` layer stack, ``gather`` answers global node ids.
+
+    Example::
+
+        cache = EmbeddingCache(pg.owner, pg.local_index, pg.part_size)
+        cache.put(0, np.asarray(hiddens[0]))
+        rows = cache.gather(0, [3, 17, 101])
+    """
+
+    def __init__(self, owner: np.ndarray, local_index: np.ndarray,
+                 part_size: int, block_nodes: int = 128):
+        self.owner = np.asarray(owner, np.int64)
+        self.local = np.asarray(local_index, np.int64)
+        self.part_size = int(part_size)
+        self.block_nodes = max(int(block_nodes), 1)
+        self.n_blocks = -(-self.part_size // self.block_nodes)
+        self._store: dict[tuple[int, int, int], np.ndarray] = {}
+
+    def put(self, layer: int, acts: np.ndarray) -> None:
+        """Ingest one layer's ``[Q, P, F]`` padded activation stack,
+        splitting each partition's rows into ``(layer, block)`` entries."""
+        acts = np.asarray(acts)
+        if acts.ndim != 3 or acts.shape[1] != self.part_size:
+            raise ValueError(f"expected [Q, {self.part_size}, F] stack, "
+                             f"got {acts.shape}")
+        for qo in range(acts.shape[0]):
+            for b in range(self.n_blocks):
+                lo = b * self.block_nodes
+                hi = min(lo + self.block_nodes, self.part_size)
+                # copy: blocks are mutated in place by scatter_rows
+                self._store[(layer, qo, b)] = np.array(acts[qo, lo:hi])
+
+    def scatter_rows(self, layer: int, nodes: np.ndarray,
+                     rows: np.ndarray) -> None:
+        """Overwrite single cached rows (incremental recompute lands its
+        re-embedded frontier here; blocks not yet ``put`` are skipped)."""
+        nodes = np.asarray(nodes, np.int64)
+        b, off = np.divmod(self.local[nodes], self.block_nodes)
+        for i, node in enumerate(nodes):
+            key = (layer, int(self.owner[node]), int(b[i]))
+            if key in self._store:
+                self._store[key][int(off[i])] = rows[i]
+
+    def gather(self, layer: int, nodes) -> np.ndarray:
+        """``[len(nodes), F]`` cached rows for global node ids."""
+        nodes = np.asarray(nodes, np.int64)
+        b, off = np.divmod(self.local[nodes], self.block_nodes)
+        return np.stack([
+            self._store[(layer, int(self.owner[node]), int(b[i]))][int(off[i])]
+            for i, node in enumerate(nodes)])
+
+    def __contains__(self, key: tuple[int, int, int]) -> bool:
+        return key in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @staticmethod
+    def plan_refresh(delta, age, threshold: float, max_stale: int):
+        """The drift gate: ``[Q, Q]`` 0/1 skip mask — 1 keeps serving the
+        cached halo at zero wire bits, 0 refreshes the pair through the
+        wire.  This IS :func:`repro.dist.ratectl.stale.drift_skip` (the
+        training-side hop-reuse predicate): the property test pins that
+        serving invalidates exactly when training would stop skipping."""
+        return drift_skip(delta, age, threshold, max_stale)

@@ -236,7 +236,7 @@ def train_gnn(g: "GraphData | ShardSet | str", *, q: int = 8,
             return ()
         if policy.controller == "stale":
             return init_halo_cache(meta_, cfg)
-        if policy.max_width < 32 and meta_.wire == "p2p" and mesh is None:
+        if policy.max_width < 32 and meta_.wire == "p2p":
             # quantising wire: the cache channel carries the error-feedback
             # residuals instead (stale XOR EF, DESIGN.md §3.8)
             return init_wire_residuals(meta_, cfg)

@@ -311,6 +311,62 @@ print("TRAIN_PARITY_OK")
 """
 
 
+EF_SCRIPT = r"""
+import json, sys
+import jax, jax.numpy as jnp
+import numpy as np
+from parity import build_setup
+from repro.core import CommPolicy
+from repro.dist.gnn_parallel import (DistMeta, make_worker_mesh,
+                                     shard_graph)
+from repro.dist.ratectl import (RatePlan, init_wire_residuals,
+                                make_auto_train_step)
+from repro.train.optim import sgd
+
+spec = json.loads(sys.argv[1])
+q = spec["q"]
+g, cfg, params, pg, graph = build_setup(q, f=spec["f"],
+                                        layers=spec["layers"], n=spec["n"],
+                                        hidden=spec["hidden"])
+meta = DistMeta.build(pg, params, wire="p2p")
+policy = CommPolicy.parse(spec["policy"], spec["steps"])
+opt = sgd(1e-2)
+mesh = make_worker_mesh(q)
+gs = shard_graph(graph, mesh)
+plan = RatePlan(jnp.asarray(np.asarray(spec["rates"], np.float32)),
+                jnp.zeros((q, q), jnp.float32),
+                jnp.asarray(np.asarray(spec["widths"], np.float32)))
+
+def run(mesh_, gg, rounding):
+    p, s = params, opt.init(params)
+    cache = init_wire_residuals(meta, cfg)
+    step = make_auto_train_step(cfg, policy, opt, meta, mesh=mesh_,
+                                rounding=rounding)
+    for t in range(spec["steps"]):
+        p, s, m, cache = step(p, s, gg, jax.random.key(t), plan, cache)
+    return p, cache, m
+
+for rounding in spec["roundings"]:
+    p_e, c_e, m_e = run(None, graph, rounding)
+    p_s, c_s, m_s = run(mesh, gs, rounding)
+    dp = max(float(jnp.abs(a - b).max())
+             for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_s)))
+    assert len(c_e) == len(c_s) and c_e, (len(c_e), len(c_s))
+    assert all(a.shape == b.shape for a, b in zip(c_e, c_s))
+    dc = max(float(jnp.abs(a - b).max()) for a, b in zip(c_e, c_s))
+    # EF must actually be live: residual state nonzero after a
+    # quantised step
+    nz = max(float(jnp.abs(a).max()) for a in c_e)
+    db = abs(float(m_e["transport_bits"]) - float(m_s["transport_bits"]))
+    assert dp <= 1e-6, (rounding, dp)
+    assert dc <= 1e-6, (rounding, dc)
+    assert db < 1.0, (rounding, db)
+    assert nz > 0.0, rounding
+    print(rounding, "OK", f"dp={dp:.2e} dc={dc:.2e} resid_max={nz:.2e}")
+print("EF_PARITY_OK")
+"""
+
+
 def _run(script: str, spec: dict, q: int, sentinel: str,
          timeout: int = 1200) -> str:
     # tests/ on the path so the scripts import parity.build_setup — ONE
@@ -358,6 +414,25 @@ def run_forward_parity(q: int, cases: list[dict], f: int = 512,
             "cases": cases, "shards": shards}
     return _run(FORWARD_SCRIPT, spec, q, "PARITY_MATRIX_OK",
                 timeout=timeout)
+
+
+def run_ef_parity(q: int, policy: str = "auto:budget:2e8:w8",
+                  roundings: tuple[str, ...] = ("rint",), f: int = 128,
+                  hidden: int = 128, layers: int = 2, n: int = 128,
+                  steps: int = 3, timeout: int = 900) -> str:
+    """Error-feedback backend parity (DESIGN.md §3.8/§3.11 satellite):
+    run ``steps`` quantised auto-policy train steps with a FIXED mixed
+    rate × width plan (no controller in the loop, so both backends see
+    identical operands) on the emulated and shard_map backends and pin
+    parameters, the EF residual cache tuple, and transport ≤ 1e-6 —
+    per requested rounding mode (``"stochastic"`` additionally pins the
+    per-(sender, hop) key schedule across backends)."""
+    spec = {"q": q, "f": f, "hidden": hidden, "layers": layers, "n": n,
+            "steps": steps, "policy": policy,
+            "roundings": list(roundings),
+            "rates": mixed_map(q, 0).tolist(),
+            "widths": mixed_width_map(q, 0).tolist()}
+    return _run(EF_SCRIPT, spec, q, "EF_PARITY_OK", timeout=timeout)
 
 
 def run_train_parity(q: int, policies: list[str], wire: str = "p2p",

@@ -1,0 +1,364 @@
+"""Serving subsystem tests (repro.serve, DESIGN.md §3.11).
+
+Covers the §3.11 acceptance surface: the shared drift predicate (one
+function, two call sites — training hop reuse and serving cache
+invalidation), cold-start vs warm-cache wire-bit ledgers, FRESH
+exactness, streaming-update incremental recompute, the micro-batching
+frontend, the ``qos`` controller, and the launcher CLI fix.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+F = 128
+N = 192
+Q = 4
+LAYERS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.graph.synthetic import citation_graph
+    from repro.nn import GNNConfig, init_gnn
+
+    g = citation_graph(n=N, feat_dim=F, seed=0)
+    cfg = GNNConfig(conv="sage", in_dim=F, hidden=F,
+                    out_dim=g.num_classes, layers=LAYERS)
+    params = init_gnn(jax.random.key(0), cfg)
+    return g, cfg, params
+
+
+@pytest.fixture()
+def engine(setup):
+    from repro.serve import ServingEngine
+
+    g, cfg, params = setup
+    return ServingEngine(g, params, cfg, q=Q, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# S4: the shared drift predicate
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 10_000), q=st.integers(2, 6),
+       threshold=st.floats(0.0, 0.5), max_stale=st.integers(1, 6))
+@settings(max_examples=25)
+def test_drift_predicate_shared(seed, q, threshold, max_stale):
+    """Serving invalidation fires EXACTLY when training hop reuse would
+    stop skipping: ``EmbeddingCache.plan_refresh`` and the ``stale``
+    controller's ``observe`` must produce identical masks from identical
+    drift measurements (both are ``drift_skip``)."""
+    from repro.dist.ratectl.stale import drift_skip, stale_controller
+    from repro.serve.cache import EmbeddingCache
+
+    rng = np.random.default_rng(seed)
+    delta = rng.uniform(0.0, 1.0, (q, q)).astype(np.float32)
+    prev_skip = (rng.uniform(size=(q, q)) < 0.5).astype(np.float32)
+    age0 = rng.integers(0, max_stale + 2, (q, q)).astype(np.float32)
+
+    # the training side: observe folds the drift into the skip mask
+    # (pacing is plan-only state, never touched by observe)
+    ctl = stale_controller(q, None, threshold=threshold,
+                          max_stale=max_stale)
+    state = {"spent": jnp.zeros(()), "integ": jnp.zeros(()),
+             "age": jnp.asarray(age0), "skip": jnp.asarray(prev_skip)}
+    out = ctl.observe(state, {"pair_delta": delta,
+                              "transport_bits": 0.0})
+
+    # the serving side: same age bookkeeping, same predicate
+    age = np.where(prev_skip > 0.0, age0 + 1.0, 0.0)
+    serve_mask = np.asarray(EmbeddingCache.plan_refresh(
+        delta, age, threshold, max_stale))
+
+    np.testing.assert_array_equal(serve_mask, np.asarray(out["skip"]))
+    np.testing.assert_array_equal(
+        serve_mask, np.asarray(drift_skip(delta, age, threshold,
+                                          max_stale)))
+    assert not np.any(np.diagonal(serve_mask))
+
+
+def test_drift_skip_semantics():
+    from repro.dist.ratectl.stale import drift_skip
+
+    delta = np.array([[0.0, 0.01], [0.9, 0.0]], np.float32)
+    age = np.zeros((2, 2), np.float32)
+    skip = np.asarray(drift_skip(delta, age, 0.05, 3))
+    assert skip[0, 1] == 1.0 and skip[1, 0] == 0.0   # drift gate
+    age[0, 1] = 3.0
+    skip = np.asarray(drift_skip(delta, age, 0.05, 3))
+    assert skip[0, 1] == 0.0                          # staleness cap
+
+
+# ---------------------------------------------------------------------------
+# tentpole: serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_serving_matches_centralized(setup, engine):
+    from repro.nn.gnn import centralized_forward
+
+    g, cfg, params = setup
+    engine.refresh(force=True)
+    emb, status = engine.serve(np.arange(N))
+    assert status == "FRESH"
+    ref = np.asarray(centralized_forward(params, cfg, g))
+    assert np.max(np.abs(emb - ref)) <= 1e-5
+
+
+def test_cold_vs_warm_wire_bit_ledger(engine):
+    """S4: cold start pays the full exact halo refresh; once drift
+    gating engages, a warm refresh charges strictly fewer wire bits —
+    and a fully-gated refresh charges zero."""
+    m_cold = engine.refresh(force=True)
+    cold = float(m_cold["transport_bits"])
+    assert cold > 0.0
+    m_warm = engine.refresh()            # compressed rate x width refresh
+    warm = float(m_warm["transport_bits"])
+    assert warm < cold
+    # drift measured ~0 under the fixed refresh key -> everything gated
+    m_gated = engine.refresh()
+    assert float(m_gated["transport_bits"]) == 0.0
+    # the ledger saw all three charges
+    assert float(engine.ledger.transport) == pytest.approx(cold + warm,
+                                                           rel=1e-6)
+
+
+def test_fresh_survives_fully_gated_refresh(engine):
+    engine.refresh(force=True)
+    assert engine.status() == "FRESH"
+    # a second exact refresh measures zero drift against the exact halo
+    # cache, priming the gate; the next gated refresh then recomputes
+    # from identical halos at zero wire bits -- exactness survives it
+    engine.refresh(force=True)
+    m = engine.refresh()
+    assert float(m["transport_bits"]) == 0.0
+    assert engine.status() == "FRESH"
+    # ...until a pair actually refreshes through the compressed wire
+    engine._skip_next = np.zeros_like(np.asarray(engine._skip_next))
+    engine.refresh()
+    assert engine.status() == "CACHED"
+
+
+def test_query_mass_reaches_controller(engine):
+    engine.refresh(force=True)
+    engine.serve(np.arange(64))
+    qc = engine.query_counts()
+    assert qc.sum() == 64
+    mass0 = np.asarray(engine._ctl_state["mass"]).copy()
+    engine.refresh()
+    assert engine.query_counts().sum() == 0          # folded + reset
+    assert not np.allclose(np.asarray(engine._ctl_state["mass"]), mass0)
+
+
+def test_incremental_update_matches_full(setup, engine):
+    from repro.nn.gnn import centralized_forward
+
+    g, cfg, params = setup
+    engine.refresh(force=True)
+    rng = np.random.default_rng(3)
+    dst0, src0 = g.edge_list()
+    pick = rng.integers(0, len(dst0), 5)
+    touched, fronts = engine.apply_updates(
+        inserts=(rng.integers(0, N, 6), rng.integers(0, N, 6)),
+        deletes=(dst0[pick], src0[pick]))
+    assert len(fronts) == LAYERS
+    assert len(fronts[0]) <= len(fronts[1])          # frontier grows
+    ref = np.asarray(centralized_forward(params, cfg, engine.g))
+    emb, status = engine.serve(np.arange(N))
+    assert status == "CACHED"
+    assert np.max(np.abs(emb - ref)) <= 1e-5
+
+
+def test_apply_edge_updates_netting(setup):
+    from repro.serve import apply_edge_updates
+
+    g, _, _ = setup
+    dst0, src0 = g.edge_list()
+    # inserting a present edge and deleting an absent one are no-ops
+    absent = None
+    es = set(zip(dst0.tolist(), src0.tolist()))
+    for u in range(N):
+        for v in range(u + 1, N):
+            if (u, v) not in es:
+                absent = (u, v)
+                break
+        if absent:
+            break
+    g2, touched = apply_edge_updates(
+        g, inserts=([dst0[0]], [src0[0]]),
+        deletes=([absent[0]], [absent[1]]))
+    assert g2.num_edges == g.num_edges
+    np.testing.assert_array_equal(g2.indptr, g.indptr)
+    np.testing.assert_array_equal(g2.indices, g.indices)
+    assert set(touched) == {dst0[0], src0[0], absent[0], absent[1]}
+    # a real delete removes both directions
+    g3, _ = apply_edge_updates(g, deletes=([dst0[0]], [src0[0]]))
+    assert g3.num_edges == g.num_edges - 2
+    g3.validate()
+
+
+def test_edgespill_drop_nonpositive(tmp_path):
+    from repro.graph.stream import EdgeSpill
+
+    sp = EdgeSpill(16, str(tmp_path / "sp"), bucket_nodes=4,
+                   weighted=True, drop_nonpositive=True)
+    sp.add([1, 2, 3], [2, 1, 4], [1.0, 1.0, 1.0])
+    sp.add([1, 2], [2, 1], [-1.0, -1.0])             # nets (1,2) out
+    dst, src, w = sp.canonical_edges()
+    assert list(zip(dst.tolist(), src.tolist())) == [(3, 4)]
+    assert w.tolist() == [1.0]
+    with pytest.raises(ValueError):
+        EdgeSpill(16, str(tmp_path / "sp2"), drop_nonpositive=True)
+
+
+# ---------------------------------------------------------------------------
+# frontend micro-batching
+# ---------------------------------------------------------------------------
+
+
+def test_microbatcher_deadline_and_fill():
+    from repro.serve import MicroBatcher
+
+    owner = np.array([0, 0, 1, 1], np.int64)
+    mb = MicroBatcher(owner, window_s=0.010, max_batch=2)
+    assert not mb.ready(now=0.0)
+    mb.submit(0, "a", now=0.0)
+    assert not mb.ready(now=0.005)       # window not yet elapsed
+    assert mb.ready(now=0.011)           # deadline trips
+    mb.submit(2, "b", now=0.005)
+    mb.submit((3,), "b", now=0.006)
+    assert mb.ready(now=0.006)           # partition 1 batch full
+    per_part = mb.drain()
+    assert sorted(per_part) == [0, 1]
+    assert [q.tenant for q in per_part[1]] == ["b", "b"]
+    assert mb.pending == 0 and not mb.ready(now=1.0)
+    with pytest.raises(ValueError):
+        mb.submit((1, 2, 3))
+
+
+def test_engine_flush_matches_direct_serve(engine):
+    engine.refresh(force=True)
+    engine.submit(3, "a", now=0.0)
+    engine.submit((5, 7), "b", now=0.0)              # edge query
+    assert engine.flush(now=0.0) == []               # window still open
+    out = engine.flush(now=1.0)
+    assert [qy.nodes for qy, _ in out] in ([(3,), (5, 7)],
+                                           [(5, 7), (3,)])
+    direct3, _ = engine.serve([3])
+    edge57, _ = engine.serve_edges([(5, 7)])
+    got = {qy.nodes: emb for qy, emb in out}
+    np.testing.assert_allclose(got[(3,)], direct3[0])
+    np.testing.assert_allclose(got[(5, 7)], edge57[0])
+    assert got[(5, 7)].shape == (2 * direct3.shape[1],)
+
+
+# ---------------------------------------------------------------------------
+# qos controller
+# ---------------------------------------------------------------------------
+
+
+def test_qos_policy_parse_roundtrip():
+    from repro.core.varco import CommPolicy
+
+    pol = CommPolicy.parse("auto:qos:2e9:w8", 10)
+    assert pol.controller == "qos" and pol.max_width == 8
+    assert CommPolicy.parse(str(pol), 10) == pol
+
+
+def test_qos_in_controller_registries():
+    from repro.core.varco import AUTO_CONTROLLERS
+    from repro.dist.ratectl import CONTROLLERS
+
+    assert tuple(AUTO_CONTROLLERS) == tuple(CONTROLLERS)
+    assert "qos" in CONTROLLERS
+
+
+def test_qos_controller_mass_weighted_waterfill(setup):
+    from parity import build_setup
+    from repro.core.varco import CommPolicy
+    from repro.dist.gnn_parallel import DistMeta
+    from repro.dist.ratectl import make_controller
+
+    g, cfg, params, pg, graph = build_setup(Q, f=F, layers=LAYERS, n=N,
+                                            hidden=F)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    policy = CommPolicy.parse("auto:qos:1e8", 8)
+    rows = np.asarray(meta.pair_table(), np.float32)
+    # twin controllers at identical pacing state: only the query-mass
+    # EMA differs, so the plans isolate the density operand
+    ctl_a = make_controller(policy, meta, cfg, 8, ema_decay=0.5)
+    ctl_b = make_controller(policy, meta, cfg, 8, ema_decay=0.5)
+    state_a, state_b = ctl_a.init(), ctl_b.init()
+    mass = np.zeros((Q, Q), np.float32)
+    mass[0] = rows[0] * 1e3              # all traffic lands on part 0
+    for _ in range(6):
+        state_b = ctl_b.observe(state_b, {"transport_bits": 0.0,
+                                          "query_mass": mass})
+    plan_a, _ = ctl_a.plan(state_a, 0)   # uniform halo-row prior
+    plan_b, _ = ctl_b.plan(state_b, 0)   # skewed query mass
+    rates_a, rates_b = np.asarray(plan_a.rates), np.asarray(plan_b.rates)
+    for r in (rates_a, rates_b):
+        assert r.shape == (Q, Q)
+        assert np.all(np.diagonal(r) == 1.0) and np.all(r >= 1.0)
+    live0 = rows[0] > 0
+    starved = (rows > 0) & (np.arange(Q)[:, None] != 0)
+    # hot row refreshes at rates no higher, starved pairs no lower
+    assert np.all(rates_b[0][live0] <= rates_a[0][live0] + 1e-6)
+    assert np.all(rates_b[starved] >= rates_a[starved] - 1e-6)
+    # and the skew actually moved something
+    assert not np.allclose(rates_a, rates_b)
+    # missing query_mass key leaves the EMA untouched
+    mass_before = np.asarray(state_b["mass"]).copy()
+    state_b = ctl_b.observe(state_b, {"transport_bits": 1.0})
+    np.testing.assert_array_equal(np.asarray(state_b["mass"]),
+                                  mass_before)
+
+
+def test_qos_rejects_per_layer(setup):
+    from parity import build_setup
+    from repro.core.varco import CommPolicy
+    from repro.dist.gnn_parallel import DistMeta
+    from repro.dist.ratectl import make_controller
+
+    g, cfg, params, pg, _ = build_setup(Q, f=F, layers=LAYERS, n=N,
+                                        hidden=F)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    policy = CommPolicy.parse("auto:qos:1e8:per-layer", 8)
+    with pytest.raises(ValueError, match="per-layer qos"):
+        make_controller(policy, meta, cfg, 8)
+    # ema_decay stays rejected for the scalar budget controller
+    with pytest.raises(ValueError, match="ema_decay"):
+        make_controller(CommPolicy.parse("auto:budget:1e8", 8), meta,
+                        cfg, 8, ema_decay=0.5)
+
+
+def test_pair_query_mass():
+    from repro.dist.halo import pair_query_mass
+
+    rows = np.array([[0, 4], [2, 0]], np.float32)
+    mass = pair_query_mass(rows, np.array([3.0, 5.0]))
+    np.testing.assert_array_equal(mass, [[0.0, 12.0], [10.0, 0.0]])
+    with pytest.raises(ValueError):
+        pair_query_mass(rows, np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# S1: launcher CLI
+# ---------------------------------------------------------------------------
+
+
+def test_serve_cli_smoke_flag_defaults_off():
+    from repro.launch.serve import build_parser
+
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is False
+    assert ap.parse_args(["--smoke"]).smoke is True
+    args = ap.parse_args(["--smoke", "--batch", "2"])
+    assert args.smoke and args.batch == 2

@@ -1,0 +1,170 @@
+"""Stochastic wire rounding (DESIGN.md §3.8): the TPU-default codec.
+
+The ``rounding`` axis of the quantised halo wire: ``default_wire_rounding``
+backend resolution, the ``rounding=None`` → ``"rint"`` golden-trace pin on
+CPU, the ``quant_dequant(key=...)`` error bound and determinism, the
+``round_key`` per-(sender, hop) stream separation, and the slow
+cross-backend parity pin of the stochastic wire + shard error feedback.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from parity import build_setup, run_ef_parity
+
+from repro.core import CommPolicy
+from repro.dist.gnn_parallel import DistMeta
+from repro.dist.ratectl import RatePlan, init_wire_residuals, \
+    make_auto_train_step
+from repro.kernels.ops import LANE, default_wire_rounding, quant_dequant, \
+    round_key
+from repro.train.optim import sgd
+
+Q = 4
+F = 256
+NB = F // LANE
+
+
+# ---------------------------------------------------------------------------
+# backend resolution + golden-trace pin
+# ---------------------------------------------------------------------------
+
+
+def test_default_wire_rounding_backend():
+    """CPU (and any non-TPU backend) defaults to the deterministic
+    parity-checked codec; only TPU opts into stochastic rounding."""
+    expect = "stochastic" if jax.default_backend() == "tpu" else "rint"
+    assert default_wire_rounding() == expect
+
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="rounding=None resolves to stochastic on TPU")
+def test_rounding_none_is_rint_bitwise_on_cpu():
+    """``make_auto_train_step(rounding=None)`` must reproduce the
+    explicit ``"rint"`` step bit-for-bit on CPU — every pre-existing
+    golden trace was recorded under the deterministic codec."""
+    _, cfg, params, pg, graph = build_setup(Q, f=F, layers=2, n=192)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    policy = CommPolicy.parse("auto:budget:1e9:w4", 4)
+    opt = sgd(1e-2)
+    rm = np.full((Q, Q), 2.0, np.float32)
+    np.fill_diagonal(rm, 1.0)
+    wm = np.full((Q, Q), 4.0, np.float32)
+    np.fill_diagonal(wm, 32.0)
+    plan = RatePlan(jnp.asarray(rm), jnp.zeros((Q, Q), jnp.float32),
+                    jnp.asarray(wm))
+    outs = []
+    for rounding in (None, "rint"):
+        step = make_auto_train_step(cfg, policy, opt, meta,
+                                    rounding=rounding)
+        p, s = params, opt.init(params)
+        cache = init_wire_residuals(meta, cfg)
+        p, s, m, cache = step(p, s, graph, jax.random.key(7), plan, cache)
+        outs.append((p, m, cache))
+    (p0, m0, c0), (p1, m1, c1) = outs
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(c0, c1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m0["transport_bits"]) == float(m1["transport_bits"])
+
+
+def test_make_auto_train_step_rejects_unknown_rounding():
+    _, cfg, params, pg, _ = build_setup(Q, f=F, layers=2, n=192)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    policy = CommPolicy.parse("auto:budget:1e9:w4", 4)
+    with pytest.raises(ValueError, match="rounding"):
+        make_auto_train_step(cfg, policy, sgd(1e-2), meta,
+                             rounding="nearest-even")
+
+
+# ---------------------------------------------------------------------------
+# quant_dequant stochastic mode
+# ---------------------------------------------------------------------------
+
+
+def test_quant_dequant_stochastic_error_bound():
+    """Stochastic rounding stays within one quantisation step of the
+    input per element: |x - dq| ≤ amax_block / (2^(w-1) - 1)."""
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (32, F)) * \
+        10.0 ** jax.random.uniform(jax.random.fold_in(key, 1), (32, 1),
+                                   minval=-2.0, maxval=2.0)
+    for width in (2.0, 4.0, 8.0):
+        dq = quant_dequant(x, width, key=jax.random.fold_in(key, 2))
+        amax = jnp.max(jnp.abs(x.reshape(32, NB, LANE)), axis=-1)
+        step = amax / (2.0 ** (width - 1.0) - 1.0)
+        err = jnp.abs(x - dq).reshape(32, NB, LANE)
+        assert float(jnp.max(err - step[..., None])) <= 1e-6
+
+
+def test_quant_dequant_stochastic_deterministic_per_key():
+    key = jax.random.key(3)
+    x = jax.random.normal(key, (8, F))
+    a = quant_dequant(x, 4.0, key=jax.random.fold_in(key, 1))
+    b = quant_dequant(x, 4.0, key=jax.random.fold_in(key, 1))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = quant_dequant(x, 4.0, key=jax.random.fold_in(key, 2))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    # and it genuinely differs from round-to-nearest somewhere
+    r = quant_dequant(x, 4.0)
+    assert not np.array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_quant_dequant_stochastic_unbiased():
+    """floor(v + u) is unbiased: averaging many independent stochastic
+    quantisations converges to the input, while rint stays put."""
+    key = jax.random.key(5)
+    x = jax.random.normal(key, (4, F))
+    acc = jnp.zeros_like(x)
+    trials = 256
+    for t in range(trials):
+        acc = acc + quant_dequant(x, 3.0, key=jax.random.fold_in(key, t))
+    mean = acc / trials
+    amax = jnp.max(jnp.abs(x.reshape(4, NB, LANE)), axis=-1)
+    step = float(jnp.max(amax)) / (2.0 ** 2.0 - 1.0)
+    # mean error an order below one quantisation step
+    assert float(jnp.max(jnp.abs(mean - x))) < 0.25 * step
+
+
+def test_quant_dequant_stochastic_width32_passthrough():
+    key = jax.random.key(9)
+    x = jax.random.normal(key, (8, F))
+    dq = quant_dequant(x, 32.0, key=jax.random.fold_in(key, 1))
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# key schedule
+# ---------------------------------------------------------------------------
+
+
+def test_round_key_distinct_streams_per_sender_and_hop():
+    """Every (sender, hop) pair must draw its own uniform stream — and
+    the salted chain must not collide with the raw exchange key that
+    feeds the mask-selection draws."""
+    base = jax.random.key(11)
+    keys = [round_key(base, s, d) for s in range(Q) for d in range(Q - 1)]
+    keys += [round_key(base, s) for s in range(Q)]
+    keys.append(base)
+    data = np.stack([np.asarray(jax.random.key_data(k)) for k in keys])
+    flat = {tuple(row.ravel().tolist()) for row in data}
+    assert len(flat) == len(keys)
+    # hop=None matches no hop-indexed key; draws differ stream-to-stream
+    u = np.stack([np.asarray(jax.random.uniform(k, (4,))) for k in keys])
+    assert len({tuple(r.tolist()) for r in u}) == len(keys)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend parity (slow): stochastic wire + shard error feedback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_ef_parity_both_roundings_subprocess():
+    """S2+S3 acceptance pin: the emulated and shard_map backends agree to
+    ≤ 1e-6 on params and EF residuals after quantised training steps,
+    under BOTH the deterministic and the stochastic wire codec (the
+    (seed, step, pair) key schedule makes the streams identical)."""
+    run_ef_parity(4, roundings=("rint", "stochastic"))
