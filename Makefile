@@ -31,7 +31,7 @@ wire-smoke:                  # packed + p2p halo-exchange acceptance checks
 ring-smoke:                  # p2p ring: transport == analytic at rates {1,4}
 	$(PY) benchmarks/halo_exchange.py --smoke-ring
 
-quant-smoke:                 # fused pack+quant beats pack-then-cast; int4
+quant-smoke:                 # bit-packed int2/int4 wire; ledger == bytes
 	$(PY) benchmarks/halo_exchange.py --smoke-quant   # transport == analytic
 
 ratectl-smoke:               # closed loop: budget within 5%, error >= uniform

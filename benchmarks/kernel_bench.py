@@ -50,12 +50,14 @@ def main(quick: bool = True) -> dict:
                  "ref_us": round(t_ref.us_per_call, 1), "fused_us": "",
                  "max_err": float(jnp.abs(xt - expect).max())})
 
-    # fused pack+quantise vs pack-then-cast (DESIGN.md §3.8): ONE compiled
-    # program (the Pallas kernel computes the gather, the per-block amax,
-    # the scale and the int round in a single VMEM pass; XLA:CPU fuses the
-    # same graph) against two separately-dispatched stages that materialise
-    # the fp32 packed intermediate in between.  ref_us is the two-stage
-    # pipeline, fused_us the single launch.
+    # fused pack+quantise+bit-pack vs staged pipeline (DESIGN.md §3.8):
+    # ONE compiled program (the Pallas kernel computes the gather, the
+    # per-block amax, the scale, the int round and the sub-byte bit-pack
+    # in a single VMEM pass; XLA:CPU fuses the same graph) against three
+    # separately-dispatched stages materialising the fp32 packed and the
+    # int8 level intermediates in between.  ref_us is the staged
+    # pipeline, fused_us the single launch; wire_bytes the payload the
+    # exchange actually ships (~w/8 of the int8-per-lane storage).
     nq, fq, wq = (2048, 512, 4)
     xq = jnp.asarray(rng.normal(0, 1, (nq, fq)), jnp.float32)
     keptq, invq = block_mask_indices(jax.random.key(1), fq // 128, 1.0)
@@ -75,15 +77,20 @@ def main(quick: bool = True) -> dict:
         return qv.astype(jnp.int8).reshape(p.shape), scale
 
     cast_stage = jax.jit(_cast)
+    bitpack_stage = jax.jit(lambda lv: ops.pack_bits(lv, wq))
     t_two = StepTimer()
-    pk_2, sc_2 = t_two.measure(lambda a: cast_stage(pack_stage(a)), xq,
-                               iters=5)
+    pk_2, sc_2 = t_two.measure(
+        lambda a: (lambda lv_sc: (bitpack_stage(lv_sc[0]), lv_sc[1]))(
+            cast_stage(pack_stage(a))), xq, iters=5)
+    # decode the sub-byte payloads before comparing values
     quant_err = float(jnp.abs(
-        ref.quant_dequant_reference(pk_f, sc_f) -
-        ref.quant_dequant_reference(pk_2, sc_2)).max())
+        ref.unpack_quant_reference(pk_f, sc_f, wq) -
+        ref.unpack_quant_reference(pk_2, sc_2, wq)).max())
     speedup = t_two.us_per_call / max(t_fused.us_per_call, 1e-9)
+    int8_bytes = pk_f.shape[0] * keptq.shape[0] * 128
     rows.append({"kernel": "pack_quant_fused",
-                 "shape": f"{nq}x{fq}@w{wq} {speedup:.2f}x",
+                 "shape": f"{nq}x{fq}@w{wq} {speedup:.2f}x "
+                          f"wire={pk_f.nbytes}B/int8={int8_bytes}B",
                  "ref_us": round(t_two.us_per_call, 1),
                  "fused_us": round(t_fused.us_per_call, 1),
                  "max_err": quant_err})

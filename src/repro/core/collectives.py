@@ -46,6 +46,51 @@ def _per_device_key(key: Array, axis_name: str) -> Array:
     return jax.random.fold_in(key, lax.axis_index(axis_name))
 
 
+def _ppermute_grad_carrier(x: Array, axis_name: str, perm) -> Array:
+    """Zero-valued forward whose VJP is the inverse-ring ``ppermute``.
+
+    The sub-byte wire ships integer bytes + scales, which carry no
+    gradient; the receiver's value is rebuilt as ``stop_gradient(decode)
+    + carrier(rows)``, so the cotangent still rides the ring backward
+    into the sender's pre-quantisation rows — exactly the
+    straight-through estimator the fp32 value path realises with
+    ``ppermute(wire_quant(rows))``, at zero extra forward traffic.
+    """
+    @jax.custom_vjp
+    def carrier(v):
+        return jnp.zeros_like(v)
+
+    def fwd(v):
+        return jnp.zeros_like(v), None
+
+    def bwd(_, g):
+        inv = [(dst, src) for (src, dst) in perm]
+        return (lax.ppermute(g, axis_name, inv),)
+
+    carrier.defvjp(fwd, bwd)
+    return carrier(x)
+
+
+def _all_gather_grad_carrier(x: Array, axis_name: str) -> Array:
+    """Zero-valued ``[Q, *x.shape]`` forward whose VJP is the all-gather
+    transpose (each worker keeps the summed cotangent of its own slice)
+    — the gradient half of the sub-byte all-gather wire."""
+    q = _axis_size(axis_name)
+
+    @jax.custom_vjp
+    def carrier(v):
+        return jnp.zeros((q,) + v.shape, v.dtype)
+
+    def fwd(v):
+        return jnp.zeros((q,) + v.shape, v.dtype), None
+
+    def bwd(_, g):
+        return (lax.psum(g, axis_name)[lax.axis_index(axis_name)],)
+
+    carrier.defvjp(fwd, bwd)
+    return carrier(x)
+
+
 def compressed_all_gather(x: Array, axis_name: str, *, compressor: Compressor,
                           rate: Array, key: Array, axis: int = 0,
                           tiled: bool = False) -> tuple[Array, Array]:
@@ -70,7 +115,9 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
                       n_keep: int | None = None,
                       pair_k: Array | None = None,
                       pair_w: Array | None = None,
-                      rounding: str = "rint") -> tuple[Array, Array]:
+                      rounding: str = "rint",
+                      store_w: int = 0,
+                      wire_out: list | None = None) -> tuple[Array, Array]:
     """All-gather of *packed* boundary activations (DESIGN.md §3.3).
 
     The real reduced-volume wire path: where :func:`compressed_all_gather`
@@ -108,6 +155,18 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     at that width plus the fp32 block scales
     (:func:`repro.kernels.ops.per_block_wire_bits`).
 
+    ``store_w`` (static, requires ``pair_w``) switches the collective to
+    **true sub-byte storage** (DESIGN.md §3.8): every off-diagonal
+    snapped width is sub-32, so the sender ships bit-packed uint8 levels
+    (``8/store_w`` lanes per byte at the step's static storage width —
+    the max snapped width — plus the fp32 block scales) instead of the
+    fp32 straight-through values, and each receiver rebuilds
+    ``levels · scale`` from the bytes.  Gradients ride
+    :func:`_all_gather_grad_carrier`.  ``store_w == 0`` keeps the exact
+    fp32 value path (any pair at width ≥ 32 forces it).  ``wire_out``,
+    when a list, captures the physically gathered ``(payload, scales)``
+    buffers — the ledger-vs-buffer conservation hook.
+
     Returns ``(gathered [Q, B, F], collective_bits)``.  ``collective_bits``
     counts the buffer the collective physically moves — every worker's
     packed payload, halo-padding rows included, crossing to ``Q - 1`` peers
@@ -116,13 +175,17 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
     equivalent ``halo_demand × K·128`` instead, so the two are comparable
     across wire formats (DESIGN.md §3.2–3.3).
     """
-    from repro.kernels.ops import (per_block_wire_bits, wire_pack,
-                                   wire_quant, wire_unpack)
+    from repro.kernels.ops import (dequant_bits, pack_bits,
+                                   per_block_wire_bits, quant_levels,
+                                   wire_pack, wire_quant, wire_unpack)
     from repro.kernels.varco_pack import (LANE, worker_block_maps,
                                           worker_block_maps_pos)
 
     if pair_w is not None and pair_k is None:
         raise ValueError("pair_w needs pair_k (widths ride the rate map)")
+    if store_w and pair_w is None:
+        raise ValueError("store_w (sub-byte storage) rides the width map; "
+                         "pass pair_w alongside it")
     f = x.shape[-1]
     if f % LANE:
         raise ValueError(f"packed wire needs F % {LANE} == 0, got F={f}")
@@ -153,8 +216,26 @@ def packed_all_gather(x: Array, axis_name: str, *, key: Array,
             w_send = jnp.max(off_w, axis=0)                  # [Q]
             w_send = jnp.where(w_send > 0.0, w_send, 32.0)   # Q==1: no wire
             rk = round_key(key, idx) if rounding == "stochastic" else None
+            if store_w:
+                # sub-byte wire: bit-packed levels + scales cross, the
+                # value is rebuilt receiver-side from the bytes alone
+                levels, scales = quant_levels(packed, w_send[idx], key=rk)
+                payload = pack_bits(levels, store_w)
+                g_payload = lax.all_gather(payload, axis_name)
+                g_scales = lax.all_gather(scales, axis_name)
+                if wire_out is not None:
+                    wire_out.append((g_payload, g_scales))
+                dq = dequant_bits(g_payload, g_scales, store_w)
+                gathered = lax.stop_gradient(dq) + \
+                    _all_gather_grad_carrier(packed, axis_name)
+                halo = jax.vmap(wire_unpack)(gathered, kept_all, inv_all)
+                bits = packed.shape[0] * n_keep * \
+                    per_block_wire_bits(w_send[idx])
+                return halo, lax.psum(bits, axis_name) * (q - 1)
             packed = wire_quant(packed, w_send[idx], key=rk)
     gathered = lax.all_gather(packed, axis_name)           # [Q, B, K*128]
+    if wire_out is not None:
+        wire_out.append((gathered, None))
     halo = jax.vmap(wire_unpack)(gathered, kept_all, inv_all)
     if pair_w is not None:
         payload = packed.shape[0] * n_keep * \
@@ -170,7 +251,9 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
                       axis_name: str, *, key: Array | None = None,
                       n_keep: int | None = None,
                       pair_k: Array | None = None,
-                      pair_w: Array | None = None) -> tuple[Array, Array]:
+                      pair_w: Array | None = None,
+                      store_w: int = 0,
+                      wire_out: list | None = None) -> tuple[Array, Array]:
     """Neighbor-only p2p halo exchange over a ``ppermute`` ring (§3.5).
 
     Where :func:`packed_all_gather` ships every worker's whole boundary
@@ -221,7 +304,7 @@ def neighbor_exchange(publish: Array, send_slot: Array, send_valid: Array,
     """
     hops, wire_bits = neighbor_exchange_start(
         publish, send_slot, send_valid, axis_name, key=key, n_keep=n_keep,
-        pair_k=pair_k, pair_w=pair_w)
+        pair_k=pair_k, pair_w=pair_w, store_w=store_w, wire_out=wire_out)
     compact = neighbor_exchange_finish(hops, axis_name, key=key,
                                        n_keep=n_keep, f=publish.shape[-1])
     return compact, wire_bits
@@ -235,7 +318,9 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
                             pair_w: Array | None = None,
                             resid: Array | None = None,
                             resid_out: list | None = None,
-                            rounding: str = "rint"
+                            rounding: str = "rint",
+                            store_w: int = 0,
+                            wire_out: list | None = None
                             ) -> tuple[Array, Array]:
     """Issue half of :func:`neighbor_exchange`: pack the boundary block
     once, mask each hop to its pair's kept columns, and run all ``Q - 1``
@@ -264,11 +349,28 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
     uniforms from :func:`repro.kernels.ops.round_key` ``(key, me, d-1)``
     — the same per-(sender, hop) streams the emulated backend vmaps
     over, so both backends round identically.
+
+    ``store_w`` (static, requires ``pair_w``) switches every hop to
+    **true sub-byte storage**: the buffer that rides the ``ppermute`` is
+    the bit-packed uint8 levels (``8/store_w`` lanes per byte at the
+    step's static storage width — the max snapped sub-32 width; pairs
+    quantised *below* it store exactly since their levels fit the wider
+    field) plus the fp32 block scales — ``ceil(k·128·w/8)`` bytes per
+    kept block per row instead of ``k·128`` fp32 lanes.  The receiver
+    rebuilds ``levels · scale`` from the bytes; gradients ride
+    :func:`_ppermute_grad_carrier`.  ``store_w == 0`` keeps the exact
+    fp32 value path (any pair at width ≥ 32 forces it).  ``wire_out``,
+    when a list, captures each hop's physically received ``(payload,
+    scales)`` — the ledger-vs-buffer conservation hook (fp32 hops append
+    ``(rows, None)``).
     """
     if pair_k is not None and n_keep is None:
         raise ValueError("pair_k needs n_keep (the map's static maximum)")
     if pair_w is not None and pair_k is None:
         raise ValueError("pair_w needs pair_k (widths ride the rate map)")
+    if store_w and pair_w is None:
+        raise ValueError("store_w (sub-byte storage) rides the width map; "
+                         "pass pair_w alongside it")
     if resid is not None and pair_w is None:
         raise ValueError("error-feedback residuals ride the quantised "
                          "wire; pass pair_w alongside resid")
@@ -306,6 +408,7 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
     errs = []
     bits = jnp.zeros((), jnp.float32)
     for d in range(1, q):
+        perm = [(j, (j + d) % q) for j in range(q)]
         rows = publish[send_slot[d - 1]] * send_valid[d - 1][:, None]
         if pair_k is not None:
             recv = (me + d) % q
@@ -313,9 +416,10 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
             cmask = (pos_kept_me < k_pair).astype(rows.dtype)
             rows = rows * jnp.repeat(cmask, LANE)[None, :]
             if pair_w is not None:
-                from repro.kernels.ops import (per_block_wire_bits,
-                                               round_key, wire_quant,
-                                               wire_unpack)
+                from repro.kernels.ops import (dequant_bits, pack_bits,
+                                               per_block_wire_bits,
+                                               quant_levels, round_key,
+                                               wire_quant, wire_unpack)
                 if resid is not None:
                     # error feedback: last step's residual packed onto
                     # this call's kept set, masked to the pair's live
@@ -327,19 +431,42 @@ def neighbor_exchange_start(publish: Array, send_slot: Array,
                     rows = rows + lax.stop_gradient(r_rows)
                 rk = round_key(key, me, d - 1) \
                     if rounding == "stochastic" else None
+                blk_bits = per_block_wire_bits(pair_w[recv, me])
+                bits = bits + jnp.sum(send_valid[d - 1]) * \
+                    k_pair.astype(jnp.float32) * blk_bits
+                if store_w:
+                    # sub-byte wire: the ppermute carries bit-packed
+                    # levels + fp32 scales; the receiver rebuilds
+                    # levels · scale from the bytes alone
+                    levels, scales = quant_levels(rows, pair_w[recv, me],
+                                                  key=rk)
+                    payload = pack_bits(levels, store_w)
+                    if resid is not None:
+                        dq_send = dequant_bits(payload, scales, store_w)
+                        err = lax.stop_gradient(rows - dq_send)
+                        errs.append(wire_unpack(err, kept_all[me],
+                                                inv_all[me]))
+                    p_payload = lax.ppermute(payload, axis_name, perm)
+                    p_scales = lax.ppermute(scales, axis_name, perm)
+                    if wire_out is not None:
+                        wire_out.append((p_payload, p_scales))
+                    dq = dequant_bits(p_payload, p_scales, store_w)
+                    hops.append(lax.stop_gradient(dq) +
+                                _ppermute_grad_carrier(rows, axis_name,
+                                                       perm))
+                    continue
                 rows_q = wire_quant(rows, pair_w[recv, me], key=rk)
                 if resid is not None:
                     err = lax.stop_gradient(rows - rows_q)
                     errs.append(wire_unpack(err, kept_all[me],
                                             inv_all[me]))
                 rows = rows_q
-                blk_bits = per_block_wire_bits(pair_w[recv, me])
             else:
-                blk_bits = LANE * 32.0
-            bits = bits + jnp.sum(send_valid[d - 1]) * \
-                k_pair.astype(jnp.float32) * blk_bits
-        rows = lax.ppermute(rows, axis_name,
-                            [(j, (j + d) % q) for j in range(q)])
+                bits = bits + jnp.sum(send_valid[d - 1]) * \
+                    k_pair.astype(jnp.float32) * (LANE * 32.0)
+        rows = lax.ppermute(rows, axis_name, perm)
+        if wire_out is not None:
+            wire_out.append((rows, None))
         hops.append(rows)
     if errs and resid_out is not None:
         resid_out.append(jnp.stack(errs))          # [D, H, F] sender-major

@@ -80,9 +80,9 @@ from repro.core.compression import Compressor
 from repro.core.varco import FULL_COMM, CommPolicy
 from repro.dist.sharding import worker_graph_shardings
 from repro.graph.partition import PartitionedGraph
-from repro.kernels.ops import (WIRE_WIDTHS, ell_aggregate,
-                               per_block_wire_bits, round_key, wire_pack,
-                               wire_quant, wire_unpack)
+from repro.kernels.ops import (WIRE_WIDTHS, dequant_bits, ell_aggregate,
+                               pack_bits, per_block_wire_bits, quant_levels,
+                               round_key, wire_pack, wire_quant, wire_unpack)
 from repro.kernels.varco_pack import (LANE, worker_block_maps,
                                       worker_block_maps_pos)
 from repro.nn.gnn import GNNConfig, gnn_forward, masked_loss_and_correct
@@ -484,6 +484,33 @@ def _packed_pair_w_for(meta: DistMeta, width_map) -> tuple:
     return tuple(w for w in ws if w < 32)
 
 
+def _packed_store_w(meta: DistMeta, width_map) -> int:
+    """Static sub-byte **storage** width of a concrete width map
+    (DESIGN.md §3.8): the maximum snapped off-diagonal width when every
+    off-diagonal pair quantises (all snap below 32), else 0.
+
+    Non-zero turns the quantised wires into true bit-packed byte buffers
+    — ``8/store_w`` lanes per byte ride the collective instead of fp32
+    lanes.  Pairs planned *below* the storage width store exactly (their
+    levels fit the wider field; the ledger still charges the planned
+    width).  Any pair at width ≥ 32 forces 0: fp32 lanes must travel for
+    that pair, so the whole exchange stays on the exact straight-through
+    value path.  Like `_packed_pair_w_for` this is a jit-static fact
+    derived from `_snap_width`, so it adds no recompiles beyond the
+    width-tuple's own variants."""
+    if width_map is None:
+        return 0
+    q = meta.q
+    if q <= 1:
+        return 0
+    wm = np.asarray(width_map, np.float64).reshape(-1, q, q)
+    off = ~np.eye(q, dtype=bool)
+    ws = {_snap_width(v) for v in wm[:, off].ravel()}
+    if not ws or max(ws) >= 32:
+        return 0
+    return max(ws)
+
+
 def _rate_tensor_layers(meta: DistMeta, rate_map) -> int:
     """Static layer count of a rate operand: 1 for ``None`` / ``[Q, Q]``
     pair maps, ``L`` for a per-layer ``[L, Q, Q]`` tensor — which must
@@ -623,7 +650,8 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                              resid_out: list | None = None,
                              fskip=None, fcache=None,
                              fcache_out: list | None = None, dead=None,
-                             rounding: str = "rint"):
+                             rounding: str = "rint", store_w: int = 0,
+                             wire_out: list | None = None):
     """AggregateFn over stacked ``[Q, P, F]`` tensors on one device.
 
     Numerically identical to the shard_map path: the all-gather becomes a
@@ -679,6 +707,19 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
     call) so the receiver's cache tracks the last content it actually
     aggregated.
 
+    ``store_w`` (static, from :func:`_packed_store_w`) switches the
+    quantised wires to **true sub-byte storage** (DESIGN.md §3.8): the
+    materialised wire buffer is the bit-packed uint8 levels
+    (``8/store_w`` lanes per byte) plus the fp32 block scales, and the
+    delivered values are rebuilt as ``levels · scale`` from those bytes
+    — elementwise identical to the shard backend's byte collectives, so
+    mixed rate × width runs stay in the parity matrix.  ``wire_out``,
+    when a list, captures each rate-map exchange's physically shipped
+    buffers — ``(payload uint8, scales)`` under ``store_w``, ``(fp32
+    buffer, None)`` otherwise (sender-major ``[Q, D, H, ·]`` hop stacks
+    on the p2p wire, ``[Q, B, ·]`` payloads on the packed wire) — the
+    ledger-vs-buffer conservation hook.
+
     The returned oracle carries the split-phase API of the pipelined
     forward (DESIGN.md §3.7): ``aggregate.start(li, x)`` issues the
     pack + exchange and returns ``(token, bits)``;
@@ -701,6 +742,9 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
         _rate_tensor_layers(meta, width_map)   # validate [L, Q, Q] shape
     if resid is not None and not p2p_wire:
         raise ValueError("error-feedback residuals are a p2p-wire feature")
+    if store_w and width_map is None:
+        raise ValueError("store_w (sub-byte storage) rides the width map; "
+                         "pass width_map alongside it (DESIGN.md §3.8)")
     if (fskip is not None or fcache is not None or dead is not None) and \
             not (p2p_wire and rate_map is not None):
         raise ValueError("fault channels (fskip/fcache/dead) ride the "
@@ -775,6 +819,7 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                         r_pack = r_pack * cmask_l * \
                             graph["p2p_send_valid"][..., None]
                         hops = hops + jax.lax.stop_gradient(r_pack)
+                    rks = None
                     if rounding == "stochastic":
                         # per-(sender, hop) rounding keys — the exact
                         # streams the shard backend's workers draw from
@@ -783,6 +828,28 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                         rks = jax.vmap(lambda j_: jax.vmap(
                             lambda d_: round_key(k_call, j_, d_))(
                             jnp.arange(hops.shape[1])))(jnp.arange(q))
+                    if store_w:
+                        # sub-byte wire (DESIGN.md §3.8): the hop stack
+                        # that would ride the ppermute is the bit-packed
+                        # uint8 levels + fp32 scales; the delivered value
+                        # is rebuilt from those bytes alone — elementwise
+                        # the shard backend's byte hops, with the
+                        # gradient passing straight through to the
+                        # pre-quantisation rows (its grad carrier)
+                        if rks is not None:
+                            levels, scales = jax.vmap(jax.vmap(
+                                lambda h_, w_, k_: quant_levels(
+                                    h_, w_, key=k_)))(hops, w_jd, rks)
+                        else:
+                            levels, scales = quant_levels(
+                                hops, w_jd[:, :, None, None])
+                        payload = pack_bits(levels, store_w)
+                        if wire_out is not None:
+                            wire_out.append((payload, scales))
+                        dq = dequant_bits(payload, scales, store_w)
+                        hops_q = (hops - jax.lax.stop_gradient(hops)) + \
+                            jax.lax.stop_gradient(dq)
+                    elif rks is not None:
                         hops_q = jax.vmap(jax.vmap(
                             lambda h_, w_, k_: wire_quant(
                                 h_, w_, key=k_)))(hops, w_jd, rks)
@@ -795,6 +862,8 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                                 lambda e_: wire_unpack(e_, kk, iv))(eq))(
                             err, kept, inv))          # [Q, D, H, F]
                     hops = hops_q
+                if wire_out is not None and not (wm is not None and store_w):
+                    wire_out.append((hops, None))
                 sent = jax.vmap(lambda hp, kk, iv: jax.vmap(
                     lambda h_: wire_unpack(h_, kk, iv))(hp))(
                     hops, kept, inv)                  # [Q, D, H, F]
@@ -887,13 +956,34 @@ def _make_aggregate_emulated(graph: dict, meta: DistMeta, policy: CommPolicy,
                 off_w = jnp.where(jnp.eye(q, dtype=bool), 0.0, wm)
                 w_send = jnp.max(off_w, axis=0)                   # [Q]
                 w_send = jnp.where(w_send > 0.0, w_send, 32.0)
+                rks = None
                 if rounding == "stochastic":
                     rks = jax.vmap(lambda j_: round_key(k_call, j_))(
                         jnp.arange(q))
+                if store_w:
+                    # sub-byte wire: the gathered buffer is bit-packed
+                    # uint8 levels + fp32 scales (the shard backend's
+                    # byte all-gather, elementwise)
+                    if rks is not None:
+                        levels, scales = jax.vmap(
+                            lambda p_, w_, k_: quant_levels(
+                                p_, w_, key=k_))(packed, w_send, rks)
+                    else:
+                        levels, scales = quant_levels(
+                            packed, w_send[:, None, None])
+                    payload = pack_bits(levels, store_w)
+                    if wire_out is not None:
+                        wire_out.append((payload, scales))
+                    dq = dequant_bits(payload, scales, store_w)
+                    packed = (packed - jax.lax.stop_gradient(packed)) + \
+                        jax.lax.stop_gradient(dq)
+                elif rks is not None:
                     packed = jax.vmap(lambda p_, w_, k_: wire_quant(
                         p_, w_, key=k_))(packed, w_send, rks)
                 else:
                     packed = wire_quant(packed, w_send[:, None, None])
+            if wire_out is not None and not (wm is not None and store_w):
+                wire_out.append((packed, None))
             sent = jax.vmap(wire_unpack)(packed, kept, inv)
             k_jd = jnp.broadcast_to(k_send[:, None], (q, max(q - 1, 1)))
             pair_err = pair_stats_p2p(pre, pos_all, k_jd)
@@ -985,7 +1075,8 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                           resid=None, resid_out: list | None = None,
                           fskip=None, fcache=None,
                           fcache_out: list | None = None, dead=None,
-                          rounding: str = "rint"):
+                          rounding: str = "rint", store_w: int = 0,
+                          wire_out: list | None = None):
     """AggregateFn for one worker inside ``shard_map`` (blocks ``[1, P, F]``).
 
     Dense wire: :func:`compressed_all_gather` (or a plain all-gather at full
@@ -1039,6 +1130,15 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
     the same pair arithmetic as the emulated backend, so fault runs stay
     in the parity matrix.
 
+    ``store_w`` (static, from :func:`_packed_store_w`) forwards into the
+    byte-storage channel of :func:`neighbor_exchange_start` /
+    :func:`packed_all_gather`: the collective physically carries the
+    bit-packed uint8 levels + fp32 scales instead of fp32 lanes
+    (DESIGN.md §3.8).  ``wire_out``, when a list, captures this worker's
+    shipped ``(payload, scales)`` buffers per rate-map exchange — the
+    caller must return them out of ``shard_map`` to observe them (the
+    conservation tests do).
+
     Carries the same ``start``/``complete`` split-phase attributes as the
     emulated oracle; on this backend ``start`` ends at the ``ppermute``
     (``neighbor_exchange_start``) and ``complete`` begins at the unpack
@@ -1066,6 +1166,9 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
         raise ValueError("error-feedback residuals ride the quantised "
                          "p2p wire; pass width_map with wire='p2p' "
                          "(DESIGN.md §3.8)")
+    if store_w and width_map is None:
+        raise ValueError("store_w (sub-byte storage) rides the width map; "
+                         "pass width_map alongside it (DESIGN.md §3.8)")
     calls = itertools.count()
 
     def pair_err_shard(publish_pre, pos_me, k_d):
@@ -1115,7 +1218,8 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
                     n_keep=n_keep, pair_k=k_pairs, pair_w=wm,
                     resid=None if resid is None else resid[call][0],
                     resid_out=r_out if resid is not None else None,
-                    rounding=rounding)
+                    rounding=rounding, store_w=store_w if wm is not None
+                    else 0, wire_out=wire_out)
                 if resid is not None and resid_out is not None:
                     # [1, D, H, F] block — P(AXIS) out_spec stacks the
                     # workers back into the sender-major [Q, D, H, F]
@@ -1157,7 +1261,9 @@ def _make_aggregate_shard(graph: dict, meta: DistMeta, policy: CommPolicy,
             k_pairs = _pair_keep(nb, rm, n_keep)
             halo, _ = packed_all_gather(sent, axis, n_keep=n_keep,
                                         key=k_call, pair_k=k_pairs,
-                                        pair_w=wm, rounding=rounding)
+                                        pair_w=wm, rounding=rounding,
+                                        store_w=store_w if wm is not None
+                                        else 0, wire_out=wire_out)
             off = jnp.where(jnp.eye(q, dtype=bool), 0, k_pairs)
             k_send = jnp.maximum(jnp.max(off, axis=0), 1)
             me = lax.axis_index(axis)
@@ -1543,9 +1649,10 @@ def make_infer_step(cfg: GNNConfig, policy: CommPolicy, meta: DistMeta,
     n_ex = cfg.layers * reps
     q = meta.q
 
-    @functools.partial(jax.jit, static_argnames=("packed_k", "wire_w"))
+    @functools.partial(jax.jit,
+                       static_argnames=("packed_k", "wire_w", "store_w"))
     def _jit_infer(params, graph, key, rate_map, width_map, skip, cache,
-                   packed_k, wire_w):
+                   packed_k, wire_w, store_w=0):
         cache_out: list = []
         hidden: list = []
         agg = _make_aggregate_emulated(
@@ -1555,7 +1662,7 @@ def make_infer_step(cfg: GNNConfig, policy: CommPolicy, meta: DistMeta,
             cache=cache if cache else None,
             cache_out=cache_out if cache else None,
             width_map=width_map if wire_w else None,
-            rounding=rounding)
+            rounding=rounding, store_w=store_w if wire_w else 0)
         logits, bits = gnn_forward(params, cfg, graph["features"], agg,
                                    hidden_out=hidden)
         return logits, tuple(hidden), bits, tuple(cache_out)
@@ -1574,7 +1681,7 @@ def make_infer_step(cfg: GNNConfig, policy: CommPolicy, meta: DistMeta,
             params, graph, key, jnp.asarray(rm),
             jnp.zeros((), jnp.float32) if wm is None else jnp.asarray(wm),
             jnp.asarray(plan.skip, jnp.float32), tuple(cache),
-            packed_k=kb, wire_w=ww)
+            packed_k=kb, wire_w=ww, store_w=_packed_store_w(meta, wm))
         n_layers = 1 if rm.ndim == 2 else rm.shape[0]
         q2, lq2 = q * q, (1 if rm.ndim == 2 else rm.shape[0]) * q * q
         layer_t = bits[2:2 + lq2].reshape(n_layers, q, q)

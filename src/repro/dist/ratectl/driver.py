@@ -46,8 +46,8 @@ from repro.core.varco import CommPolicy
 from repro.dist.gnn_parallel import (AXIS, COMPILED_CACHE_SIZE, DistMeta,
                                      _local_loss_fn, _make_aggregate_emulated,
                                      _make_aggregate_shard, _packed_pair_k_for,
-                                     _packed_pair_w_for, _pmean_inexact,
-                                     _snap_width)
+                                     _packed_pair_w_for, _packed_store_w,
+                                     _pmean_inexact, _snap_width)
 from repro.dist.ratectl.base import RateController, RatePlan, make_pacing
 from repro.dist.ratectl.budget import budget_controller
 from repro.dist.ratectl.error import error_controller
@@ -295,9 +295,9 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
 
     if mesh is None:
         @functools.partial(jax.jit,
-                           static_argnames=("packed_k", "wire_w"))
+                           static_argnames=("packed_k", "wire_w", "store_w"))
         def _jit_step(params, opt_state, graph, key, rate_map, width_map,
-                      skip, cache, packed_k, wire_w):
+                      skip, cache, packed_k, wire_w, store_w=0):
             wm = width_map if wire_w else None
             ef = use_ef and bool(wire_w) and bool(cache)
 
@@ -312,7 +312,8 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                     width_map=wm,
                     resid=cache if ef else None,
                     resid_out=cache_out if ef else None,
-                    rounding=rounding)
+                    rounding=rounding,
+                    store_w=store_w if wire_w else 0)
                 logits, bits = gnn_forward(p, cfg, graph["features"], agg)
                 loss_sum, _ = masked_loss_and_correct(
                     logits, graph["labels"], graph["train_mask"])
@@ -336,7 +337,8 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                             jnp.zeros((), jnp.float32) if wm is None
                             else jnp.asarray(wm),
                             jnp.asarray(plan.skip, jnp.float32),
-                            tuple(cache), packed_k=kb, wire_w=ww)
+                            tuple(cache), packed_k=kb, wire_w=ww,
+                            store_w=_packed_store_w(meta, wm))
             # an exact (unquantised) step neither reads nor rewrites EF
             # residuals — carry them unchanged instead of dropping them
             return out if out[3] or not cache else (*out[:3], tuple(cache))
@@ -344,7 +346,8 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
         step._jit_step = _jit_step
         return step
 
-    def make_worker(packed_k: tuple, wire_w: tuple, ef: bool):
+    def make_worker(packed_k: tuple, wire_w: tuple, ef: bool,
+                    store_w: int = 0):
         def worker(params, opt_state, gblk, rate_map, width_map, key,
                    cache):
             # `cache` is the EF residual tuple sharded along its leading
@@ -358,7 +361,8 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
                     width_map=width_map if wire_w else None,
                     resid=cache if ef else None,
                     resid_out=cache_out if ef else None,
-                    rounding=rounding)
+                    rounding=rounding,
+                    store_w=store_w if wire_w else 0)
                 loss, bits = _local_loss_fn(p, cfg, gblk, agg, meta)
                 return loss, (bits, tuple(cache_out))
 
@@ -382,9 +386,10 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
         return worker
 
     @functools.lru_cache(maxsize=compiled_cache_size)
-    def _compiled_for(kblocks: tuple, wire_w: tuple = (), ef: bool = False):
+    def _compiled_for(kblocks: tuple, wire_w: tuple = (), ef: bool = False,
+                      store_w: int = 0):
         return jax.jit(shard_map(
-            make_worker(kblocks, wire_w, ef), mesh=mesh,
+            make_worker(kblocks, wire_w, ef, store_w), mesh=mesh,
             in_specs=(P(), P(), P(AXIS), P(), P(), P(), P(AXIS)),
             out_specs=(P(), P(), P(), P(AXIS)), check_rep=False))
 
@@ -393,7 +398,8 @@ def make_auto_train_step(cfg: GNNConfig, policy: CommPolicy, opt: Optimizer,
         kb = _packed_pair_k_for(meta, rm)
         wm, ww = _plan_widths(plan)
         ef = use_ef and bool(ww) and bool(cache)
-        params, opt_state, m, cache_new = _compiled_for(kb, ww, ef)(
+        params, opt_state, m, cache_new = _compiled_for(
+            kb, ww, ef, _packed_store_w(meta, wm))(
             params, opt_state, graph, jnp.asarray(rm),
             jnp.zeros((), jnp.float32) if wm is None else jnp.asarray(wm),
             key, tuple(cache))

@@ -88,10 +88,19 @@ def qos_controller(q: int, pacing: Pacing, pair_rows,
         return RatePlan(rates, skip, widths), {**state, "integ": integ}
 
     def observe(state, obs):
+        # the isinstance guard used to shield only query_mass, so a
+        # non-dict observation crashed one line earlier on
+        # obs["transport_bits"] with a bare TypeError — fail with the
+        # contract instead
+        if not isinstance(obs, dict):
+            raise TypeError(
+                "qos observe() needs the step metrics dict "
+                "(keys 'transport_bits' and optionally 'query_mass'); "
+                f"got {type(obs).__name__}")
         out = {**state,
                "spent": state["spent"] +
                jnp.asarray(obs["transport_bits"], jnp.float32)}
-        mass = obs.get("query_mass") if isinstance(obs, dict) else None
+        mass = obs.get("query_mass")
         if mass is not None:
             out["mass"] = ema_decay * state["mass"] + \
                 (1.0 - ema_decay) * jnp.asarray(mass, jnp.float32)

@@ -16,11 +16,12 @@ from . import ref
 from .ell_spmm import ell_spmm
 from .flash_attention import flash_attention
 from .varco_pack import (LANE, block_mask_indices, varco_pack,
-                         varco_pack_quant, varco_unpack)
+                         varco_pack_quant, varco_unpack, varco_unpack_quant)
 
 #: wire bit-widths the quantised codecs speak — 32 is the fp32
 #: passthrough, the rest are symmetric per-lane-block int formats
-#: (qmax = 2^(w-1) - 1; int8 storage on the wire, true-width ledger).
+#: (qmax = 2^(w-1) - 1) bit-packed to true sub-byte storage: 8/w lanes
+#: per byte, so the buffers carry exactly the ledger's w bits per lane.
 WIRE_WIDTHS = (2, 4, 8, 32)
 
 
@@ -165,17 +166,20 @@ wire_unpack.defvjp(_wire_unpack_fwd, _wire_unpack_bwd)
 # (``varco_pack_quant``) / ``pack_quant`` below.
 
 
-def quant_dequant(x, width, *, key=None):
-    """Symmetric per-lane-block quantise→dequantise at ``width`` bits.
+def quant_levels(x, width, *, key=None):
+    """Per-lane-block symmetric quantisation *levels* plus scales.
 
-    ``x [..., nb*LANE]``; ``width`` — scalar or array broadcastable
-    against the per-block scale array ``[..., nb]`` (e.g. per-pair
-    widths ``w[:, :, None, None]`` against hops ``[Q, D, H, nb]``).
-    ``width >= 32`` is an exact fp32 passthrough.  Deterministic
-    round-to-nearest by default (the parity-checked wire behaviour,
-    identical on both backends); pass ``key`` for stochastic rounding
-    ``floor(v + u)``, ``u ~ U[0, 1)`` — unbiased in expectation.
-    Per-element error ≤ ``amax_block / (2^(width-1) - 1)``.
+    ``x [..., nb*LANE]`` -> ``(levels int8 [..., nb*LANE], scales f32
+    [..., nb])``.  ``width`` may be a traced scalar or array
+    broadcastable against the per-block scale array (per-pair widths
+    change every step under the controllers); the *storage* stays int8
+    here — :func:`pack_bits` squeezes the levels to true sub-byte bytes
+    at the step's static storage width.  Deterministic round-to-nearest
+    by default; pass ``key`` for stochastic rounding ``floor(v + u)``
+    (same uniform stream :func:`quant_dequant` draws, so the two agree
+    bitwise).  ``width >= 32`` yields wrapped garbage levels — callers
+    on the fp32 passthrough discard them (as :func:`quant_dequant`'s
+    ``where`` does).
     """
     lead = x.shape[:-1]
     nb = x.shape[-1] // LANE
@@ -190,10 +194,62 @@ def quant_dequant(x, width, *, key=None):
     else:
         qv = jnp.floor(v + jax.random.uniform(key, xb.shape))
     qv = jnp.clip(qv, -qmax[..., None], qmax[..., None])
-    dq = qv * scale[..., None]
-    out = jnp.where(jnp.broadcast_to(w >= 32.0, amax.shape)[..., None],
+    return qv.astype(jnp.int8).reshape(x.shape), scale
+
+
+def quant_dequant(x, width, *, key=None):
+    """Symmetric per-lane-block quantise→dequantise at ``width`` bits.
+
+    ``x [..., nb*LANE]``; ``width`` — scalar or array broadcastable
+    against the per-block scale array ``[..., nb]`` (e.g. per-pair
+    widths ``w[:, :, None, None]`` against hops ``[Q, D, H, nb]``).
+    ``width >= 32`` is an exact fp32 passthrough.  Deterministic
+    round-to-nearest by default (the parity-checked wire behaviour,
+    identical on both backends); pass ``key`` for stochastic rounding
+    ``floor(v + u)``, ``u ~ U[0, 1)`` — unbiased in expectation.
+    Per-element error ≤ ``amax_block / (2^(width-1) - 1)``.
+
+    Built on :func:`quant_levels` — for sub-32 widths the int8 levels
+    round-trip exactly (|level| ≤ 127), so the decode here is bitwise
+    what a receiver reconstructs from the bit-packed wire bytes.
+    """
+    lead = x.shape[:-1]
+    nb = x.shape[-1] // LANE
+    xb = x.reshape(*lead, nb, LANE)
+    w = jnp.asarray(width, jnp.float32)
+    levels, scale = quant_levels(x, width, key=key)
+    lb = levels.astype(jnp.float32).reshape(*lead, nb, LANE)
+    dq = lb * scale[..., None]
+    out = jnp.where(jnp.broadcast_to(w >= 32.0, scale.shape)[..., None],
                     xb, dq)
     return out.reshape(x.shape)
+
+
+def pack_bits(levels, width: int):
+    """Bit-pack int-``width`` levels to bytes: ``[..., M] -> [...,
+    ceil(M·width/8)]`` uint8, ``8/width`` lanes per byte little-endian
+    (``width == 8`` is the identity reinterpret).  jnp on every backend
+    — the fused Pallas kernels pack in-register (``varco_pack_quant``);
+    this is the standalone codec the transport layers and tests use."""
+    return ref.pack_bits_reference(levels, width)
+
+
+def unpack_bits(packed, width: int, m: int | None = None):
+    """Inverse of :func:`pack_bits`: sign-extend each ``width``-bit
+    field back to int8 levels (``m`` trims tail-byte zero-pad lanes)."""
+    return ref.unpack_bits_reference(packed, width, m)
+
+
+def dequant_bits(payload, scales, width: int):
+    """Value-level decode of a sub-byte wire buffer: payload uint8
+    ``[..., K·LANE·width/8]`` × scales f32 ``[..., K]`` -> f32
+    ``[..., K·LANE]``.  Bitwise the ``levels · scale`` dequantise of
+    :func:`quant_dequant` — what every receiver reconstructs from the
+    bytes that actually crossed the wire."""
+    k = scales.shape[-1]
+    levels = ref.unpack_bits_reference(payload, width, k * LANE)
+    lb = levels.astype(jnp.float32).reshape(*scales.shape, LANE)
+    return (lb * scales[..., None]).reshape(*payload.shape[:-1], k * LANE)
 
 
 def wire_quant(x, width, *, key=None):
@@ -256,12 +312,13 @@ def _pack_quant_impl(x, kept, width: int):
 
 @partial(jax.jit, static_argnames=("width", "interpret"))
 def pack_quant(x, kept, *, width: int, interpret: bool | None = None):
-    """Fused pack+quantise entry point: ``[N, F] -> (int8 [N, K*128],
-    scales f32 [N, K])`` in one kernel launch (Pallas on TPU, the
-    ``ref`` oracle elsewhere).  Decode with
-    :func:`repro.kernels.ref.quant_dequant_reference` (+ ``wire_unpack``
-    for the scatter) — the decode is jnp either way, it fuses into the
-    consumer."""
+    """Fused pack+quantise+bit-pack entry point: ``[N, F] -> (payload
+    uint8 [N, K*128*width/8], scales f32 [N, K])`` in one kernel launch
+    (Pallas on TPU, the ``ref`` oracle elsewhere).  The payload carries
+    the ledger's exact ``LANE·width`` bits per kept block — ``8/width``
+    lanes per byte, ``width == 8`` bitwise the former int8 storage.
+    Decode with :func:`unpack_quant` (fused) or
+    :func:`dequant_bits` (+ ``wire_unpack`` for the scatter)."""
     if interpret is not None and interpret:
         n = x.shape[0]
         pad = _padded_rows(n) - n
@@ -271,6 +328,39 @@ def pack_quant(x, kept, *, width: int, interpret: bool | None = None):
                                           interpret=True)
         return (packed[:n], scales[:n]) if pad else (packed, scales)
     return _pack_quant_impl(x, kept, width)
+
+
+def _unpack_quant_impl(payload, scales, inv, width: int):
+    if jax.default_backend() == "tpu":
+        n = payload.shape[0]
+        pad = _padded_rows(n) - n
+        if pad:
+            payload = jnp.pad(payload, ((0, pad), (0, 0)))
+            scales = jnp.pad(scales, ((0, pad), (0, 0)))
+        out = varco_unpack_quant(payload, scales, inv, width=width)
+        return out[:n] if pad else out
+    return ref.unpack_reference(
+        ref.unpack_quant_reference(payload, scales, width), inv)
+
+
+@partial(jax.jit, static_argnames=("width", "interpret"))
+def unpack_quant(payload, scales, inv, *, width: int,
+                 interpret: bool | None = None):
+    """Fused receive-side decode: bit-unpack + dequantise + scatter in
+    one launch — ``(payload uint8 [N, K*128*width/8], scales f32
+    [N, K], inv [F/128]) -> f32 [N, F]`` with dropped blocks
+    zero-filled (Pallas ``varco_unpack_quant`` on TPU, the ``ref``
+    oracles elsewhere)."""
+    if interpret is not None and interpret:
+        n = payload.shape[0]
+        pad = _padded_rows(n) - n
+        if pad:
+            payload = jnp.pad(payload, ((0, pad), (0, 0)))
+            scales = jnp.pad(scales, ((0, pad), (0, 0)))
+        out = varco_unpack_quant(payload, scales, inv, width=width,
+                                 interpret=True)
+        return out[:n] if pad else out
+    return _unpack_quant_impl(payload, scales, inv, width)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -371,5 +461,8 @@ pack_reference = ref.pack_reference
 unpack_reference = ref.unpack_reference
 pack_quant_reference = ref.pack_quant_reference
 quant_dequant_reference = ref.quant_dequant_reference
+pack_bits_reference = ref.pack_bits_reference
+unpack_bits_reference = ref.unpack_bits_reference
+unpack_quant_reference = ref.unpack_quant_reference
 ell_spmm_reference = ref.ell_spmm_reference
 ssd_reference = ref.ssd_reference

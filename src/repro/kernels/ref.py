@@ -50,18 +50,63 @@ def unpack_reference(packed: jax.Array, inv_idx: jax.Array) -> jax.Array:
     return out.reshape(n, nf * LANE)
 
 
-def pack_quant_reference(x: jax.Array, block_idx: jax.Array, width: int
-                         ) -> tuple[jax.Array, jax.Array]:
-    """Fused pack+quantise oracle: gather kept lane-blocks and quantise
-    each to ``width`` bits with one symmetric per-(row, block) scale.
+def pack_bits_reference(levels: jax.Array, width: int) -> jax.Array:
+    """Bit-pack int-``width`` levels into bytes (the sub-byte wire layout).
 
-    x [N, F], block_idx [K] -> (packed int8 [N, K*LANE], scales f32
-    [N, K]).  ``qmax = 2^(width-1) - 1``; zero blocks get scale 1 so the
-    dequantise is exact there too.  This is the jnp reference for the
-    Pallas ``varco_pack_quant`` kernel (one VMEM pass; the amax, the
-    scale and the rounded int8 block come out of the same tile visit).
+    ``levels [..., M]`` int8 values in ``[-qmax, qmax]`` -> uint8
+    ``[..., ceil(M / (8/width))]``.  Each byte holds ``8/width``
+    consecutive lanes, little-endian within the byte: lane ``i`` lives in
+    byte ``i // (8/w)`` at bit offset ``(i % (8/w)) * w``, stored as the
+    low ``w`` bits of its two's complement.  ``width == 8`` is the
+    identity reinterpret (one lane per byte — bitwise the int8 storage
+    the pre-packing wire shipped).  Tail lanes (``M`` not a multiple of
+    ``8/w``) are zero-padded into the last byte.
     """
-    packed = pack_reference(x, block_idx)
+    assert width in (2, 4, 8), width
+    lv = levels.astype(jnp.int8)
+    if width == 8:
+        return jax.lax.bitcast_convert_type(lv, jnp.uint8)
+    vpb = 8 // width
+    m = lv.shape[-1]
+    pad = (-m) % vpb
+    if pad:
+        lv = jnp.pad(lv, [(0, 0)] * (lv.ndim - 1) + [(0, pad)])
+    u = jax.lax.bitcast_convert_type(lv, jnp.uint8) & jnp.uint8(2 ** width - 1)
+    u = u.reshape(*lv.shape[:-1], -1, vpb)
+    out = u[..., 0]
+    for j in range(1, vpb):
+        out = out | (u[..., j] << jnp.uint8(j * width))
+    return out
+
+
+def unpack_bits_reference(packed: jax.Array, width: int,
+                          m: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_bits_reference`: uint8 bytes -> int8 levels.
+
+    ``m`` trims the trailing zero-pad lanes of a tail byte (defaults to
+    every stored lane, ``bytes · 8/width``).  Sign-extends each ``width``-
+    bit field (values ``>= 2^(w-1)`` wrap negative).
+    """
+    assert width in (2, 4, 8), width
+    if width == 8:
+        out = jax.lax.bitcast_convert_type(packed, jnp.int8)
+        return out if m is None else out[..., :m]
+    vpb = 8 // width
+    mask = jnp.uint8(2 ** width - 1)
+    shifts = jnp.arange(vpb, dtype=jnp.uint8) * jnp.uint8(width)
+    fields = (packed[..., None] >> shifts) & mask       # [..., B, vpb]
+    v = fields.astype(jnp.int32)
+    v = jnp.where(v >= 2 ** (width - 1), v - 2 ** width, v)
+    out = v.astype(jnp.int8).reshape(*packed.shape[:-1], -1)
+    return out[..., : (m if m is not None else out.shape[-1])]
+
+
+def quant_levels_reference(packed: jax.Array, width: int
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Per-(row, block) symmetric quantisation of a packed fp32 payload:
+    [N, K*LANE] -> (int8 levels [N, K*LANE], scales f32 [N, K]).
+    ``qmax = 2^(width-1) - 1``; zero blocks get scale 1 so the dequantise
+    is exact there too."""
     n, kf = packed.shape
     k = kf // LANE
     qmax = float(2 ** (width - 1) - 1)
@@ -72,14 +117,43 @@ def pack_quant_reference(x: jax.Array, block_idx: jax.Array, width: int
     return q.astype(jnp.int8).reshape(n, kf), scale
 
 
-def quant_dequant_reference(packed_q: jax.Array, scales: jax.Array
+def pack_quant_reference(x: jax.Array, block_idx: jax.Array, width: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fused pack+quantise oracle: gather kept lane-blocks, quantise each
+    to ``width`` bits with one symmetric per-(row, block) scale, and
+    bit-pack the levels into true sub-byte storage.
+
+    x [N, F], block_idx [K] -> (payload uint8 [N, K*LANE*width/8],
+    scales f32 [N, K]).  ``qmax = 2^(width-1) - 1``; byte layout per
+    :func:`pack_bits_reference` (``8/width`` lanes per byte, little-
+    endian; ``width == 8`` stores bitwise the int8 lanes of the
+    pre-packing wire).  This is the jnp reference for the Pallas
+    ``varco_pack_quant`` kernel (one VMEM pass; amax, scale, rounded
+    levels and the packed bytes come out of the same tile visit).
+    Decode with :func:`unpack_quant_reference`.
+    """
+    levels, scale = quant_levels_reference(pack_reference(x, block_idx),
+                                           width)
+    return pack_bits_reference(levels, width), scale
+
+
+def quant_dequant_reference(levels: jax.Array, scales: jax.Array
                             ) -> jax.Array:
-    """Decode a quantised wire payload: int8 [N, K*LANE] × scales [N, K]
-    -> f32 [N, K*LANE] (the receiver's side of ``pack_quant_reference``)."""
-    n, kf = packed_q.shape
+    """Decode *unpacked* quantisation levels: int8 [N, K*LANE] × scales
+    [N, K] -> f32 [N, K*LANE]."""
+    n, kf = levels.shape
     k = kf // LANE
-    pb = packed_q.astype(jnp.float32).reshape(n, k, LANE)
+    pb = levels.astype(jnp.float32).reshape(n, k, LANE)
     return (pb * scales[..., None]).reshape(n, kf)
+
+
+def unpack_quant_reference(payload: jax.Array, scales: jax.Array,
+                           width: int) -> jax.Array:
+    """Receiver's side of :func:`pack_quant_reference`: sub-byte payload
+    uint8 [N, K*LANE*width/8] × scales [N, K] -> f32 [N, K*LANE]."""
+    k = scales.shape[-1]
+    levels = unpack_bits_reference(payload, width, k * LANE)
+    return quant_dequant_reference(levels, scales)
 
 
 def ell_spmm_reference(x: jax.Array, nbr: jax.Array, w: jax.Array

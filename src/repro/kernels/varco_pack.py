@@ -71,32 +71,69 @@ def varco_pack(x: jax.Array, block_idx: jax.Array, *, tile_n: int = 256,
     )(block_idx, x)
 
 
-def _pack_quant_kernel(idx_ref, x_ref, out_ref, scale_ref, *, qmax):
+def _bitpack_block(levels: jax.Array, width: int) -> jax.Array:
+    """int8 levels [tn, LANE] -> packed uint8 [tn, LANE*width/8].
+
+    One byte holds ``vpb = 8/width`` consecutive lanes, little-endian
+    within the byte (lane ``c*vpb + j`` at bit offset ``j*width``).  The
+    strided slice ``levels[:, j::vpb]`` is exactly the offset-``j`` lane
+    of every group, so the combine is ``vpb`` shifted ORs — no in-kernel
+    reshape.  Shared by the pack and the oracle-checked byte layout
+    (:func:`repro.kernels.ref.pack_bits_reference`).
+    """
+    lv = levels.astype(jnp.int8)
+    if width == 8:
+        return jax.lax.bitcast_convert_type(lv, jnp.uint8)
+    vpb = 8 // width
+    u = jax.lax.bitcast_convert_type(lv, jnp.uint8) & jnp.uint8(2 ** width - 1)
+    out = u[:, 0::vpb]
+    for j in range(1, vpb):
+        out = out | (u[:, j::vpb] << jnp.uint8(j * width))
+    return out
+
+
+def _bitunpack_block(packed: jax.Array, width: int) -> jax.Array:
+    """Inverse of :func:`_bitpack_block`: uint8 [tn, LANE*width/8] ->
+    sign-extended int8 levels [tn, LANE] via interleaved strided sets."""
+    if width == 8:
+        return jax.lax.bitcast_convert_type(packed, jnp.int8)
+    vpb = 8 // width
+    mask = jnp.uint8(2 ** width - 1)
+    out = jnp.zeros((packed.shape[0], packed.shape[1] * vpb), jnp.int32)
+    for j in range(vpb):
+        v = ((packed >> jnp.uint8(j * width)) & mask).astype(jnp.int32)
+        v = jnp.where(v >= 2 ** (width - 1), v - 2 ** width, v)
+        out = out.at[:, j::vpb].set(v)
+    return out.astype(jnp.int8)
+
+
+def _pack_quant_kernel(idx_ref, x_ref, out_ref, scale_ref, *, qmax, width):
     del idx_ref  # consumed by the index_map
     xb = x_ref[...]
     amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
     scale = jnp.where(amax > 0, amax / qmax, 1.0)
-    out_ref[...] = jnp.clip(jnp.rint(xb / scale), -qmax, qmax
-                            ).astype(jnp.int8)
+    levels = jnp.clip(jnp.rint(xb / scale), -qmax, qmax).astype(jnp.int8)
+    out_ref[...] = _bitpack_block(levels, width)
     scale_ref[...] = scale
 
 
 def varco_pack_quant(x: jax.Array, block_idx: jax.Array, *, width: int,
                      tile_n: int = 256, interpret: bool = False
                      ) -> tuple[jax.Array, jax.Array]:
-    """Fused gather + low-bit quantise: one kernel launch, one VMEM pass.
+    """Fused gather + low-bit quantise + bit-pack: one kernel launch.
 
-    x [N, F], block_idx [K] -> (packed int8 [N, K*128], scales f32
-    [N, K]).  Each kept lane-block is DMA-routed into VMEM exactly as in
-    :func:`varco_pack`, and *in the same tile visit* the kernel computes
-    the per-row block amax, the symmetric scale ``amax / qmax`` with
-    ``qmax = 2^(width-1) - 1``, and the rounded-clipped int8 block —
-    there is no second cast pass over the packed buffer and the fp32
-    intermediate never exists.  ``width`` ∈ {2, 4, 8}; all three share
-    the int8 storage dtype (values are clipped to their own qmax; sub-
-    byte bit-packing is a wire-framing concern, the ledger charges the
-    true ``width`` bits per element).  Oracle:
-    :func:`repro.kernels.ref.pack_quant_reference`.
+    x [N, F], block_idx [K] -> (payload uint8 [N, K*128*width/8],
+    scales f32 [N, K]).  Each kept lane-block is DMA-routed into VMEM
+    exactly as in :func:`varco_pack`, and *in the same tile visit* the
+    kernel computes the per-row block amax, the symmetric scale
+    ``amax / qmax`` with ``qmax = 2^(width-1) - 1``, the rounded-clipped
+    int8 levels, AND the sub-byte bit-pack (``8/width`` lanes per byte,
+    little-endian — ``width == 8`` stores bitwise the int8 lanes the
+    pre-packing wire shipped) — the fp32 intermediate and the one-lane-
+    per-byte int8 buffer never exist.  ``width`` ∈ {2, 4, 8}; storage
+    now matches the ledger's ``LANE·width`` payload charge exactly.
+    Oracle: :func:`repro.kernels.ref.pack_quant_reference`; decode with
+    :func:`varco_unpack_quant` / ``ref.unpack_quant_reference``.
     """
     n, f = x.shape
     assert f % LANE == 0, f
@@ -105,6 +142,7 @@ def varco_pack_quant(x: jax.Array, block_idx: jax.Array, *, width: int,
     tn = min(tile_n, n)
     assert n % tn == 0, (n, tn)
     qmax = float(2 ** (width - 1) - 1)
+    bpb = LANE * width // 8                 # payload bytes per lane-block
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -113,17 +151,71 @@ def varco_pack_quant(x: jax.Array, block_idx: jax.Array, *, width: int,
             pl.BlockSpec((tn, LANE), lambda i, j, idx: (i, idx[j])),
         ],
         out_specs=[
-            pl.BlockSpec((tn, LANE), lambda i, j, idx: (i, j)),
+            pl.BlockSpec((tn, bpb), lambda i, j, idx: (i, j)),
             pl.BlockSpec((tn, 1), lambda i, j, idx: (i, j)),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_pack_quant_kernel, qmax=qmax),
+        functools.partial(_pack_quant_kernel, qmax=qmax, width=width),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((n, k * LANE), jnp.int8),
+        out_shape=[jax.ShapeDtypeStruct((n, k * bpb), jnp.uint8),
                    jax.ShapeDtypeStruct((n, k), jnp.float32)],
         interpret=interpret,
     )(block_idx, x)
+
+
+def _unpack_quant_kernel(inv_ref, packed_ref, scale_ref, out_ref, *, width):
+    j = pl.program_id(1)
+    live = inv_ref[j] >= 0
+
+    @pl.when(live)
+    def _decode():
+        levels = _bitunpack_block(packed_ref[...], width)
+        out_ref[...] = levels.astype(jnp.float32) * scale_ref[...]
+
+    @pl.when(jnp.logical_not(live))
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def varco_unpack_quant(payload: jax.Array, scales: jax.Array,
+                       inv_idx: jax.Array, *, width: int, tile_n: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    """Fused receive-side decode: bit-unpack + dequantise + scatter.
+
+    payload uint8 [N, K*128*width/8], scales f32 [N, K], inv_idx [F/128]
+    (packed block column of each output block, -1 if dropped) -> f32
+    [N, F].  One launch does what unpack-then-dequant did in two: each
+    live output block DMA-routes its payload bytes and scale column into
+    VMEM, sign-extends the ``width``-bit fields and multiplies by the
+    block scale; dropped blocks are zero-filled (the paper's decoder).
+    Oracle: ``ref.unpack_quant_reference`` + ``ref.unpack_reference``.
+    """
+    n, kb = payload.shape
+    assert width in (2, 4, 8), width
+    bpb = LANE * width // 8
+    assert kb % bpb == 0, (kb, bpb)
+    nf = inv_idx.shape[0]
+    tn = min(tile_n, n)
+    assert n % tn == 0, (n, tn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // tn, nf),
+        in_specs=[
+            pl.BlockSpec((tn, bpb),
+                         lambda i, j, inv: (i, jnp.maximum(inv[j], 0))),
+            pl.BlockSpec((tn, 1),
+                         lambda i, j, inv: (i, jnp.maximum(inv[j], 0))),
+        ],
+        out_specs=pl.BlockSpec((tn, LANE), lambda i, j, inv: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_unpack_quant_kernel, width=width),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, nf * LANE), jnp.float32),
+        interpret=interpret,
+    )(inv_idx, payload, scales)
 
 
 def _unpack_kernel(inv_ref, packed_ref, out_ref):

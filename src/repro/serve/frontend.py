@@ -81,7 +81,11 @@ class MicroBatcher:
         qy = Query(nodes, tenant, now)
         self._queues.setdefault(int(self.owner[nodes[0]]),
                                 deque()).append(qy)
-        if self._oldest is None:
+        # true minimum, not first-arrival: callers feed explicit `now`
+        # stamps (replay, skewed tenant clocks), so a later submit may
+        # carry an EARLIER timestamp — keeping the first stamp would
+        # leave _oldest too new and ready() would trip late or never
+        if self._oldest is None or now < self._oldest:
             self._oldest = now
         return qy
 

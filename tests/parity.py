@@ -105,6 +105,21 @@ def mixed_width_map(q: int, seed: int = 0,
     return wm
 
 
+def sub32_width_map(q: int, seed: int = 0,
+                    layers: int | None = None) -> np.ndarray:
+    """:func:`mixed_width_map` restricted to the sub-32 widths
+    ``{2, 4, 8}`` off-diagonal: every pair quantises, so the step's
+    static storage width is non-zero and the **bit-packed byte wire**
+    carries the exchange (`_packed_store_w`; diagonal stays 32 — local
+    rows never ship)."""
+    rng = np.random.default_rng(seed + 2000)
+    shape = (q, q) if layers is None else (layers, q, q)
+    wm = rng.choice(MIXED_WIDTHS[:-1], size=shape).astype(np.float32)
+    for sl in wm.reshape(-1, q, q):
+        np.fill_diagonal(sl, 32.0)
+    return wm
+
+
 # ---------------------------------------------------------------------------
 # Subprocess scripts.  One interpreter per Q (XLA fixes the device count at
 # startup); each runs a whole case list so the graph build and mesh are paid
@@ -120,8 +135,8 @@ from parity import build_setup
 from repro.core import CommPolicy
 from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
                                      _make_aggregate_shard, _packed_k_for,
-                                     _packed_pair_k_for, make_worker_mesh,
-                                     shard_graph)
+                                     _packed_pair_k_for, _packed_store_w,
+                                     make_worker_mesh, shard_graph)
 from repro.nn.gnn import gnn_forward
 
 spec = json.loads(sys.argv[1])
@@ -209,10 +224,15 @@ for case in spec["cases"]:
         continue
     if rm is not None:
         kb = dict(_packed_pair_k_for(meta, rm))
+        # all-sub-32 width maps turn on the bit-packed byte wire on BOTH
+        # backends (store_w > 0), so the parity matrix pins the sub-byte
+        # storage path exactly like the fp32 one
+        sw = 0 if wm is None else _packed_store_w(meta, wm)
         agg_e = _make_aggregate_emulated(
             graph, meta, pol, None, jnp.ones(()), key, packed_k=kb,
             rate_map=jnp.asarray(rm),
-            width_map=None if wm is None else jnp.asarray(wm))
+            width_map=None if wm is None else jnp.asarray(wm),
+            store_w=sw)
 
         if wm is None:
             def worker(p, gblk, rmap, k):
@@ -230,7 +250,8 @@ for case in spec["cases"]:
             def worker(p, gblk, rmap, wmap, k):
                 agg = _make_aggregate_shard(gblk, meta, pol, None,
                                             jnp.ones(()), k, packed_k=kb,
-                                            rate_map=rmap, width_map=wmap)
+                                            rate_map=rmap, width_map=wmap,
+                                            store_w=sw)
                 return gnn_forward(p, cfg, gblk["features"], agg)
 
             sm = jax.jit(shard_map(worker, mesh=mesh,
@@ -270,6 +291,156 @@ for case in spec["cases"]:
     print(label, "OK", f"dl={dl:.2e}")
 print("PARITY_MATRIX_OK")
 """
+
+CONSERVE_SCRIPT = r"""
+import json, math, sys
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from parity import build_setup
+from repro.core import CommPolicy
+from repro.dist.gnn_parallel import (DistMeta, _make_aggregate_emulated,
+                                     _make_aggregate_shard,
+                                     _packed_pair_k_for, _packed_store_w,
+                                     make_worker_mesh, shard_graph)
+from repro.kernels.varco_pack import LANE
+from repro.nn.gnn import gnn_forward
+
+spec = json.loads(sys.argv[1])
+q, f, layers, n = spec["q"], spec["f"], spec["layers"], spec["n"]
+g, cfg, params, pg, graph = build_setup(q, f=f, layers=layers, n=n)
+mesh = make_worker_mesh(q)
+gs = shard_graph(graph, mesh)
+pol = CommPolicy.parse("fixed:2", 1, compressor="blockmask")
+rate = spec["rate"]
+nb = f // LANE
+k = max(int(nb // rate), 1)
+rm = np.full((q, q), rate, np.float32)
+np.fill_diagonal(rm, 1.0)
+valid = np.asarray(graph["p2p_send_valid"])          # [Q, D, H]
+D = q - 1
+key = jax.random.key(7)
+
+
+def hop_bytes(payload, scales, j, d):
+    sel = valid[j, d] > 0
+    m = np.asarray(payload)[sel].nbytes
+    if scales is not None:
+        m += np.asarray(scales)[sel].nbytes
+    return m
+
+
+for w in spec["widths"]:
+    wm = np.full((q, q), float(w), np.float32)
+    np.fill_diagonal(wm, 32.0)
+    meta = DistMeta.build(pg, params, wire="p2p")
+    sw = _packed_store_w(meta, wm)
+    assert sw == (w if w < 32 else 0), (w, sw)
+    kb = dict(_packed_pair_k_for(meta, rm))
+    we = []
+    agg_e = _make_aggregate_emulated(
+        graph, meta, pol, None, jnp.ones(()), key, packed_k=kb,
+        rate_map=jnp.asarray(rm), width_map=jnp.asarray(wm),
+        store_w=sw, wire_out=we)
+    le, be = gnn_forward(params, cfg, graph["features"], agg_e)
+    assert len(we) == layers, (w, len(we))
+
+    def worker(p, gblk, rmap, wmap, kk):
+        wo = []
+        agg = _make_aggregate_shard(gblk, meta, pol, None, jnp.ones(()),
+                                    kk, packed_k=kb, rate_map=rmap,
+                                    width_map=wmap, store_w=sw,
+                                    wire_out=wo)
+        l, b = gnn_forward(p, cfg, gblk["features"], agg)
+        return l, b, tuple(wo)
+
+    sm = jax.jit(shard_map(worker, mesh=mesh,
+                           in_specs=(P(), P("workers"), P(), P(), P()),
+                           out_specs=(P("workers"), P(), P("workers")),
+                           check_rep=False))
+    ls, bs, ws = sm(params, gs, jnp.asarray(rm), jnp.asarray(wm), key)
+    assert len(ws) == layers * D, (w, len(ws))
+
+    # per-pair ledger transport bits [recv, send], summed over exchanges
+    for bvec, tag in ((be, "emulated"), (bs, "shard")):
+        pt = np.asarray(bvec[2:2 + q * q], np.float64).reshape(q, q)
+        assert not np.diagonal(pt).any(), (w, tag)
+    pair_t = np.asarray(be[2:2 + q * q], np.float64).reshape(q, q)
+    np.testing.assert_allclose(
+        pair_t, np.asarray(bs[2:2 + q * q], np.float64).reshape(q, q))
+
+    meas_e = np.zeros((q, q))
+    meas_s = np.zeros((q, q))
+    for e, (payload, scales) in enumerate(we):
+        for j in range(q):
+            for d in range(D):
+                i = (j + d + 1) % q
+                rows = int((valid[j, d] > 0).sum())
+                m = hop_bytes(payload[j, d], None if scales is None
+                              else scales[j, d], j, d)
+                # every hop's transported bytes == ceil(its ledger
+                # charge / 8): rows kept-blocks at LANE·w + 32 each
+                blk = LANE * 32.0 if w >= 32 else LANE * w + 32.0
+                assert m == math.ceil(rows * k * blk / 8.0), \
+                    (w, "hop", e, j, d, m, rows, k)
+                meas_e[i, j] += m
+                # the shard backend's received buffer for this hop is
+                # the SAME bytes (post-ppermute, receiver-major; the
+                # out_spec concatenates workers along the row axis)
+                sp, ss = ws[e * D + d]
+                sp_i = np.asarray(sp).reshape(q, -1, sp.shape[-1])[i]
+                np.testing.assert_array_equal(sp_i,
+                                              np.asarray(payload[j, d]))
+                ss_i = None
+                if scales is not None:
+                    ss_i = np.asarray(ss).reshape(q, -1, ss.shape[-1])[i]
+                    np.testing.assert_array_equal(ss_i,
+                                                  np.asarray(scales[j, d]))
+                meas_s[i, j] += hop_bytes(sp_i, ss_i, j, d)
+    np.testing.assert_array_equal(meas_e, np.ceil(pair_t / 8.0))
+    np.testing.assert_array_equal(meas_s, np.ceil(pair_t / 8.0))
+    print(f"w={w} OK pair_bytes_total={meas_e.sum():.0f}")
+
+# packed wire: the all-gather ledger charges halo demand, not the padded
+# buffer, so conservation is per transported ROW: k·(128·w + 32) bits
+# land in k·16·w payload bytes + k fp32 scales exactly (byte-aligned)
+w = spec["packed_width"]
+wm = np.full((q, q), float(w), np.float32)
+np.fill_diagonal(wm, 32.0)
+meta = DistMeta.build(pg, params, wire="packed")
+kb = dict(_packed_pair_k_for(meta, rm))
+wp = []
+agg_p = _make_aggregate_emulated(
+    graph, meta, pol, None, jnp.ones(()), key, packed_k=kb,
+    rate_map=jnp.asarray(rm), width_map=jnp.asarray(wm),
+    store_w=_packed_store_w(meta, wm), wire_out=wp)
+gnn_forward(params, cfg, graph["features"], agg_p)
+assert len(wp) == layers
+for payload, scales in wp:
+    assert payload.dtype == jnp.uint8 and scales is not None
+    per_row = payload[0, 0].nbytes + scales[0, 0].nbytes
+    assert per_row == math.ceil(k * (LANE * w + 32.0) / 8.0), \
+        (w, per_row, k)
+print("CONSERVATION_OK")
+"""
+
+
+def run_wire_conservation(q: int, widths=(2, 4, 8, 32), f: int = 256,
+                          layers: int = 2, n: int = 256, rate: float = 2.0,
+                          packed_width: int = 4,
+                          timeout: int = 1200) -> str:
+    """Ledger-vs-buffer conservation (the tentpole's closing check): on
+    BOTH backends, every p2p hop's physically transported array —
+    bit-packed uint8 payload + fp32 scales under ``store_w``, fp32 rows
+    at width 32 — has ``nbytes == ceil(per-pair ledger transport bits /
+    8)``, hop by hop and per-pair in total, and the two backends ship
+    byte-identical buffers.  The packed wire conforms per transported
+    row (its ledger charges halo demand, not the padded all-gather)."""
+    spec = {"q": q, "f": f, "layers": layers, "n": n, "rate": rate,
+            "widths": list(widths), "packed_width": packed_width}
+    return _run(CONSERVE_SCRIPT, spec, q, "CONSERVATION_OK",
+                timeout=timeout)
+
 
 TRAIN_SCRIPT = r"""
 import json, sys
@@ -401,14 +572,26 @@ def run_forward_parity(q: int, cases: list[dict], f: int = 512,
     through the JSON spec.  ``shards=True`` builds the subprocess's graph
     from disk-backed shards (``build_setup(shards=True)``) instead of the
     in-memory partitioner — the Q ≥ 16 scale-conformance route."""
+    def _widths(c):
+        wmode = c.get("width_map")
+        if wmode is None:
+            return None
+        if wmode.startswith("w"):
+            # uniform off-diagonal width, e.g. "w2"/"w4": pins the byte
+            # wire at exactly that static storage width on both backends
+            wm = np.full((q, q), float(wmode[1:]), np.float32)
+            np.fill_diagonal(wm, 32.0)
+            return wm.tolist()
+        draw = sub32_width_map if wmode.startswith("sub32") \
+            else mixed_width_map
+        return draw(q, c.get("seed", 0),
+                    layers if wmode.endswith("layer") else None).tolist()
+
     cases = [dict(c,
                   rates=None if c["map"] is None else mixed_map(
                       q, c.get("seed", 0),
                       layers if c["map"] == "layer" else None).tolist(),
-                  widths=None if c.get("width_map") is None
-                  else mixed_width_map(
-                      q, c.get("seed", 0),
-                      layers if c["width_map"] == "layer" else None).tolist())
+                  widths=_widths(c))
         for c in cases]
     spec = {"q": q, "f": f, "layers": layers, "n": n, "atol": atol,
             "cases": cases, "shards": shards}

@@ -31,6 +31,16 @@ def _matrix(q: int) -> list[dict]:
              "width_map": "pair", "seed": 20 + q},
             {"wire": wire, "policy": "fixed:4", "map": "layer",
              "width_map": "layer", "seed": 30 + q},
+            # bit-packed byte wire (DESIGN.md §3.8): all-sub-32 width
+            # maps flip store_w > 0 on both backends, so the uint8
+            # payload + scales path conforms too — mixed {2, 4, 8}
+            # draws (store_w 8) and uniform w=2 (4 lanes per byte)
+            {"wire": wire, "policy": "fixed:4", "map": "pair",
+             "width_map": "sub32", "seed": 60 + q},
+            {"wire": wire, "policy": "fixed:4", "map": "layer",
+             "width_map": "sub32_layer", "seed": 70 + q},
+            {"wire": wire, "policy": "fixed:4", "map": "pair",
+             "width_map": "w2", "seed": 80 + q},
         ]
     if q >= 2:
         # fault-channel conformance (ISSUE 8): seeded FaultSchedule drops
@@ -66,6 +76,8 @@ _Q16_CASES = [
      "width_map": "layer", "seed": 46},
     {"wire": "packed", "policy": "fixed:4", "map": "pair",
      "width_map": "pair", "seed": 36},
+    {"wire": "p2p", "policy": "fixed:4", "map": "pair",
+     "width_map": "sub32", "seed": 56},
     {"wire": "p2p", "policy": "fixed:4", "map": "pair", "seed": 26,
      "fault": 99},
 ]

@@ -318,3 +318,59 @@ def test_stochastic_rounding_unbiased(width, seed):
     assert np.all(np.abs(mean - xb) <= 6.0 * sigma + 1e-7)
     pooled = ((mean - xb) / scale[..., None]).mean()
     assert abs(pooled) <= 6.0 * 0.5 / np.sqrt(m * n * f)
+
+
+# ---------------------------------------------------------------------------
+# sub-byte bit-pack codec round trip (DESIGN.md §3.8 byte layout)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(width=st.sampled_from([2, 4, 8]), n=st.integers(1, 6),
+       m=st.integers(1, 300), seed=st.integers(0, 2 ** 16))
+def test_bitpack_roundtrip_reference(width, n, m, seed):
+    """``unpack_bits(pack_bits(x, w), w, m) == x`` over the FULL signed
+    field range for every width, including tail lane counts ``m`` that
+    don't divide ``8/w`` (zero-padded last byte), and the byte layout is
+    the documented little-endian grouping."""
+    from repro.kernels.ops import pack_bits, unpack_bits
+
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (width - 1)), 2 ** (width - 1) - 1
+    x = rng.integers(lo, hi + 1, size=(n, m)).astype(np.int8)
+    packed = np.asarray(pack_bits(jnp.asarray(x), width))
+    vpb = 8 // width
+    assert packed.dtype == np.uint8
+    assert packed.shape == (n, -(-m // vpb))
+    un = np.asarray(unpack_bits(jnp.asarray(packed), width, m))
+    np.testing.assert_array_equal(un, x)
+    # documented layout: lane i -> byte i//vpb, bit offset (i%vpb)*w,
+    # low-w bits of the two's complement
+    i = int(rng.integers(0, m))
+    field = (int(packed[0, i // vpb]) >> ((i % vpb) * width)) \
+        & (2 ** width - 1)
+    assert field == int(x[0, i]) & (2 ** width - 1)
+    # tail lanes beyond m decode to the zero pad
+    full = np.asarray(unpack_bits(jnp.asarray(packed), width))
+    assert full.shape[-1] == packed.shape[-1] * vpb
+    assert not full[:, m:].any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(width=st.sampled_from([2, 4, 8]), n=st.integers(1, 8),
+       k=st.integers(1, 4), seed=st.integers(0, 2 ** 16))
+def test_bitpack_roundtrip_kernel_helpers(width, n, k, seed):
+    """The in-kernel strided-slice pack (`_bitpack_block`) is bitwise the
+    reference grouping, and `_bitunpack_block` inverts it — the fused
+    ``varco_pack_quant`` / ``varco_unpack_quant`` codec path."""
+    from repro.kernels.ref import pack_bits_reference
+    from repro.kernels.varco_pack import _bitpack_block, _bitunpack_block
+
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (width - 1)), 2 ** (width - 1) - 1
+    x = rng.integers(lo, hi + 1, size=(n, k * LANE)).astype(np.int8)
+    packed = np.asarray(_bitpack_block(jnp.asarray(x), width))
+    np.testing.assert_array_equal(
+        packed, np.asarray(pack_bits_reference(jnp.asarray(x), width)))
+    un = np.asarray(_bitunpack_block(jnp.asarray(packed), width))
+    np.testing.assert_array_equal(un, x)

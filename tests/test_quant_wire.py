@@ -71,22 +71,34 @@ def _agg(graph, meta, rm, key, wm=None, resid=None, resid_out=None):
 @pytest.mark.parametrize("width", WIDTHS)
 def test_pack_quant_matches_reference(width):
     """The fused Pallas kernel (interpret mode) and the jnp oracle agree
-    bit-for-bit on both the int8 payload and the fp32 scales, and the
-    decode reproduces ``quant_dequant`` of the packed payload exactly."""
+    bit-for-bit on both the bit-packed uint8 payload and the fp32
+    scales, and the decode reproduces ``quant_dequant`` of the packed
+    payload exactly."""
     key = jax.random.key(3)
     x = jax.random.normal(key, (24, F), jnp.float32) * \
         10.0 ** jax.random.uniform(jax.random.fold_in(key, 1), (24, 1),
                                    minval=-2.0, maxval=2.0)
     kept, inv = block_mask_indices(key, NB, 2.0)
+    k = int(kept.shape[0])
     packed_k, scales_k = pack_quant(x, kept, width=width, interpret=True)
     packed_r, scales_r = ref.pack_quant_reference(x, kept, width)
-    assert packed_k.dtype == jnp.int8 and scales_k.dtype == jnp.float32
+    # true sub-byte storage: uint8 bytes, 8/width lanes per byte — the
+    # buffer IS the ledger's LANE·width payload bits per kept block
+    assert packed_k.dtype == jnp.uint8 and scales_k.dtype == jnp.float32
+    assert packed_k.shape == (24, k * LANE * width // 8)
     np.testing.assert_array_equal(np.asarray(packed_k), np.asarray(packed_r))
     # the kernel folds 1/qmax into a multiply — scales match to fp32 ulp
     np.testing.assert_allclose(np.asarray(scales_k), np.asarray(scales_r),
                                rtol=1e-6)
+    # w == 8 is bitwise the former int8-lane storage
+    if width == 8:
+        levels, _ = ref.quant_levels_reference(
+            ref.pack_reference(x, kept), 8)
+        np.testing.assert_array_equal(
+            np.asarray(packed_k),
+            np.asarray(jax.lax.bitcast_convert_type(levels, jnp.uint8)))
     # decode == quant_dequant of the packed fp32 payload (same scale rule)
-    dq = ref.quant_dequant_reference(packed_r, scales_r)
+    dq = ref.unpack_quant_reference(packed_r, scales_r, width)
     from repro.kernels.ops import wire_pack
     payload = wire_pack(x, kept, inv)
     np.testing.assert_allclose(np.asarray(dq),
@@ -418,6 +430,26 @@ def test_width_candidates_and_cost():
 # backend parity at mixed rate × width (subprocess; the fast cases —
 # the full sweep lives in test_parity_matrix)
 # ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# ledger-vs-buffer conservation (the tentpole's closing check)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_wire_conservation_ledger_matches_buffers():
+    """On BOTH backends, at w ∈ {2, 4, 8, 32}: every p2p hop's
+    transported array (bit-packed uint8 payload + fp32 scales under
+    ``store_w``; fp32 rows at 32) has ``nbytes == ceil(per-pair ledger
+    transport bits / 8)`` — hop by hop, per-pair in total, and with
+    byte-identical buffers across backends.  The packed wire conforms
+    per transported row (its ledger charges halo demand, not the padded
+    all-gather buffer)."""
+    from parity import run_wire_conservation
+
+    out = run_wire_conservation(4)
+    assert out.count(" OK ") == 4, out
 
 
 @pytest.mark.slow

@@ -243,6 +243,25 @@ def test_microbatcher_deadline_and_fill():
         mb.submit((1, 2, 3))
 
 
+def test_microbatcher_skewed_clock_tracks_true_minimum():
+    # a submit stamped EARLIER than the queue's oldest (replayed /
+    # skewed tenant clocks) must pull the deadline back; the old code
+    # kept the first arrival and fired late or never
+    from repro.serve import MicroBatcher
+
+    owner = np.array([0, 0, 1, 1], np.int64)
+    mb = MicroBatcher(owner, window_s=0.010, max_batch=8)
+    mb.submit(0, "a", now=5.000)
+    mb.submit(2, "b", now=4.995)         # earlier stamp, later submit
+    assert mb._oldest == 4.995
+    assert mb.ready(now=5.006)           # window past the TRUE oldest
+    mb.drain()
+    # drain resets the minimum; a fresh queue starts over
+    mb.submit(1, "a", now=7.0)
+    assert mb._oldest == 7.0
+    assert not mb.ready(now=7.005)
+
+
 def test_engine_flush_matches_direct_serve(engine):
     engine.refresh(force=True)
     engine.submit(3, "a", now=0.0)
@@ -319,6 +338,12 @@ def test_qos_controller_mass_weighted_waterfill(setup):
     state_b = ctl_b.observe(state_b, {"transport_bits": 1.0})
     np.testing.assert_array_equal(np.asarray(state_b["mass"]),
                                   mass_before)
+    # non-dict observations must fail with the contract, not a bare
+    # TypeError from obs["transport_bits"] (the old isinstance guard
+    # shielded only the query_mass lookup)
+    for bad in (1.0, np.float32(3.0), [("transport_bits", 1.0)], None):
+        with pytest.raises(TypeError, match="metrics dict"):
+            ctl_b.observe(state_b, bad)
 
 
 def test_qos_rejects_per_layer(setup):
